@@ -1,0 +1,71 @@
+"""Shared benchmark infrastructure.
+
+Defines the paper's model zoo (§2: Qwen-2.5 0.5–14B, Mistral-7B,
+LLaMA-3.1-8B/70B) as ModelConfigs, plus CSV/reporting helpers. Energy
+numbers come from the phase-aware analytic model on H100 constants
+(the paper's measurement platform); latency micro-measurements for the
+real-compute benches run reduced models on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+from repro.configs.base import ModelConfig
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..",
+                           "experiments", "bench")
+
+
+def _dense(name, L, d, H, kv, ff, V=151936) -> ModelConfig:
+    return ModelConfig(name=name, family="dense", num_layers=L, d_model=d,
+                       num_heads=H, num_kv_heads=kv, d_ff=ff, vocab_size=V,
+                       source="paper §2 benchmark zoo")
+
+
+# the paper's §2 model selection
+PAPER_MODELS: Dict[str, ModelConfig] = {
+    "qwen2.5-0.5b": _dense("qwen2.5-0.5b", 24, 896, 14, 2, 4864),
+    "qwen2.5-1.5b": _dense("qwen2.5-1.5b", 28, 1536, 12, 2, 8960),
+    "qwen2.5-3b": _dense("qwen2.5-3b", 36, 2048, 16, 2, 11008),
+    "qwen2.5-7b": _dense("qwen2.5-7b", 28, 3584, 28, 4, 18944),
+    "qwen2.5-14b": _dense("qwen2.5-14b", 48, 5120, 40, 8, 13824),
+    "mistral-7b": _dense("mistral-7b", 32, 4096, 32, 8, 14336, 32768),
+    "llama-3.1-8b": _dense("llama-3.1-8b", 32, 4096, 32, 8, 14336,
+                           128256),
+    "llama-3.1-70b": _dense("llama-3.1-70b", 80, 8192, 64, 8, 28672,
+                            128256),
+}
+
+PAPER_PROMPT_MEAN = 1200        # §3.1: s_mean ~ 1200
+PAPER_OUTPUT_MEAN = 80          # §2: outputs 10-300, chat-like
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def save_results(bench: str, rows: List[Dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, bench + ".json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def timeit(fn: Callable, n: int = 3) -> float:
+    """Median wall-time of fn() in microseconds."""
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]

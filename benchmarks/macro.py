@@ -1,0 +1,56 @@
+"""Paper §6 macro impact estimate: serving LLaMA-8B at 1M requests/day.
+
+naive (fp32, no batching, eager)  vs  optimized (bf16 + continuous
+batching + best fixed arrival spacing).
+Claim: >= 20x total-energy reduction on the §2 workload (the paper's
+>100x headline requires the short-prompt regime — the per-request
+prefill-compute floor analysis in EXPERIMENTS.md §Validation caps the
+§2-workload ratio near ~30x).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import PAPER_MODELS, Row, save_results
+from repro.serving import ServeEngine, Request, fixed_arrivals
+from repro.training.data import RequestDistribution
+
+N_REQ = 300
+REQ_PER_DAY = 1e6
+
+
+def _requests(n, arrivals, seed=0):
+    dist = RequestDistribution(seed=seed)
+    out = []
+    for i in range(n):
+        s = dist.sample()
+        out.append(Request(req_id=i, prompt=None, prompt_len=s.prompt_len,
+                           max_new_tokens=s.output_len,
+                           arrival_time=arrivals[i]))
+    return out
+
+
+def run() -> List[Row]:
+    cfg = PAPER_MODELS["llama-3.1-8b"]
+    naive = ServeEngine(cfg, fmt="float32", mode="sequential").run(
+        _requests(N_REQ, [0.0] * N_REQ))
+    opt = ServeEngine(cfg, fmt="bfloat16", mode="continuous",
+                      max_batch=64).run(
+        _requests(N_REQ, fixed_arrivals(N_REQ, 0.01)))
+    naive_kwh_day = (naive.mean_energy_per_request_wh * REQ_PER_DAY
+                     / 1e3)
+    opt_kwh_day = opt.mean_energy_per_request_wh * REQ_PER_DAY / 1e3
+    reduction = naive_kwh_day / opt_kwh_day
+    rows = [
+        Row("macro/naive_fp32_kwh_per_day", 0.0,
+            f"{naive_kwh_day:.1f} kWh/day (paper: 1.2e2)"),
+        Row("macro/optimized_kwh_per_day", 0.0,
+            f"{opt_kwh_day:.2f} kWh/day (paper: 1.1e0)"),
+        Row("claim/macro_reduction_ge_20x", 0.0,
+            f"value={reduction:.1f} pass={reduction >= 20}"),
+    ]
+    save_results("macro", [{"naive_kwh_day": naive_kwh_day,
+                            "opt_kwh_day": opt_kwh_day,
+                            "reduction": reduction,
+                            "pass": bool(reduction >= 20)}])
+    return rows

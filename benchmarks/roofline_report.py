@@ -1,0 +1,54 @@
+"""Roofline report: renders the 40-pair baseline table from the
+dry-run JSON artifacts (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row, save_results
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_results(mesh: str = "pod16x16") -> List[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and r.get("ok") \
+                and r.get("fmt") == "bfloat16" and not r.get("kv_quant"):
+            out.append(r)
+    return out
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    table = []
+    for r in load_results():
+        rf = r["roofline"]
+        step = max(rf["t_compute_s"], rf["t_memory_s"]) \
+            + rf["t_collective_s"]
+        table.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute_s": rf["t_compute_s"],
+            "t_memory_s": rf["t_memory_s"],
+            "t_collective_s": rf["t_collective_s"],
+            "bottleneck": rf["bottleneck"],
+            "useful_flop_ratio": rf["useful_flop_ratio"],
+            "roofline_fraction": rf["roofline_fraction"],
+            "step_s": step,
+        })
+        rows.append(Row(
+            name=f"roofline/{r['arch']}/{r['shape']}",
+            us_per_call=step * 1e6,
+            derived=(f"bound={rf['bottleneck']} "
+                     f"frac={rf['roofline_fraction']:.3f} "
+                     f"useful={rf['useful_flop_ratio']:.2f}")))
+    if not table:
+        rows.append(Row("roofline/missing", 0.0,
+                        "run: python -m repro.launch.dryrun first"))
+    save_results("roofline", table)
+    return rows

@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    fig 1a/1b + fig 4/5  -> benchmarks.precision
+    fig 2a/2b + fig 6/7  -> benchmarks.batching
+    fig 3a/3b/3c         -> benchmarks.serving
+    §6 macro estimate    -> benchmarks.macro
+    roofline (ours, §g)  -> benchmarks.roofline_report
+    CPU wall-time micro  -> benchmarks.microbench
+
+Prints ``name,us_per_call,derived`` CSV. Claim-check rows are named
+``claim/...`` with pass/fail in the derived column; run.py exits
+non-zero if any claim fails.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import precision, batching, serving, macro, \
+        roofline_report, microbench
+    benches = [("precision", precision.run),
+               ("batching", batching.run),
+               ("serving", serving.run),
+               ("macro", macro.run),
+               ("roofline", roofline_report.run),
+               ("microbench", microbench.run)]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        rows = fn()
+        for r in rows:
+            print(r.csv(), flush=True)
+            if r.name.startswith("claim/") and "pass=False" in r.derived:
+                failed.append(r.name)
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              flush=True)
+    if failed:
+        print(f"# FAILED claims: {failed}", flush=True)
+        sys.exit(1)
+    print("# all claims pass", flush=True)
+
+
+if __name__ == "__main__":
+    main()

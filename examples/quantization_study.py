@@ -1,0 +1,55 @@
+"""Paper §3 in miniature: post-training-quantize a real model and
+compare (a) numerical drift of the logits, (b) modeled phase energy —
+including the beyond-paper fused-dequant TPU path.
+
+    PYTHONPATH=src python examples/quantization_study.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (PhaseProfiler, make_policy, H100_SXM, TPU_V5E,
+                        FusedDequantEnergyModel)
+from repro.models import build_model
+
+
+def main() -> None:
+    cfg = get_config("minitron-8b").reduced()
+    m32 = build_model(cfg, fmt="float32")
+    params = m32.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              cfg.vocab_size)
+    h, _ = m32.forward_train(params, {"tokens": toks})
+    ref = m32.logits(params, h[:, -1])
+    print(f"{cfg.name}: logits drift after PTQ (real computation)")
+    for fmt in ("bfloat16", "int8", "nf4"):
+        mq = build_model(cfg, fmt=fmt)
+        qp = mq.quantize(params)
+        hq, _ = mq.forward_train(qp, {"tokens": toks})
+        lq = mq.logits(qp, hq[:, -1])
+        rel = float(jnp.linalg.norm(lq - ref) / jnp.linalg.norm(ref))
+        same = float(jnp.mean((jnp.argmax(lq, -1)
+                               == jnp.argmax(ref, -1)).astype(
+                                   jnp.float32)))
+        print(f"  {fmt:9s} rel_err={rel:.4f}  argmax_match={same:.2f}")
+
+    full = get_config("minitron-8b")
+    print("\nmodeled decode energy/token, 8B class (paper Fig 1b):")
+    for fmt in ("float32", "bfloat16", "int8", "nf4"):
+        prof = PhaseProfiler(full, H100_SXM, make_policy(fmt))
+        e = prof.profile_decode_step(1, 1200).energy_j
+        print(f"  H100 eager {fmt:9s} {e:6.2f} J/token")
+    for fmt in ("bfloat16", "int8", "nf4"):
+        prof = PhaseProfiler(full, TPU_V5E, make_policy(fmt),
+                             energy_model_cls=FusedDequantEnergyModel,
+                             stack="fused")
+        e = prof.profile_decode_step(1, 1200).energy_j
+        print(f"  v5e fused  {fmt:9s} {e:6.3f} J/token  "
+              f"(Pallas in-VMEM dequant)")
+    print("\nthe GPU eager path reproduces the paper's int8 decode "
+          "penalty; the fused TPU path removes it (weights stream at "
+          "half the bytes, no extra launches).")
+
+
+if __name__ == "__main__":
+    main()

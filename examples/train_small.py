@@ -1,0 +1,36 @@
+"""Train a small LM for a few hundred steps on the synthetic pipeline
+(the training-substrate driver; the serving driver is
+examples/serve_batched.py).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.training import train, AdamWConfig
+from repro.training.checkpoint import save_checkpoint
+from repro.training.data import SyntheticLM, DataConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="granite-moe-1b-a400m")
+    ap.add_argument("--out", default="/tmp/repro_ck.npz")
+    args = ap.parse_args()
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg, fmt="float32")
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params "
+          f"({cfg.family})")
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  batch_size=8))
+    state = train(model, data.batches(), n_steps=args.steps,
+                  log_every=20,
+                  opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=20))
+    save_checkpoint(args.out, state.params, state.opt_state, state.step)
+    print(f"checkpoint saved to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

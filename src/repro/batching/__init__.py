@@ -1,0 +1,3 @@
+from repro.batching.static import pad_batch, bucket_length, StaticBatcher  # noqa: F401
+from repro.batching.kvcache import PagedKVAllocator, PageTable  # noqa: F401
+from repro.batching.continuous import ContinuousBatcher, SlotState  # noqa: F401

@@ -1,0 +1,119 @@
+"""Continuous (token-level) batching scheduler — TGI/Orca-style.
+
+Slots are the device-side decode batch; requests join at token
+boundaries after their prefill and leave the moment they finish
+(completed sequences are dropped automatically — the paper's §4
+"output tokens are always effective").
+
+Scheduling policy per engine iteration:
+  1. admit arrivals into the waiting queue,
+  2. if waiting requests exist, free slots exist, and KV pages fit:
+     run a (possibly batched, bucketed) PREFILL for up to
+     ``max_prefill_batch`` requests,
+  3. else if any slot is live: run ONE DECODE step for all live slots,
+  4. else: idle until the next arrival.
+
+This is deliberately the same policy TGI's router implements (waiting
+queue + running batch, prefill preemption), so the arrival-shaping
+results in §5 transfer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Dict, List, Optional
+
+import numpy as np
+
+from repro.batching.kvcache import PagedKVAllocator
+
+if TYPE_CHECKING:   # avoid a batching <-> serving import cycle
+    from repro.serving.requests import Request
+
+
+@dataclasses.dataclass
+class SlotState:
+    request: Optional["Request"] = None
+
+    @property
+    def live(self) -> bool:
+        return self.request is not None
+
+
+class ContinuousBatcher:
+    def __init__(self, max_batch: int, *, kv_pages: int = 1 << 14,
+                 page_size: int = 128, max_prefill_batch: int = 8,
+                 bucket_prefill: bool = True):
+        self.slots = [SlotState() for _ in range(max_batch)]
+        self.waiting: List[Request] = []
+        self.kv = PagedKVAllocator(kv_pages, page_size)
+        self.max_prefill_batch = max_prefill_batch
+        self.bucket_prefill = bucket_prefill
+
+    # ------------------------------------------------------------------
+    def admit(self, req: "Request") -> None:
+        self.waiting.append(req)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.live]
+
+    def live_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.live]
+
+    @property
+    def n_live(self) -> int:
+        return sum(1 for s in self.slots if s.live)
+
+    # ------------------------------------------------------------------
+    def schedule_prefill(self) -> List[tuple]:
+        """Pick (slot, request) pairs to prefill this iteration.
+
+        Beyond-paper optimization (EXPERIMENTS.md §Perf): after taking
+        the FIFO head, subsequent picks are restricted to requests in
+        the head's *length bucket*, so one prefill batch pads to the
+        bucket instead of to the global max — the paper's §4 padding
+        waste, addressed at the scheduler level ("bucketing", §9).
+        """
+        from repro.batching.static import bucket_length
+        picks = []
+        free = self.free_slots()
+        if not (self.waiting and free):
+            return picks
+        head = self.waiting[0]
+        if not self.kv.can_allocate(head.prompt_len
+                                    + head.max_new_tokens):
+            return picks        # head-of-line blocking on memory (TGI)
+        head_bucket = bucket_length(head.prompt_len) \
+            if self.bucket_prefill else None
+        i = 0
+        while (i < len(self.waiting) and free
+               and len(picks) < self.max_prefill_batch):
+            req = self.waiting[i]
+            if (head_bucket is not None and picks
+                    and bucket_length(req.prompt_len) != head_bucket):
+                i += 1
+                continue
+            if not self.kv.can_allocate(req.prompt_len
+                                        + req.max_new_tokens):
+                break
+            self.waiting.pop(i)
+            slot = free.pop(0)
+            self.kv.allocate(req.req_id, req.prompt_len)
+            self.slots[slot].request = req
+            picks.append((slot, req))
+        return picks
+
+    def step_decode_bookkeeping(self) -> List[int]:
+        """Extend KV for every live slot by one token; returns live slots."""
+        live = self.live_slots()
+        for i in live:
+            self.kv.extend(self.slots[i].request.req_id, 1)
+        return live
+
+    def finish(self, slot: int) -> "Request":
+        req = self.slots[slot].request
+        self.kv.release(req.req_id)
+        self.slots[slot].request = None
+        return req
+
+    def mean_live_batch(self) -> float:
+        return float(self.n_live)

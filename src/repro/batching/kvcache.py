@@ -1,0 +1,98 @@
+"""Paged KV-cache management (vLLM-style, TPU-adapted).
+
+The allocator is host-side bookkeeping: sequences own chains of
+fixed-size pages; the device-side cache is a (n_pages, page_size, kv,
+hd) pool indexed through a page table. On TPU, "paging" is an explicit
+gather through the page table (our ``paged_attention`` kernel's
+BlockSpec index_map), not virtual memory.
+
+The serving engine uses this for admission control (a request is only
+scheduled when its worst-case page demand fits) and to measure memory
+fragmentation — which feeds the energy model's batch-size ceiling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PageTable:
+    """Per-sequence page chain. ``pages[i]`` backs tokens
+    [i*page_size, (i+1)*page_size)."""
+    seq_id: int
+    pages: List[int]
+    n_tokens: int = 0
+
+
+class PagedKVAllocator:
+    def __init__(self, n_pages: int, page_size: int = 128):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.free: List[int] = list(range(n_pages - 1, -1, -1))
+        self.tables: Dict[int, PageTable] = {}
+
+    # ------------------------------------------------------------------
+    def pages_needed(self, n_tokens: int) -> int:
+        return (n_tokens + self.page_size - 1) // self.page_size
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return len(self.free) >= self.pages_needed(n_tokens)
+
+    def allocate(self, seq_id: int, n_tokens: int) -> PageTable:
+        if seq_id in self.tables:
+            raise KeyError(f"seq {seq_id} already allocated")
+        need = self.pages_needed(n_tokens)
+        if need > len(self.free):
+            raise MemoryError(
+                f"need {need} pages, {len(self.free)} free")
+        pages = [self.free.pop() for _ in range(need)]
+        t = PageTable(seq_id=seq_id, pages=pages, n_tokens=n_tokens)
+        self.tables[seq_id] = t
+        return t
+
+    def extend(self, seq_id: int, n_new_tokens: int = 1) -> PageTable:
+        t = self.tables[seq_id]
+        new_total = t.n_tokens + n_new_tokens
+        need = self.pages_needed(new_total) - len(t.pages)
+        if need > len(self.free):
+            raise MemoryError("out of KV pages")
+        for _ in range(need):
+            t.pages.append(self.free.pop())
+        t.n_tokens = new_total
+        return t
+
+    def release(self, seq_id: int) -> None:
+        t = self.tables.pop(seq_id)
+        self.free.extend(reversed(t.pages))
+
+    # ------------------------------------------------------------------
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self.free)
+
+    def utilization(self) -> float:
+        """Fraction of *allocated* slots actually holding tokens —
+        1 - internal fragmentation."""
+        used = self.used_pages
+        if used == 0:
+            return 1.0
+        toks = sum(t.n_tokens for t in self.tables.values())
+        return toks / (used * self.page_size)
+
+    def page_table_array(self, seq_id: int, max_pages: int) -> np.ndarray:
+        """Fixed-width int32 page table row for the device kernel."""
+        t = self.tables[seq_id]
+        row = np.full((max_pages,), -1, np.int32)
+        row[:len(t.pages)] = t.pages
+        return row
+
+    def check_invariants(self) -> None:
+        """No page double-owned, free+owned == all (property tests)."""
+        owned = [p for t in self.tables.values() for p in t.pages]
+        assert len(owned) == len(set(owned)), "page double-allocated"
+        all_pages = set(owned) | set(self.free)
+        assert len(self.free) == len(set(self.free)), "free-list dup"
+        assert all_pages == set(range(self.n_pages)), "page leak"

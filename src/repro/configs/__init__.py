@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeConfig, INPUT_SHAPES, get_config, list_archs,
+    get_shape,
+)

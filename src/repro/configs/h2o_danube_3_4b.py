@@ -1,0 +1,16 @@
+"""H2O-Danube3-4B: llama+mistral mix with sliding-window attention
+[arXiv:2401.16818]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    num_layers=24,
+    d_model=3840,
+    num_heads=32,
+    num_kv_heads=8,            # GQA kv=8
+    d_ff=10240,
+    vocab_size=32000,
+    sliding_window=4096,       # native SWA -> long_500k runs natively
+    source="arXiv:2401.16818",
+)

@@ -1,0 +1,22 @@
+"""SeamlessM4T-large-v2 encoder-decoder backbone [arXiv:2308.11596].
+
+Audio frontend (mel-spectrogram + conv feature extractor) is a STUB per
+the assignment carve-out: ``input_specs()`` provides precomputed frame
+embeddings (batch, seq_len // enc_frames_ratio, d_model) for the encoder;
+we implement the transformer encoder + autoregressive text decoder.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    num_layers=24,             # decoder layers
+    enc_layers=24,             # encoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    enc_frames_ratio=4,
+    source="arXiv:2308.11596",
+)

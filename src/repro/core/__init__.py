@@ -1,0 +1,13 @@
+"""Core: the paper's contribution — phase-aware energy modeling, precision
+policy, roofline extraction, and the profiling harness."""
+from repro.core.precision import (  # noqa: F401
+    PrecisionPolicy, make_policy, ALL_FORMATS, QUANTIZED_FORMATS,
+    FLOAT32, FLOAT16, BFLOAT16, INT8, NF4,
+)
+from repro.core.hardware import DeviceSpec, H100_SXM, TPU_V5E, get_device  # noqa: F401
+from repro.core.energy import (  # noqa: F401
+    EnergyModel, FusedDequantEnergyModel, EnergyReport, PhaseWorkload,
+    combine, idle_energy,
+)
+from repro.core.profiler import PhaseProfiler, GenerateProfile  # noqa: F401
+from repro.core.roofline import RooflineTerms, parse_collective_bytes, terms_from_compiled  # noqa: F401

@@ -1,0 +1,208 @@
+"""Phase-aware analytic energy model — the paper's core methodology.
+
+The paper measures (NVML/CodeCarbon) that LLM-inference energy is governed
+by *which regime a phase is in*, not by headline format width:
+
+* compute-bound phases (large-model prefill) ride the matrix-unit fast
+  path: lower precision gives real energy wins (up to 4x fp32 -> 16-bit,
+  at up to 10x latency gain — Tensor Cores draw more power, limiting the
+  energy saving relative to the speedup);
+* memory-bound phases (decode) are dominated by weight/KV traffic AND by
+  idle power burned in dispatch gaps between small fragmented kernels —
+  there, int8/int4 dequant overhead makes energy *worse* (2–3x fp32);
+* batching amortizes both weight traffic and launch overhead, so energy
+  per output token falls ~logarithmically with batch size.
+
+This module reproduces those mechanisms analytically so they can be
+evaluated on CPU (no NVML) and projected onto the TPU-v5e target:
+
+    t_compute    = FLOPs / peak(format)
+    t_memory     = effective_bytes / HBM_bw
+    t_collective = collective_bytes / link_bw
+    t_busy       = max(t_compute, t_memory) + t_collective
+    t_idle       = n_kernel_launches * launch_overhead(stack)
+    P_busy       = power(regime, format)         # regime-dependent
+    E            = P_busy * t_busy + P_idle * t_idle
+
+``effective_bytes`` folds in the paper's §3.2 observations: dequantization
+re-materializes 16-bit weights (extra traffic), and sub-byte formats do not
+reduce bandwidth proportionally because transactions have a fixed minimum
+width (GPU 32–64 B coalescing; TPU 512 B tile lines).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.hardware import DeviceSpec
+from repro.core.precision import PrecisionPolicy, INT8, NF4
+
+# Bandwidth efficiency of reading packed quantized weights relative to a
+# contiguous 16-bit stream (paper: "4-bit formats do not reduce memory
+# bandwidth proportionally ... combined with misalignment and suboptimal
+# coalescing").
+_QUANT_READ_EFFICIENCY = {INT8: 0.90, NF4: 0.60}
+# Extra kernel launches a quantized matmul incurs on the bitsandbytes-style
+# path. int8 (LLM.int8): quantize activations, outlier extract, int8 GEMM
+# epilogue dequant, fp16 outlier GEMM, merge, scale bookkeeping -> ~6.
+# nf4: bitsandbytes ships a *fused* 4-bit dequant-gemv for inference, so
+# only ~1 extra launch (absmax state load) — which is why the paper finds
+# int4 "performs similarly to float32" while int8 is 2-3x worse.
+_DEQUANT_LAUNCHES_PER_MATMUL = {INT8: 6, NF4: 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseWorkload:
+    """Everything the energy model needs to know about one executed phase.
+
+    Produced either analytically (:mod:`repro.core.workload`) or from a
+    compiled artifact (:mod:`repro.core.roofline`).
+    """
+
+    phase: str                 # "prefill" | "decode" | "train"
+    flops: float               # useful matmul FLOPs
+    weight_bytes_16: float     # weight traffic if stored in 16-bit
+    act_bytes: float           # activation + KV-cache traffic
+    n_matmuls: int             # weight matmuls executed (dequant sites)
+    n_kernel_launches: int     # kernels dispatched (pre-quantization)
+    collective_bytes: float = 0.0
+    n_steps: int = 1           # autoregressive steps folded into this phase
+    stack: str = "eager"       # "eager" (transformers) | "fused" (TGI-like)
+
+    def scaled(self, k: float) -> "PhaseWorkload":
+        return dataclasses.replace(
+            self, flops=self.flops * k,
+            weight_bytes_16=self.weight_bytes_16 * k,
+            act_bytes=self.act_bytes * k, n_matmuls=int(self.n_matmuls * k),
+            n_kernel_launches=int(self.n_kernel_launches * k),
+            collective_bytes=self.collective_bytes * k)
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyReport:
+    phase: str
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    t_busy: float
+    t_idle: float
+    latency: float             # t_busy + t_idle
+    energy_j: float
+    bound: str                 # "compute" | "memory" | "collective" | "idle"
+
+    @property
+    def energy_wh(self) -> float:
+        return self.energy_j / 3600.0
+
+    def per(self, n: float) -> "EnergyReport":
+        """Normalize (e.g. per token, per request)."""
+        if n <= 0:
+            raise ValueError("normalizer must be positive")
+        return dataclasses.replace(
+            self, t_compute=self.t_compute / n, t_memory=self.t_memory / n,
+            t_collective=self.t_collective / n, t_busy=self.t_busy / n,
+            t_idle=self.t_idle / n, latency=self.latency / n,
+            energy_j=self.energy_j / n)
+
+
+def _dominant(t_compute, t_memory, t_collective, t_idle) -> str:
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective, "idle": t_idle}
+    return max(terms, key=terms.get)
+
+
+class EnergyModel:
+    """Phase-aware energy model for one device + precision policy."""
+
+    def __init__(self, device: DeviceSpec, policy: PrecisionPolicy):
+        self.device = device
+        self.policy = policy
+
+    # -- traffic / launch adjustments for the precision format ----------
+    def weight_traffic_bytes(self, weight_bytes_16: float) -> float:
+        """HBM bytes actually moved to stream the weights once."""
+        p = self.policy
+        stored = weight_bytes_16 * (p.weight_bits / 16.0)
+        if not p.is_quantized:
+            return stored
+        eff = _QUANT_READ_EFFICIENCY[p.fmt]
+        # bitsandbytes-style path: read packed ints (reduced coalescing
+        # efficiency), write the 16-bit dequantized tensor, read it back
+        # into the matmul. Our Pallas kernel removes the round-trip — see
+        # FusedDequantEnergyModel.
+        return stored / eff + 2.0 * weight_bytes_16
+
+    def extra_launches(self, n_matmuls: int) -> int:
+        if not self.policy.is_quantized:
+            return 0
+        return n_matmuls * _DEQUANT_LAUNCHES_PER_MATMUL[self.policy.fmt]
+
+    # -- main entry ------------------------------------------------------
+    def evaluate(self, w: PhaseWorkload, n_chips: int = 1) -> EnergyReport:
+        d, p = self.device, self.policy
+        t_compute = w.flops / (d.peak_flops(p.weight_bits) * n_chips)
+        bytes_moved = (self.weight_traffic_bytes(w.weight_bytes_16)
+                       + w.act_bytes)
+        t_memory = bytes_moved / (d.hbm_bw * n_chips)
+        t_collective = (w.collective_bytes / (d.link_bw * n_chips)
+                        if w.collective_bytes else 0.0)
+        launches = w.n_kernel_launches + self.extra_launches(w.n_matmuls)
+        t_idle = launches * d.launch_overhead(w.stack)
+        t_busy = max(t_compute, t_memory) + t_collective
+        # regime-dependent instantaneous power (paper §3.1 mechanism)
+        if t_compute >= t_memory:
+            p_busy = d.compute_power(p.weight_bits)
+        else:
+            p_busy = d.power_memory
+        energy_per_chip = p_busy * t_busy + d.idle_power * t_idle
+        bound = _dominant(t_compute, t_memory, t_collective, t_idle)
+        return EnergyReport(
+            phase=w.phase, t_compute=t_compute, t_memory=t_memory,
+            t_collective=t_collective, t_busy=t_busy, t_idle=t_idle,
+            latency=t_busy + t_idle,
+            energy_j=energy_per_chip * n_chips, bound=bound)
+
+
+class FusedDequantEnergyModel(EnergyModel):
+    """Beyond-paper variant: dequantization fused into the matmul kernel.
+
+    Our Pallas ``quant_matmul`` dequantizes int8/nf4 tiles *in VMEM* and
+    feeds the MXU directly — no HBM round-trip for the 16-bit tile and no
+    extra kernel launches. This is the TPU-native adaptation of
+    bitsandbytes (DESIGN.md §2) and is what removes the paper's decode
+    quantization penalty. Reported separately in EXPERIMENTS.md §Perf.
+    """
+
+    def weight_traffic_bytes(self, weight_bytes_16: float) -> float:
+        p = self.policy
+        stored = weight_bytes_16 * (p.weight_bits / 16.0)
+        if not p.is_quantized:
+            return stored
+        # packed tile read at (8,128) granularity; TPU tiles are
+        # contiguous, so efficiency is high for both widths.
+        return stored / 0.95
+
+    def extra_launches(self, n_matmuls: int) -> int:
+        return 0
+
+
+def idle_energy(device: DeviceSpec, seconds: float) -> float:
+    """Joules burned by a device sitting idle (serving-gap accounting)."""
+    return device.idle_power * max(seconds, 0.0)
+
+
+def combine(reports: Dict[str, EnergyReport]) -> EnergyReport:
+    """Sum phase reports into a 'generate' aggregate (prefill + decode)."""
+    vals = list(reports.values())
+    if not vals:
+        raise ValueError("no reports to combine")
+    t_c = sum(r.t_compute for r in vals)
+    t_m = sum(r.t_memory for r in vals)
+    t_x = sum(r.t_collective for r in vals)
+    t_b = sum(r.t_busy for r in vals)
+    t_i = sum(r.t_idle for r in vals)
+    e = sum(r.energy_j for r in vals)
+    return EnergyReport(phase="generate", t_compute=t_c, t_memory=t_m,
+                        t_collective=t_x, t_busy=t_b, t_idle=t_i,
+                        latency=t_b + t_i, energy_j=e,
+                        bound=_dominant(t_c, t_m, t_x, t_i))

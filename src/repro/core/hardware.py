@@ -1,0 +1,113 @@
+"""Hardware specification registry.
+
+Two devices matter to this reproduction:
+
+* ``h100-sxm`` — the paper's measurement platform. Used by the
+  paper-validation benchmarks so our analytic energy model can be checked
+  against the paper's absolute and relative numbers.
+* ``tpu-v5e`` — the deployment TARGET of this framework (the container is
+  CPU-only; v5e constants are mandated by the roofline spec: 197 TFLOP/s
+  bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+
+Power is regime-dependent (paper §3.1: Tensor Cores "complete the
+computation faster, but at a higher instantaneous power draw"):
+
+* ``power_mxu``    — compute-bound on the matrix-unit fast path,
+* ``power_scalar`` — compute-bound on the slow (fp32/CUDA-core) path,
+* ``power_memory`` — memory-bound kernels (bandwidth saturated, ALUs idle),
+* ``idle_power``   — dispatch gaps between kernels (~120 W on H100, §3.2).
+
+Dispatch overhead is stack-dependent (paper §2 "Idle time": the CPU thread
+issuing kernels can be slower than the GPU): the eager ``transformers``
+path pays ~40 us of host work per kernel; a fused serving stack (TGI-like)
+pays a few us.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    name: str
+    # Peak dense matmul throughput for 16-bit formats (FLOP/s).
+    peak_flops_16: float
+    # Peak throughput for the fp32 path (FLOP/s). On H100 this is the
+    # TF32/CUDA-core mix the eager stack actually achieves.
+    peak_flops_32: float
+    # HBM bandwidth (bytes/s).
+    hbm_bw: float
+    # Inter-chip link bandwidth (bytes/s per link).
+    link_bw: float
+    # Regime-dependent power draw (W) — see module docstring.
+    power_mxu: float
+    power_scalar: float
+    power_memory: float
+    idle_power: float
+    # Host dispatch overhead per kernel launch (s), by serving stack.
+    launch_overhead_eager: float
+    launch_overhead_fused: float
+    # Smallest efficient memory transaction (bytes). GPU: 32–64 B
+    # coalescing granularity; TPU: one (8, 128) f32 tile line = 512 B.
+    min_transaction_bytes: int
+    # HBM capacity (bytes).
+    hbm_capacity: float
+
+    def peak_flops(self, bits: float) -> float:
+        """Matmul peak for a given operand width (compute side).
+
+        Integer formats are dequantized to 16-bit before the matmul on
+        both platforms (bitsandbytes on GPU, our quant_matmul on TPU), so
+        compute peak is the 16-bit peak for everything except fp32.
+        """
+        return self.peak_flops_32 if bits >= 32 else self.peak_flops_16
+
+    def compute_power(self, bits: float) -> float:
+        return self.power_scalar if bits >= 32 else self.power_mxu
+
+    def launch_overhead(self, stack: str) -> float:
+        return (self.launch_overhead_fused if stack == "fused"
+                else self.launch_overhead_eager)
+
+
+H100_SXM = DeviceSpec(
+    name="h100-sxm",
+    peak_flops_16=989e12,       # dense bf16/fp16 tensor core
+    peak_flops_32=99e12,        # eager fp32 path (TF32-assisted, ~10x slower
+                                # than the TC path — matches paper Fig 4)
+    hbm_bw=3.35e12,
+    link_bw=450e9 / 18,         # NVLink per-link
+    power_mxu=700.0,
+    power_scalar=280.0,         # paper: ~4x energy gain at ~10x latency gain
+    power_memory=350.0,
+    idle_power=120.0,           # paper §3.2: "typically around 120 W"
+    launch_overhead_eager=40e-6,  # transformers host loop per kernel
+    launch_overhead_fused=5e-6,   # TGI/CUDA-graph-ish dispatch
+    min_transaction_bytes=64,
+    hbm_capacity=80e9,
+)
+
+TPU_V5E = DeviceSpec(
+    name="tpu-v5e",
+    peak_flops_16=197e12,       # mandated constant
+    peak_flops_32=197e12 / 4,   # fp32 through MXU at 1/4 rate
+    hbm_bw=819e9,               # mandated constant
+    link_bw=50e9,               # mandated constant, per link
+    power_mxu=200.0,            # ~v5e chip TDP class
+    power_scalar=120.0,
+    power_memory=110.0,
+    idle_power=60.0,
+    launch_overhead_eager=10e-6,  # per-step host dispatch gap (XLA runs one
+    launch_overhead_fused=2e-6,   # fused program per step)
+    min_transaction_bytes=512,    # one 8x128 f32 tile row
+    hbm_capacity=16e9,
+)
+
+DEVICES = {d.name: d for d in (H100_SXM, TPU_V5E)}
+
+
+def get_device(name: str) -> DeviceSpec:
+    try:
+        return DEVICES[name]
+    except KeyError:
+        raise ValueError(f"unknown device {name!r}; known: {list(DEVICES)}")

@@ -1,0 +1,250 @@
+"""Scan-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` has two properties that break naive roofline
+math on real JAX programs (verified empirically in tests/test_roofline.py):
+
+1. it reports PER-DEVICE numbers for SPMD-partitioned modules, and
+2. it counts each ``while`` (lax.scan) body ONCE, not x trip-count —
+   and every model here scans over layers (and over KV blocks inside
+   chunked attention, and over loss chunks), so matmul FLOPs would be
+   undercounted by ~num_layers.
+
+This module re-derives dot FLOPs / dot bytes / collective bytes from the
+post-SPMD HLO text with loop bodies multiplied by their trip counts:
+
+* each computation's instruction list is parsed with a local symbol
+  table (instruction name -> shape), so dot contracting sizes are exact;
+* ``while`` trip counts come from the loop-condition computation's
+  comparison constant;
+* costs compose recursively: cost(comp) = local + sum trip * cost(body).
+
+Covered: dot/matmul FLOPs (the MXU term), dot operand/output bytes plus
+entry parameter bytes (the HBM term, elementwise traffic excluded and
+documented), and collective output bytes. All numbers are per-device;
+callers multiply by chip count for global figures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) \(.* -> .*\{")
+# instruction name on the lhs of '='
+_INSTR_NAME = re.compile(r"^\s*(?:ROOT )?%?([\w\.\-]+) = ")
+# op keyword followed by '(' — searched lazily after the '=' so tuple
+# output types containing '/*index=N*/' comments (which embed '=') and
+# layout annotations are skipped robustly
+_OPS_OF_INTEREST = ("all-gather-start", "all-gather", "all-reduce-start",
+                    "all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute-start", "collective-permute",
+                    "while", "fusion", "call", "custom-call",
+                    "conditional", "dot", "parameter")
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s(" + "|".join(_OPS_OF_INTEREST) + r")\(")
+_SHAPE = re.compile(r"([a-z]+\d+|pred)\[([\d,]*)\]")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_WHILE_ATTR = re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CALL_ATTR = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_shape(text: str) -> Optional[Tuple[str, str]]:
+    m = _SHAPE.search(text)
+    return (m.group(1), m.group(2)) if m else None
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum over every shape token in text (handles tuple types)."""
+    return sum(_shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+               for dt, dims in _SHAPE.findall(text))
+
+
+@dataclasses.dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    # (kind, sub_computation, multiplier): 'while' bodies x trip count,
+    # calls/fusions x 1
+    subcalls: List[Tuple[str, str, float]] = dataclasses.field(
+        default_factory=list)
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry_marker: Optional[str] = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and (line.startswith("%") or line.startswith("ENTRY")
+                  or line.strip().startswith("%")):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry_marker = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    if entry_marker is not None:
+        comps["__entry__"] = comps[entry_marker]
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> float:
+    """Largest integer constant in the loop condition computation."""
+    best = 1
+    for ln in cond_lines:
+        for c in _CONST.findall(ln):
+            best = max(best, int(c))
+    return float(best)
+
+
+def _analyze_comp(lines: List[str]) -> CompCost:
+    cost = CompCost(collective_breakdown={k: 0.0 for k in _COLLECTIVES})
+    shapes: Dict[str, str] = {}
+    for ln in lines:
+        nm = _INSTR_NAME.match(ln)
+        if not nm:
+            continue
+        name = nm.group(1)
+        rhs = ln[nm.end():]
+        # record the (first) output shape for operand lookups
+        fs = _SHAPE.search(rhs)
+        if fs:
+            shapes[name] = f"{fs.group(1)}[{fs.group(2)}]"
+        m = _OP_RE.search(ln)
+        if not m:
+            continue
+        out_type, op = m.group(1), m.group(2)
+        if op.endswith("-start"):
+            op = op[:-len("-start")]
+        if op == "dot":
+            out = _first_shape(out_type)
+            if out is None:
+                continue
+            out_elems = _shape_elems(out[1])
+            # contracting size from the lhs operand's shape
+            cm = _CONTRACT.search(ln)
+            rest = ln[m.end():]
+            ops = _OPERANDS.findall(rest)
+            k = 1
+            if cm is not None and ops:
+                lhs_shape = _first_shape(shapes.get(ops[0], ""))
+                if lhs_shape:
+                    dims = [int(d) for d in lhs_shape[1].split(",") if d]
+                    for ci in cm.group(1).split(","):
+                        if ci:
+                            ci = int(ci)
+                            if ci < len(dims):
+                                k *= dims[ci]
+            cost.dot_flops += 2.0 * out_elems * k
+            # bytes: operands + output
+            b = _shape_bytes(out_type)
+            for o in ops[:2]:
+                b += _shape_bytes(shapes.get(o, ""))
+            cost.dot_bytes += b
+        elif op in _COLLECTIVES:
+            b = _shape_bytes(out_type)
+            cost.collective_bytes += b
+            cost.collective_breakdown[op] += b
+        elif op == "while":
+            wm = _WHILE_ATTR.search(ln)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                cost.subcalls.append(("while", body, cond))
+        elif op in ("call", "fusion", "custom-call", "conditional"):
+            for sub in _CALL_ATTR.findall(ln):
+                cost.subcalls.append(("call", sub, 1.0))
+            # conditional: branch computations listed explicitly
+            bm = re.search(r"(?:true_computation|false_computation|"
+                           r"branch_computations)=\{?%?([\w\.\-,% ]+)\}?",
+                           ln)
+            if bm:
+                for sub in bm.group(1).replace("%", "").split(","):
+                    cost.subcalls.append(("call", sub.strip(), 1.0))
+    return cost
+
+
+@dataclasses.dataclass
+class HloCost:
+    dot_flops: float
+    dot_bytes: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    parameter_bytes: float
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps = _parse_computations(hlo)
+    raw = {name: _analyze_comp(lines) for name, lines in comps.items()
+           if name != "__entry__"}
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float]]] = {}
+
+    def total(name: str, stack=()) -> Tuple[float, float, float,
+                                            Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        if name not in raw or name in stack:
+            return (0.0, 0.0, 0.0, {})
+        c = raw[name]
+        f, b, x = c.dot_flops, c.dot_bytes, c.collective_bytes
+        bd = dict(c.collective_breakdown)
+        for kind, sub, aux in c.subcalls:
+            mult = 1.0
+            if kind == "while":
+                cond_lines = comps.get(aux, [])
+                mult = _trip_count(cond_lines)
+            sf, sb, sx, sbd = total(sub, stack + (name,))
+            f += mult * sf
+            b += mult * sb
+            x += mult * sx
+            for kk, vv in sbd.items():
+                bd[kk] = bd.get(kk, 0.0) + mult * vv
+        memo[name] = (f, b, x, bd)
+        return memo[name]
+
+    entry_name = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                entry_name = m.group(1)
+            break
+    if entry_name is None:
+        entry_name = max(raw, key=lambda n: raw[n].dot_flops, default="")
+    f, b, x, bd = total(entry_name)
+
+    # entry parameter bytes (weights + caches streamed at least once)
+    pbytes = 0.0
+    for ln in comps.get(entry_name, []):
+        if re.search(r"=\s*[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?\s*"
+                     r"parameter\(", ln):
+            tm = _first_shape(ln.split("=", 1)[1])
+            if tm:
+                pbytes += _shape_elems(tm[1]) * _DTYPE_BYTES.get(tm[0], 4)
+    return HloCost(dot_flops=f, dot_bytes=b, collective_bytes=x,
+                   collective_breakdown=bd, parameter_bytes=pbytes)

@@ -1,0 +1,103 @@
+"""Phase-aware profiling harness (paper takeaway #4).
+
+Wraps the analytic energy model with the prefill/decode split the paper
+insists on: callers register phase workloads and get a per-phase +
+aggregate report, in the exact decomposition of the paper (§2):
+
+    generate = prefill + decode
+
+with prefill isolated as "generation stopped at the first token" and
+decode as the remainder — mirrored here by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.energy import (EnergyModel, EnergyReport, PhaseWorkload,
+                               combine)
+from repro.core.hardware import DeviceSpec, H100_SXM
+from repro.core.precision import PrecisionPolicy
+from repro.core import workload as W
+
+
+@dataclasses.dataclass
+class GenerateProfile:
+    prefill: EnergyReport
+    decode: EnergyReport
+    generate: EnergyReport
+    batch: int
+    prompt_len: int
+    new_tokens: int
+
+    def energy_per_request_wh(self) -> float:
+        return self.generate.energy_wh / self.batch
+
+    def energy_per_output_token_j(self, phase: str = "generate") -> float:
+        r = getattr(self, phase)
+        return r.energy_j / (self.batch * self.new_tokens)
+
+    def energy_per_input_token_j(self, phase: str = "generate",
+                                 effective_tokens: Optional[int] = None) -> float:
+        n = effective_tokens if effective_tokens is not None \
+            else self.batch * self.prompt_len
+        r = getattr(self, phase)
+        return r.energy_j / n
+
+
+class PhaseProfiler:
+    """Analytic phase-aware profiler for one (model, device, policy)."""
+
+    def __init__(self, cfg: ModelConfig, device: DeviceSpec = H100_SXM,
+                 policy: Optional[PrecisionPolicy] = None,
+                 energy_model_cls=EnergyModel, n_chips: int = 1,
+                 stack: str = "eager"):
+        from repro.core.precision import make_policy
+        self.cfg = cfg
+        self.device = device
+        self.policy = policy or make_policy("bfloat16")
+        self.model = energy_model_cls(device, self.policy)
+        self.n_chips = n_chips
+        self.stack = stack
+
+    def profile_prefill(self, batch: int, seq: int) -> EnergyReport:
+        w = W.prefill_workload(self.cfg, batch, seq, stack=self.stack)
+        return self.model.evaluate(w, self.n_chips)
+
+    def profile_decode(self, batch: int, prompt_len: int,
+                       new_tokens: int) -> EnergyReport:
+        w = W.decode_workload(self.cfg, batch, prompt_len, new_tokens,
+                              stack=self.stack)
+        return self.model.evaluate(w, self.n_chips)
+
+    def profile_decode_step(self, batch: int, cache_len: int) -> EnergyReport:
+        w = W.decode_step_workload(self.cfg, batch, cache_len,
+                                   stack=self.stack)
+        return self.model.evaluate(w, self.n_chips)
+
+    def profile_train_step(self, batch: int, seq: int) -> EnergyReport:
+        w = W.train_step_workload(self.cfg, batch, seq, stack=self.stack)
+        return self.model.evaluate(w, self.n_chips)
+
+    def profile_generate(self, batch: int, prompt_len: int,
+                         new_tokens: int) -> GenerateProfile:
+        pre = self.profile_prefill(batch, prompt_len)
+        dec = self.profile_decode(batch, prompt_len, new_tokens)
+        gen = combine({"prefill": pre, "decode": dec})
+        return GenerateProfile(prefill=pre, decode=dec, generate=gen,
+                               batch=batch, prompt_len=prompt_len,
+                               new_tokens=new_tokens)
+
+
+class WallClock:
+    """Tiny wall-clock context for CPU-relative latency comparisons."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.t0
+        return False

@@ -1,0 +1,157 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Per the assignment:
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` supplies FLOPs and bytes accessed; collective bytes are
+NOT in cost_analysis, so we parse the (stable-)HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.core.hardware import DeviceSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# matches e.g. "bf16[256,4096,2048]" or "f32[128]{0}"
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+|pred)\[([\d,]*)\]")
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+# an HLO instruction line: "  %name = TYPE[shape] op-name(...)".
+# Group 1 = output type(s) (possibly a tuple), group 2 = op kind.
+# NB: the instruction *name* usually also contains the op kind
+# ("%all-reduce.3 = ..."), so the shape must be captured from the match,
+# never by splitting the line on the kind string.
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9_]+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"(" + "|".join(_COLLECTIVE_OPS) + r")(-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum *output* operand sizes per collective kind from HLO text.
+
+    Output size is the standard proxy for data volume moved per chip
+    (all-gather output = full gathered tensor; all-reduce output = tensor
+    reduced; all-to-all output = full exchanged block).
+    """
+    totals: Dict[str, float] = {k: 0.0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if m.group(3) == "-done":
+            continue  # avoid double counting start/done pairs
+        shapes = _SHAPE_RE.findall(m.group(1))
+        totals[kind] += sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+    return totals
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    model_flops: float                      # 6ND / 2ND yardstick
+    device: DeviceSpec = TPU_V5E
+    peak_bits: int = 16
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.n_chips
+                                 * self.device.peak_flops(self.peak_bits))
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.n_chips * self.device.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.n_chips * self.device.link_bw)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def step_time(self) -> float:
+        return max(self.t_compute, self.t_memory) + self.t_collective
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step the dominant *useful* term explains.
+
+        1.0 = the step time is exactly the best achievable for the useful
+        model FLOPs (perfect). Lower = waste (redundant compute, spilled
+        bytes, serial collectives).
+        """
+        ideal = self.model_flops / (self.n_chips
+                                    * self.device.peak_flops(self.peak_bits))
+        return ideal / self.step_time if self.step_time else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.n_chips,
+            "hlo_gflops": self.hlo_flops / 1e9,
+            "hlo_gbytes": self.hlo_bytes / 1e9,
+            "coll_gbytes": self.collective_bytes / 1e9,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_ratio": self.useful_flop_ratio,
+            "roofline_frac": self.roofline_fraction,
+        }
+
+
+def terms_from_compiled(compiled, hlo_text: str, *, arch: str, shape: str,
+                        mesh: str, n_chips: int, model_flops: float,
+                        device: DeviceSpec = TPU_V5E,
+                        peak_bits: int = 16) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = parse_collective_bytes(hlo_text)
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh, n_chips=n_chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        collective_bytes=sum(coll.values()), collective_breakdown=coll,
+        model_flops=model_flops, device=device, peak_bits=peak_bits)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention: direct masked softmax attention
+(f32 throughout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window=None) -> jnp.ndarray:
+    """q: (B, S, H, d); k/v: (B, T, Kv, d)."""
+    B, S, H, d = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, kf) / (d ** 0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    allow = jnp.ones((S, T), bool)
+    if causal:
+        allow &= kpos <= qpos
+    if window is not None:
+        allow &= kpos > qpos - window
+    s = jnp.where(allow[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, d)

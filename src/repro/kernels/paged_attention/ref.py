@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for paged decode attention: gather the pages into a
+contiguous cache, run masked attention in f32."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                        seq_lens: jnp.ndarray) -> jnp.ndarray:
+    """Shapes as kernel.paged_attention_pallas."""
+    B, H, d = q.shape
+    n_pool, page_size, Kv, _ = k_pages.shape
+    G = H // Kv
+    n_max = page_table.shape[1]
+    T = n_max * page_size
+    pt = jnp.maximum(page_table, 0)                    # (B, n_max)
+    k = k_pages[pt]                                    # (B, n_max, page, Kv, d)
+    v = v_pages[pt]
+    k = k.reshape(B, T, Kv, d).astype(jnp.float32)
+    v = v.reshape(B, T, Kv, d).astype(jnp.float32)
+    qg = q.reshape(B, Kv, G, d).astype(jnp.float32)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k) / (d ** 0.5)
+    slot = jnp.arange(T)[None, :]
+    valid = (slot < seq_lens[:, None]) \
+        & (jnp.repeat(page_table, page_size, axis=1) >= 0)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", p, v)
+    return o.reshape(B, H, d)

@@ -1,0 +1,144 @@
+"""Pallas TPU kernels: quantized matmul with on-the-fly VMEM dequant.
+
+TPU adaptation of bitsandbytes (DESIGN.md §2 / §7): the packed integer
+tile is dequantized *inside VMEM* (VPU work) and fed straight to the MXU
+in the compute dtype — no HBM round-trip for the 16-bit weights and no
+extra kernel launches, which is precisely the overhead the paper blames
+for int8's 2-3x decode-energy regression on the GPU eager path.
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost; f32 accumulator tile in
+VMEM scratch. Default blocks bm=bn=256, bk=512 keep the working set
+(int8 tile 128 KiB + dequant tile 256 KiB + acc 256 KiB + x tile 256 KiB)
+far under the 16 MiB v5e VMEM while giving the MXU 128-multiple dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+import numpy as np
+
+from repro.quant.nf4 import NF4_CODEBOOK
+
+# numpy copy of the codebook: a traced jax array may not be closed over
+# inside a pallas kernel body, but a numpy constant is inlined.
+_NF4_LUT = np.asarray(NF4_CODEBOOK, np.float32)
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+
+
+# ---------------------------------------------------------------------------
+# int8: vector-wise absmax — scale applied in the epilogue (scales are
+# per-output-column, so they commute with the K-reduction)
+# ---------------------------------------------------------------------------
+def _int8_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, compute_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = q_ref[...].astype(compute_dtype)            # VMEM dequant (VPU)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(compute_dtype), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * s_ref[0, :][None, :]) \
+            .astype(o_ref.dtype)
+
+
+def int8_matmul_pallas(x: jnp.ndarray, codes: jnp.ndarray,
+                       scale: jnp.ndarray, *, compute_dtype=jnp.bfloat16,
+                       bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                       bk: int = DEFAULT_BK,
+                       interpret: bool = True) -> jnp.ndarray:
+    """x (M, K) @ dequant(codes (K, N), scale (N,)) -> (M, N)."""
+    M, K = x.shape
+    N = codes.shape[1]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    if M % bm or N % bn or K % bk:
+        raise ValueError(f"shape ({M},{K},{N}) not tileable by "
+                         f"({bm},{bk},{bn})")
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_int8_kernel, compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), compute_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, scale.reshape(1, N))
+
+
+# ---------------------------------------------------------------------------
+# nf4: packed 2-per-byte, per-(K-block, column) absmax — dequant must
+# happen per K-tile (scales vary along K)
+# ---------------------------------------------------------------------------
+def _nf4_kernel(x_ref, p_ref, a_ref, lut_ref, o_ref, acc_ref, *,
+                compute_dtype, block: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = p_ref[...]                              # (bk//2, bn) uint8
+    lo = (packed & 0x0F).astype(jnp.int32)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int32)
+    # interleave rows: packing stores even K-rows in the low nibble
+    codes = jnp.stack([lo, hi], axis=1).reshape(
+        packed.shape[0] * 2, packed.shape[1])        # (bk, bn)
+    lut = lut_ref[0]                                 # (16,) in VMEM
+    vals = jnp.take(lut, codes, axis=0)              # (bk, bn) in [-1, 1]
+    absmax = a_ref[...]                              # (bk//block, bn)
+    scale = jnp.repeat(absmax, block, axis=0)        # (bk, bn)
+    w = (vals * scale).astype(compute_dtype)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(compute_dtype), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def nf4_matmul_pallas(x: jnp.ndarray, packed: jnp.ndarray,
+                      absmax: jnp.ndarray, *, compute_dtype=jnp.bfloat16,
+                      bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                      bk: int = DEFAULT_BK,
+                      interpret: bool = True) -> jnp.ndarray:
+    """x (M, K) @ dequant(packed (K//2, N), absmax (K//block, N))."""
+    M, K = x.shape
+    N = packed.shape[1]
+    if packed.shape[0] * 2 != K:
+        raise ValueError("packed rows must be K//2")
+    block = K // absmax.shape[0]
+    bm, bn = min(bm, M), min(bn, N)
+    bk = min(bk, K)
+    bk = max(block, (bk // block) * block)           # bk multiple of block
+    if M % bm or N % bn or K % bk or bk % 2:
+        raise ValueError(f"shape ({M},{K},{N}) not tileable by "
+                         f"({bm},{bk},{bn}) block={block}")
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_nf4_kernel, compute_dtype=compute_dtype,
+                          block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // block, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 16), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), compute_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, absmax, jnp.asarray(_NF4_LUT).reshape(1, 16))

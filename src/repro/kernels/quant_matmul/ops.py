@@ -1,0 +1,61 @@
+"""jit'd wrappers: quantized linear ops backed by the Pallas kernels.
+
+These are the entry points :func:`repro.quant.apply.linear_apply` uses
+when ``policy.use_pallas_kernels`` is set. The outlier decomposition of
+LLM.int8 stays at the XLA level (a thin bf16 matmul added to the kernel
+output) — see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.kernel import (int8_matmul_pallas,
+                                               nf4_matmul_pallas)
+from repro.quant.int8 import Int8Weight
+from repro.quant.nf4 import NF4Weight
+
+
+def _as_2d(x: jnp.ndarray):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def _pick_blocks(M: int, K: int, N: int, block: int = 0):
+    bm = 256 if M % 256 == 0 else M
+    bn = 256 if N % 256 == 0 else N
+    bk = 512 if K % 512 == 0 else K
+    if block:
+        bk = max(block, (bk // block) * block)
+    return bm, bn, bk
+
+
+def int8_matmul_kernel(x: jnp.ndarray, q: Int8Weight,
+                       compute_dtype=jnp.bfloat16,
+                       interpret: bool = True) -> jnp.ndarray:
+    x2, lead = _as_2d(x)
+    M, K = x2.shape
+    N = q.codes.shape[1]
+    bm, bn, bk = _pick_blocks(M, K, N)
+    out = int8_matmul_pallas(x2, q.codes, q.scale,
+                             compute_dtype=compute_dtype,
+                             bm=bm, bn=bn, bk=bk, interpret=interpret)
+    if q.outlier_idx.shape[0]:
+        x_out = jnp.take(x2, q.outlier_idx, axis=-1).astype(compute_dtype)
+        out = out + jnp.dot(x_out, q.outlier_w.astype(compute_dtype),
+                            preferred_element_type=jnp.float32
+                            ).astype(out.dtype)
+    return out.reshape(lead + (N,))
+
+
+def nf4_matmul_kernel(x: jnp.ndarray, q: NF4Weight,
+                      compute_dtype=jnp.bfloat16,
+                      interpret: bool = True) -> jnp.ndarray:
+    x2, lead = _as_2d(x)
+    M, K = x2.shape
+    N = q.packed.shape[1]
+    bm, bn, bk = _pick_blocks(M, K, N, block=q.block)
+    out = nf4_matmul_pallas(x2, q.packed, q.absmax,
+                            compute_dtype=compute_dtype,
+                            bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out.reshape(lead + (N,))

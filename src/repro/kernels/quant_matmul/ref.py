@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the quant_matmul kernels.
+
+The quantized representations come from :mod:`repro.quant`; the reference
+computation is dequantize-then-matmul in f32 (the mathematically exact
+result the kernel approximates with bf16 MXU accumulation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.int8 import Int8Weight, dequantize_int8
+from repro.quant.nf4 import NF4Weight, dequantize_nf4
+
+
+def int8_matmul_ref(x: jnp.ndarray, codes: jnp.ndarray,
+                    scale: jnp.ndarray) -> jnp.ndarray:
+    w = codes.astype(jnp.float32) * scale[None, :]
+    return jnp.dot(x.astype(jnp.float32), w)
+
+
+def nf4_matmul_ref(x: jnp.ndarray, packed: jnp.ndarray,
+                   absmax: jnp.ndarray) -> jnp.ndarray:
+    w = dequantize_nf4(NF4Weight(packed=packed, absmax=absmax),
+                       jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w)
+
+
+def int8_weight_matmul_ref(x: jnp.ndarray, q: Int8Weight) -> jnp.ndarray:
+    """Full LLM.int8 path incl. the outlier decomposition."""
+    return jnp.dot(x.astype(jnp.float32), dequantize_int8(q, jnp.float32))

@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run launcher.
+
+For every (architecture x input shape x mesh) combination, lower and
+compile the appropriate step function (train_step / prefill / serve_step)
+under pjit with the production shardings, then extract:
+
+* ``compiled.memory_analysis()``  — proves the configuration fits,
+* ``compiled.cost_analysis()``    — HLO FLOPs / bytes for the roofline,
+* collective bytes parsed from the post-SPMD HLO text.
+
+Results are cached as JSON under ``experiments/dryrun/`` so repeated
+invocations skip completed combinations.
+
+The XLA_FLAGS line above MUST run before any other import: jax locks the
+device count at first initialization, and the dry-run needs 512 host
+placeholder devices to build the 2x16x16 production mesh.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, ModelConfig,
+                                ShapeConfig, get_config)
+from repro.core import workload as W
+from repro.core.hlo_analysis import analyze_hlo
+from repro.core.roofline import parse_collective_bytes, RooflineTerms
+from repro.core.hardware import TPU_V5E
+from repro.launch.mesh import make_production_mesh, n_chips
+from repro.launch import sharding as sh
+from repro.models.api import build_model, Model
+from repro.training.losses import lm_loss
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+# the long-context SWA variant window for full-attention archs
+LONG_CONTEXT_WINDOW = 8192
+
+
+def make_model(arch: str, shape_name: str, fmt: str = "bfloat16",
+               kv_quant: bool = False) -> Model:
+    cfg = get_config(arch)
+    window_override = None
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        window_override = LONG_CONTEXT_WINDOW   # documented SWA variant
+    return build_model(cfg, fmt=fmt, window_override=window_override,
+                       kv_quant=kv_quant)
+
+
+def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    if shape.kind == "train":
+        return W.model_flops_6nd(cfg, shape.global_batch * shape.seq_len,
+                                 train=True)
+    if shape.kind == "prefill":
+        return W.model_flops_6nd(cfg, shape.global_batch * shape.seq_len)
+    return W.model_flops_6nd(cfg, shape.global_batch)   # one decode step
+
+
+def _decode_buf_len(model: Model, shape: ShapeConfig) -> int:
+    if model.window is not None:
+        return min(shape.seq_len, model.window)
+    return shape.seq_len
+
+
+def build_step(model: Model, shape: ShapeConfig, mesh):
+    """Returns (fn, abstract_args, in_specs, out_specs)."""
+    cfg = model.cfg
+    specs = model.input_specs(shape)
+    in_batch_specs = sh.input_specs_sharding(cfg, shape, mesh, specs)
+    if model.policy.is_quantized:
+        # PTQ'd weights: the dry-run lowers the actual quantized
+        # representation (int8 codes / nf4 packed + scales)
+        abstract_params = jax.eval_shape(
+            lambda k: model.quantize(model.init(k)),
+            jax.random.PRNGKey(0))
+    else:
+        abstract_params = jax.eval_shape(model.init,
+                                         jax.random.PRNGKey(0))
+    pspecs = sh.param_specs(abstract_params, mesh)
+    b_ax = sh._batch_axes(mesh, shape.global_batch)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        abstract_opt = jax.eval_shape(adamw_init, abstract_params)
+        ospecs = sh.opt_specs(abstract_opt, pspecs, mesh)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: lm_loss(model, p, batch, remat=True),
+                has_aux=True)(params)
+            params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                                 opt_state)
+            metrics.update(om)
+            return params, opt_state, metrics
+
+        metrics_spec = None   # let XLA place scalars
+        return (train_step,
+                (abstract_params, abstract_opt, specs),
+                (pspecs, ospecs, in_batch_specs),
+                (pspecs, ospecs, metrics_spec))
+
+    if shape.kind == "prefill":
+        buf = shape.seq_len if model.window is None \
+            else min(shape.seq_len, model.window)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, buf_len=buf)
+
+        abstract_out = jax.eval_shape(prefill_step, abstract_params, specs)
+        cspecs = sh.cache_specs(cfg, abstract_out[1], mesh,
+                                shape.global_batch)
+        logits_spec = P(b_ax, "model" if cfg.vocab_size %
+                        mesh.shape["model"] == 0 else None)
+        return (prefill_step,
+                (abstract_params, specs),
+                (pspecs, in_batch_specs),
+                (logits_spec, cspecs))
+
+    # decode: one new token against a full cache
+    buf = _decode_buf_len(model, shape)
+    enc_len = (shape.seq_len // cfg.enc_frames_ratio
+               if cfg.family == "audio" else 0)
+    abstract_cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, buf, enc_len))
+    cspecs = sh.cache_specs(cfg, abstract_cache, mesh, shape.global_batch)
+    tok_abstract = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_spec = P(b_ax, None)
+    logits_spec = P(b_ax, "model" if cfg.vocab_size %
+                    mesh.shape["model"] == 0 else None)
+
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    return (serve_step,
+            (abstract_params, tok_abstract, abstract_cache),
+            (pspecs, tok_spec, cspecs),
+            (logits_spec, cspecs))
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            fmt: str = "bfloat16", force: bool = False,
+            save: bool = True, kv_quant: bool = False) -> Dict[str, Any]:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"{fmt}__kvq" if kv_quant else fmt
+    out_path = os.path.join(
+        RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}__{tag}.json")
+    if save and not force and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+
+    t0 = time.time()
+    shape = INPUT_SHAPES[shape_name]
+    model = make_model(arch, shape_name, fmt, kv_quant=kv_quant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = n_chips(mesh)
+    fn, abstract_args, in_specs, out_specs = build_step(model, shape, mesh)
+
+    from repro.models import moe as moe_mod
+    from repro.launch.mesh import data_axes as _dax
+    with mesh, moe_mod.expert_parallel(mesh, data_axes=_dax(mesh)):
+        jitted = jax.jit(fn,
+                         in_shardings=sh.named(mesh, in_specs),
+                         out_shardings=(sh.named(mesh, out_specs)
+                                        if out_specs is not None else None))
+        lowered = jitted.lower(*abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_fields = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(mem, f):
+                mem_fields[f] = int(getattr(mem, f))
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    hlo = compiled.as_text()
+    # scan-aware per-device analysis (cost_analysis counts loop bodies
+    # once and reports per-device — see core/hlo_analysis.py); multiply
+    # by chip count for the global figures the roofline formulas expect.
+    hc = analyze_hlo(hlo)
+    mf = model_flops_for(model.cfg, shape)
+    glob_flops = hc.dot_flops * chips
+    glob_bytes = (hc.dot_bytes + hc.parameter_bytes) * chips
+    glob_coll = hc.collective_bytes * chips
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "fmt": fmt,
+        "chips": chips,
+        "hlo_flops": glob_flops,
+        "hlo_bytes": glob_bytes,
+        "collective_bytes": glob_coll,
+        "collective_breakdown": {k: float(v * chips) for k, v in
+                                 hc.collective_breakdown.items()},
+        "parameter_bytes_per_chip": hc.parameter_bytes,
+        "raw_cost_analysis": {
+            "flops_per_chip_scan_once": float(ca.get("flops", 0.0)),
+            "bytes_per_chip_scan_once": float(
+                ca.get("bytes accessed", 0.0)),
+        },
+        "model_flops": mf,
+        "memory_analysis": mem_fields,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "window_override": model.window_override,
+        "kv_quant": kv_quant,
+        "ok": True,
+    }
+    terms = RooflineTerms(
+        arch=arch, shape=shape_name, mesh=mesh_name, n_chips=chips,
+        hlo_flops=result["hlo_flops"], hlo_bytes=result["hlo_bytes"],
+        collective_bytes=result["collective_bytes"],
+        collective_breakdown=hc.collective_breakdown, model_flops=mf,
+        device=TPU_V5E)
+    result["roofline"] = {
+        "t_compute_s": terms.t_compute, "t_memory_s": terms.t_memory,
+        "t_collective_s": terms.t_collective,
+        "bottleneck": terms.bottleneck,
+        "useful_flop_ratio": terms.useful_flop_ratio,
+        "roofline_fraction": terms.roofline_fraction,
+    }
+    if save:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--fmt", default="bfloat16")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (decode hillclimb variant)")
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                try:
+                    r = run_one(arch, shape, mp, args.fmt,
+                                force=args.force,
+                                kv_quant=args.kv_quant)
+                    rf = r["roofline"]
+                    print(f"OK   {tag}: bottleneck={rf['bottleneck']} "
+                          f"t=({rf['t_compute_s']:.2e},"
+                          f"{rf['t_memory_s']:.2e},"
+                          f"{rf['t_collective_s']:.2e})s "
+                          f"compile={r.get('compile_s', '?')}s",
+                          flush=True)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL {tag}: {e!r}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures")
+    print("all dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

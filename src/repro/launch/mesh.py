@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — required because
+the dry-run launcher must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256-chip pod, or 2x16x16 = 512-chip two-pod mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch dimension."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

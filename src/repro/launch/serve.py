@@ -1,0 +1,103 @@
+"""Serving launcher.
+
+Modes:
+
+* default: run the continuous-batching engine on ``--arch`` (reduced
+  variant) with REAL execution and a chosen arrival pattern, printing
+  the phase-aware energy report — the production serve loop in
+  miniature.
+* ``--sim``: discrete-event simulation of the FULL config (no device
+  compute) — how the paper-scale serving studies run.
+* ``--dry``: lower+compile the full-size serve_step on the production
+  mesh (decode_32k shape).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b
+    PYTHONPATH=src python -m repro.launch.serve --arch minitron-8b --sim \
+        --pattern fixed --interval-ms 20 --n 500
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--n", type=int, default=24)
+    ap.add_argument("--pattern", default="burst",
+                    choices=["burst", "fixed", "random", "poisson"])
+    ap.add_argument("--interval-ms", type=float, default=20.0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--fmt", default="bfloat16")
+    ap.add_argument("--mode", default="continuous",
+                    choices=["continuous", "sequential"])
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--sim", action="store_true",
+                    help="energy/latency simulation of the FULL config")
+    ap.add_argument("--dry", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry:
+        from repro.launch import dryrun
+        dryrun.run_one(args.arch, "decode_32k", multi_pod=False,
+                       fmt="bfloat16", force=True, save=False,
+                       kv_quant=args.kv_quant)
+        print("dry serve_step lower+compile OK")
+        return
+
+    from repro.configs import get_config
+    from repro.serving import (ServeEngine, Request, fixed_arrivals,
+                               uniform_random_arrivals, poisson_arrivals)
+    from repro.training.data import RequestDistribution
+
+    dt = args.interval_ms / 1e3
+    arrivals = {
+        "burst": lambda n: [0.0] * n,
+        "fixed": lambda n: fixed_arrivals(n, dt),
+        "random": lambda n: uniform_random_arrivals(n, 0.0, 2 * dt),
+        "poisson": lambda n: poisson_arrivals(n, 1.0 / max(dt, 1e-6)),
+    }[args.pattern](args.n)
+
+    if args.sim:
+        cfg = get_config(args.arch)
+        dist = RequestDistribution(seed=0)
+        reqs = []
+        for i in range(args.n):
+            s = dist.sample()
+            reqs.append(Request(req_id=i, prompt=None,
+                                prompt_len=s.prompt_len,
+                                max_new_tokens=s.output_len,
+                                arrival_time=arrivals[i]))
+        eng = ServeEngine(cfg, fmt=args.fmt, mode=args.mode,
+                          max_batch=args.max_batch)
+        rep = eng.run(reqs)
+    else:
+        import jax
+        from repro.models import build_model
+        cfg = get_config(args.arch).reduced()
+        model = build_model(cfg, fmt="float32",
+                            kv_quant=args.kv_quant)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        reqs = []
+        for i in range(args.n):
+            plen = int(rng.integers(8, 24))
+            reqs.append(Request(
+                req_id=i,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    plen).astype(np.int32),
+                prompt_len=plen,
+                max_new_tokens=int(rng.integers(4, 12)),
+                arrival_time=arrivals[i]))
+        eng = ServeEngine(cfg, fmt=args.fmt, mode=args.mode,
+                          max_batch=args.max_batch, execute=True,
+                          model=model, params=params, buf_len=64)
+        rep = eng.run(reqs)
+    for k, v in rep.summary().items():
+        print(f"{k:22s} {v:.6g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Training launcher.
+
+Two modes:
+
+* default (CPU / any host): train the REDUCED variant of ``--arch`` on
+  the synthetic pipeline — the runnable end-to-end driver.
+* ``--dry``: build the production mesh and lower+compile the full-size
+  train_step (delegates to the dryrun machinery; requires launching a
+  fresh process because jax fixes the device count at first init —
+  use ``python -m repro.launch.dryrun`` directly for sweeps).
+
+    PYTHONPATH=src python -m repro.launch.train --arch minitron-8b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron-8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--fmt", default="float32")
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--dry", action="store_true",
+                    help="lower/compile the FULL config on the "
+                         "production mesh instead of training")
+    args = ap.parse_args()
+
+    if args.dry:
+        from repro.launch import dryrun
+        dryrun.run_one(args.arch, "train_4k", multi_pod=False,
+                       fmt="bfloat16", force=True, save=False)
+        print("dry train_step lower+compile OK")
+        return
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.training import train, AdamWConfig
+    from repro.training.checkpoint import save_checkpoint
+    from repro.training.data import SyntheticLM, DataConfig
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg, fmt=args.fmt)
+    print(f"training {cfg.name} ({cfg.param_count()/1e6:.1f}M params, "
+          f"{cfg.family})")
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq_len,
+                                  batch_size=args.batch))
+    state = train(model, data.batches(), n_steps=args.steps,
+                  log_every=max(args.steps // 10, 1),
+                  opt_cfg=AdamWConfig(lr=args.lr,
+                                      warmup_steps=args.steps // 10 + 1))
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, state.params, state.opt_state,
+                        state.step)
+        print(f"saved {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block
+applied after every ``attn_period``-th mamba layer [arXiv:2411.15242].
+
+The attention block's *weights* are shared across invocation sites, but
+each site keeps its own KV cache (n_sites = num_layers // attn_period).
+The shared-block invocation happens inside the layer scan via lax.cond,
+writing its site's KV cache with a dynamic_update_slice on the carried
+cache stack.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (attention, apply_rope, cache_write_decode,
+                                 chunked_attention, decode_attention_mask,
+                                 gated_mlp, rms_norm)
+from repro.models.transformer import (CHUNKED_ATTN_THRESHOLD,
+                                      init_decoder_layer, _project_qkv)
+from repro.quant.apply import linear_apply
+
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.attn_period
+
+
+def _shared_attn_seq(shared: Dict[str, Any], x: jnp.ndarray,
+                     cfg: ModelConfig, policy: PrecisionPolicy
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, S = x.shape[0], x.shape[1]
+    xn = rms_norm(x, shared["attn_norm"])
+    q, k, v = _project_qkv(shared["attn"], xn, cfg, policy)
+    positions = jnp.arange(S)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if S >= CHUNKED_ATTN_THRESHOLD:
+        o = chunked_attention(q, k, v, causal=True)
+    else:
+        o = attention(q, k, v, causal=True)
+    x = x + linear_apply(shared["attn"]["wo"], o.reshape(B, S, -1), policy)
+    xn = rms_norm(x, shared["mlp_norm"])
+    x = x + gated_mlp(shared["mlp"], xn, policy)
+    return x, k, v
+
+
+def forward_seq(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
+                policy: PrecisionPolicy, *, collect_cache: bool = False,
+                buf_len: Optional[int] = None, ssd_chunk: int = 64,
+                lengths: Optional[jnp.ndarray] = None):
+    """Full-sequence forward. x: (B, S, D).
+
+    Returns (hidden, cache or None). Cache:
+      {"ssm_state": (L,B,nh,hd,ds), "conv": (L,B,K-1,C),
+       "shared_k"/"shared_v": (n_sites,B,buf,kv,hd), "slot_pos", "pos"}
+    ``buf_len``: KV buffer size for subsequent decode (>= S; default S).
+    """
+    B, S, D = x.shape
+    dims = ssm_mod.ssm_dims(cfg)
+    sites = n_attn_sites(cfg)
+    period = cfg.attn_period
+    shared = params["shared"]
+    buf = max(buf_len or S, S)
+    kbuf = jnp.zeros((sites, B, buf, cfg.num_kv_heads, cfg.head_dim),
+                     x.dtype)
+    vbuf = jnp.zeros_like(kbuf)
+    h0 = jnp.zeros((B, dims["nheads"], dims["headdim"], dims["dstate"]),
+                   jnp.float32)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    seq_mask = (jnp.arange(S)[None, :]
+                < lengths[:, None]).astype(jnp.float32)
+
+    def layer(carry, inp):
+        x, kbuf, vbuf = carry
+        lp, idx = inp
+        x, h, conv_tail = ssm_mod.mamba_block(lp, x, cfg, policy, h0,
+                                              chunk=ssd_chunk,
+                                              seq_mask=seq_mask)
+
+        def with_attn(args):
+            x, kbuf, vbuf = args
+            x2, k, v = _shared_attn_seq(shared, x, cfg, policy)
+            site = idx // period
+            kpad = jnp.zeros((1, B, buf, cfg.num_kv_heads, cfg.head_dim),
+                             kbuf.dtype).at[:, :, :S].set(k[None])
+            vpad = jnp.zeros_like(kpad).at[:, :, :S].set(v[None])
+            kbuf = jax.lax.dynamic_update_slice(
+                kbuf, kpad, (site, 0, 0, 0, 0))
+            vbuf = jax.lax.dynamic_update_slice(
+                vbuf, vpad, (site, 0, 0, 0, 0))
+            return x2, kbuf, vbuf
+
+        x, kbuf, vbuf = jax.lax.cond(
+            jnp.equal(jnp.mod(idx + 1, period), 0),
+            with_attn, lambda a: a, (x, kbuf, vbuf))
+        return (x, kbuf, vbuf), (h, conv_tail)
+
+    idxs = jnp.arange(cfg.num_layers)
+    (x, kbuf, vbuf), (hs, convs) = jax.lax.scan(
+        layer, (x, kbuf, vbuf), (params["layers"], idxs))
+    if not collect_cache:
+        return x, None
+    idx = jnp.arange(buf)[None, :]
+    cache = {
+        "ssm_state": hs,                    # (L, B, nh, hd, ds)
+        "conv": convs,                      # (L, B, K-1, C)
+        "shared_k": kbuf, "shared_v": vbuf,
+        "slot_pos": jnp.where(idx < lengths[:, None], idx,
+                              -1).astype(jnp.int32),
+        "pos": lengths.astype(jnp.int32),
+    }
+    return x, cache
+
+
+def decode_step(params: Dict[str, Any], x: jnp.ndarray,
+                cache: Dict[str, Any], cfg: ModelConfig,
+                policy: PrecisionPolicy):
+    """One-token step. x: (B, 1, D)."""
+    B = x.shape[0]
+    period = cfg.attn_period
+    shared = params["shared"]
+    pos = cache["pos"]                                   # (B,)
+    W = cache["shared_k"].shape[2]
+    slot = jnp.mod(pos, W)
+    slot_pos = cache["slot_pos"].at[jnp.arange(B), slot].set(pos)
+    allow = decode_attention_mask(slot_pos, pos, None)   # (B, W)
+    x2d = x[:, 0, :]
+
+    def layer(carry, inp):
+        x, kbuf, vbuf = carry
+        lp, h, conv_c, idx = inp
+        x, h_new, conv_new = ssm_mod.mamba_block_decode(
+            lp, x, cfg, policy, h, conv_c)
+
+        def with_attn(args):
+            x, kbuf, vbuf = args
+            site = idx // period
+            xn = rms_norm(x[:, None, :], shared["attn_norm"])
+            q, k, v = _project_qkv(shared["attn"], xn, cfg, policy)
+            pos1 = pos[:, None]
+            q = apply_rope(q, pos1, cfg.rope_theta)
+            k = apply_rope(k, pos1, cfg.rope_theta)
+            ck = jax.lax.dynamic_slice(
+                kbuf, (site, 0, 0, 0, 0), (1,) + kbuf.shape[1:])[0]
+            cv = jax.lax.dynamic_slice(
+                vbuf, (site, 0, 0, 0, 0), (1,) + vbuf.shape[1:])[0]
+            ck, cv = cache_write_decode(ck, cv, k, v, pos)
+            mask = allow[:, None, :]
+            o = attention(q, ck, cv, mask=mask)
+            y = linear_apply(shared["attn"]["wo"],
+                             o.reshape(B, 1, -1), policy)[:, 0, :]
+            x = x + y
+            xn = rms_norm(x, shared["mlp_norm"])
+            x = x + gated_mlp(shared["mlp"], xn, policy)
+            kbuf = jax.lax.dynamic_update_slice(
+                kbuf, ck[None], (site, 0, 0, 0, 0))
+            vbuf = jax.lax.dynamic_update_slice(
+                vbuf, cv[None], (site, 0, 0, 0, 0))
+            return x, kbuf, vbuf
+
+        x, kbuf, vbuf = jax.lax.cond(
+            jnp.equal(jnp.mod(idx + 1, period), 0),
+            with_attn, lambda a: a, (x, kbuf, vbuf))
+        return (x, kbuf, vbuf), (h_new, conv_new)
+
+    idxs = jnp.arange(cfg.num_layers)
+    (x2d, kbuf, vbuf), (hs, convs) = jax.lax.scan(
+        layer, (x2d, cache["shared_k"], cache["shared_v"]),
+        (params["layers"], cache["ssm_state"], cache["conv"], idxs))
+    new_cache = dict(cache, ssm_state=hs, conv=convs, shared_k=kbuf,
+                     shared_v=vbuf, slot_pos=slot_pos, pos=pos + 1)
+    return x2d[:, None, :], new_cache
+
+
+def init_params(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    keys = jax.random.split(k1, cfg.num_layers)
+    layers = [ssm_mod.init_mamba_layer(k, cfg, dtype) for k in keys]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    shared = init_decoder_layer(k2, cfg, dtype)
+    return {"layers": stacked, "shared": shared}

@@ -1,0 +1,282 @@
+"""Mamba2 blocks via the SSD (state-space duality) algorithm
+[arXiv:2405.21060], pure JAX.
+
+Prefill/train use the chunked SSD form: quadratic attention-like compute
+*within* a chunk (MXU-friendly matmuls) plus a sequential lax.scan over
+chunk states — this is the TPU-native adaptation of the CUDA selective
+scan (DESIGN.md §2). Decode is the O(1) recurrent update, which is what
+makes ``long_500k`` native for SSM/hybrid archs.
+
+Layer parameter layout (per layer)::
+
+    w_in   : (D, d_in_proj)   packed [z | x | B | C | dt]
+    w_out  : (d_inner, D)
+    conv_w : (conv_width, conv_channels)   depthwise causal conv
+    conv_b : (conv_channels,)
+    A_log  : (nheads,)
+    D      : (nheads,)
+    dt_bias: (nheads,)
+    norm   : (D,)              pre-norm gamma
+    gate_norm : (d_inner,)     normalization before out-proj (Mamba2 RMSNorm)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy
+from repro.models.layers import rms_norm
+from repro.quant.apply import linear_apply
+
+
+def ssm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    di = cfg.d_inner
+    ng, ds, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    return dict(
+        d_inner=di, nheads=nh, headdim=cfg.ssm_headdim, dstate=ds,
+        ngroups=ng,
+        conv_channels=di + 2 * ng * ds,
+        d_in_proj=2 * di + 2 * ng * ds + nh,
+    )
+
+
+def _split_in_proj(zxbcdt: jnp.ndarray, cfg: ModelConfig):
+    d = ssm_dims(cfg)
+    di, ng, ds, nh = (d["d_inner"], d["ngroups"], d["dstate"], d["nheads"])
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + d["conv_channels"]]
+    dt = zxbcdt[..., di + d["conv_channels"]:]
+    return z, xBC, dt
+
+
+def causal_conv(xBC: jnp.ndarray, conv_w: jnp.ndarray,
+                conv_b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    K = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(K):   # K static & tiny (4): unrolled taps
+        out = out + pad[:, i:i + xBC.shape[1], :].astype(jnp.float32) \
+            * conv_w[i].astype(jnp.float32)
+    return jax.nn.silu(out + conv_b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def conv_step(x_t: jnp.ndarray, conv_cache: jnp.ndarray, conv_w, conv_b):
+    """One-token causal conv. x_t (B, C); conv_cache (B, K-1, C)."""
+    window = jnp.concatenate([conv_cache, x_t[:, None, :]], axis=1)
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                     conv_w.astype(jnp.float32))
+    new_cache = window[:, 1:, :]
+    return jax.nn.silu(out + conv_b.astype(jnp.float32)).astype(x_t.dtype), \
+        new_cache
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+                h0: jnp.ndarray, chunk: int = 64
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    x:  (b, S, nh, hd)   inputs (post-conv), grouped into heads
+    dt: (b, S, nh)       discretization step (post-softplus)
+    A:  (nh,)            negative decay rates
+    B:  (b, S, ng, ds)   input projections
+    C:  (b, S, ng, ds)   output projections
+    D:  (nh,)            skip connection
+    h0: (b, nh, hd, ds)  incoming state
+    Returns (y (b,S,nh,hd), h_final).
+    """
+    b, S, nh, hd = x.shape
+    ng, ds = B.shape[2], B.shape[3]
+    if S % chunk:
+        chunk = S  # smoke-test sizes
+    nc = S // chunk
+    rep = nh // ng
+
+    xc = x.reshape(b, nc, chunk, nh, hd)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    Bc = B.reshape(b, nc, chunk, ng, ds)
+    Cc = C.reshape(b, nc, chunk, ng, ds)
+
+    dA = dtc * A[None, None, None, :]                  # (b,nc,L,nh) (<=0)
+    l = jnp.cumsum(dA, axis=2)                         # log-decay cumsum
+    l_last = l[:, :, -1:, :]                           # (b,nc,1,nh)
+
+    # intra-chunk (attention-like, causal):
+    # att[i,j] = (C_i . B_j) * exp(l_i - l_j) * dt_j   for j <= i
+    CB = jnp.einsum("bnigs,bnjgs->bngij",
+                    Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    CB = jnp.repeat(CB, rep, axis=2)                   # (b,nc,nh,L,L)
+    li = l[..., None, :].transpose(0, 1, 3, 2, 4)      # -> (b,nc,nh,L,1)?
+    decay = jnp.exp(
+        l.transpose(0, 1, 3, 2)[..., :, None]          # (b,nc,nh,L,1) l_i
+        - l.transpose(0, 1, 3, 2)[..., None, :])       # (b,nc,nh,1,L) l_j
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    att = jnp.where(causal[None, None, None], CB * decay, 0.0)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]      # (b,nc,L,nh,hd)
+    y_intra = jnp.einsum("bngij,bnjgh->bnigh", att,
+                         xdt.transpose(0, 1, 2, 3, 4))
+
+    # chunk state contribution: S_n = sum_j exp(l_last - l_j) B_j (x dt)_j
+    w = jnp.exp(l_last - l)                            # (b,nc,L,nh)
+    Br = jnp.repeat(Bc, rep, axis=3)                   # (b,nc,L,nh,ds)
+    S_chunk = jnp.einsum("bnjgh,bnjgs->bnghs",
+                         xdt * w[..., None], Br.astype(jnp.float32))
+
+    # inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(l_last[:, :, 0, :])          # (b,nc,nh)
+
+    def step(h, inp):
+        S_n, dec = inp                                 # (b,nh,hd,ds),(b,nh)
+        y_state_in = h                                 # state BEFORE chunk
+        h_new = h * dec[..., None, None] + S_n
+        return h_new, y_state_in
+
+    (h_final, h_before) = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (S_chunk.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)       # (b,nc,nh,hd,ds)
+
+    # inter-chunk output: y_i += C_i . (h_before * exp(l_i))
+    Cr = jnp.repeat(Cc, rep, axis=3)                   # (b,nc,L,nh,ds)
+    y_inter = jnp.einsum("bnigs,bnghs->bnigh",
+                         Cr.astype(jnp.float32) * jnp.exp(l)[..., None],
+                         h_before)
+    y = y_intra + y_inter + xc.astype(jnp.float32) * D[None, None, None, :,
+                                                       None]
+    return (y.reshape(b, S, nh, hd).astype(x.dtype),
+            h_final.astype(jnp.float32))
+
+
+def ssd_decode_step(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                    B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+                    h: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent update for one token.
+
+    x (b, nh, hd); dt (b, nh); B/C (b, ng, ds); h (b, nh, hd, ds).
+    """
+    nh, ng = x.shape[1], B.shape[1]
+    rep = nh // ng
+    dA = jnp.exp(dt * A[None, :])                      # (b, nh)
+    Br = jnp.repeat(B, rep, axis=1)                    # (b, nh, ds)
+    Cr = jnp.repeat(C, rep, axis=1)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    h_new = h * dA[..., None, None] \
+        + xdt[..., None] * Br[:, :, None, :].astype(jnp.float32)
+    y = jnp.einsum("bghs,bgs->bgh", h_new, Cr.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x.dtype), h_new
+
+
+def mamba_block(p: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
+                policy: PrecisionPolicy, h0: jnp.ndarray,
+                chunk: int = 64,
+                seq_mask: jnp.ndarray | None = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full Mamba2 block over a sequence. x: (B, S, D).
+
+    ``seq_mask`` (B, S): 1 for real tokens, 0 for right-padding. Padded
+    steps get dt=0 (decay 1, zero input) so the final state equals the
+    state after each row's last real token — required for padded batched
+    prefill in the serving engine.
+
+    Returns (out, final_ssm_state, conv_tail) where conv_tail is the last
+    (conv_width - 1) raw xBC inputs — the decode-time conv cache.
+    """
+    d = ssm_dims(cfg)
+    res = x
+    xn = rms_norm(x, p["norm"])
+    zxbcdt = linear_apply(p["w_in"], xn, policy)
+    z, xBC, dt = _split_in_proj(zxbcdt, cfg)
+    K = cfg.ssm_conv_width
+    xBC_raw = xBC
+    # decode-time conv cache: last K-1 raw inputs *of each row's real
+    # sequence* (right-padding means the tail must be gathered at the
+    # per-row true length, not at the padded end)
+    S_in = xBC_raw.shape[1]
+    if seq_mask is not None:
+        row_len = jnp.sum(seq_mask, axis=1).astype(jnp.int32)   # (B,)
+    else:
+        row_len = jnp.full((xBC_raw.shape[0],), S_in, jnp.int32)
+    idx = row_len[:, None] - (K - 1) + jnp.arange(K - 1)[None, :]
+    valid = (idx >= 0) & (idx < S_in)
+    tail = jnp.take_along_axis(
+        xBC_raw, jnp.clip(idx, 0, S_in - 1)[:, :, None], axis=1)
+    tail = tail * valid[:, :, None].astype(tail.dtype)
+    xBC = causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :d["d_inner"]]
+    Bs = xBC[..., d["d_inner"]:d["d_inner"] + d["ngroups"] * d["dstate"]]
+    Cs = xBC[..., d["d_inner"] + d["ngroups"] * d["dstate"]:]
+    b, S = x.shape[0], x.shape[1]
+    xs = xs.reshape(b, S, d["nheads"], d["headdim"])
+    Bs = Bs.reshape(b, S, d["ngroups"], d["dstate"])
+    Cs = Cs.reshape(b, S, d["ngroups"], d["dstate"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    if seq_mask is not None:
+        dt = dt * seq_mask[..., None].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = ssd_chunked(xs, dt, A, Bs, Cs,
+                       p["D"].astype(jnp.float32), h0, chunk)
+    y = y.reshape(b, S, d["d_inner"])
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"])
+    out = linear_apply(p["w_out"], y, policy)
+    return res + out, h, tail
+
+
+def mamba_block_decode(p: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
+                       policy: PrecisionPolicy, h: jnp.ndarray,
+                       conv_cache: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token Mamba2 step. x: (B, D); h (B,nh,hd,ds);
+    conv_cache (B, K-1, conv_channels)."""
+    d = ssm_dims(cfg)
+    res = x
+    xn = rms_norm(x, p["norm"])
+    zxbcdt = linear_apply(p["w_in"], xn, policy)
+    z, xBC, dt = _split_in_proj(zxbcdt, cfg)
+    xBC, conv_cache = conv_step(xBC, conv_cache, p["conv_w"], p["conv_b"])
+    b = x.shape[0]
+    xs = xBC[..., :d["d_inner"]].reshape(b, d["nheads"], d["headdim"])
+    Bs = xBC[..., d["d_inner"]:d["d_inner"] + d["ngroups"] * d["dstate"]] \
+        .reshape(b, d["ngroups"], d["dstate"])
+    Cs = xBC[..., d["d_inner"] + d["ngroups"] * d["dstate"]:] \
+        .reshape(b, d["ngroups"], d["dstate"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = ssd_decode_step(xs, dt, A, Bs, Cs,
+                           p["D"].astype(jnp.float32), h)
+    y = y.reshape(b, d["d_inner"])
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"])
+    out = linear_apply(p["w_out"], y, policy)
+    return res + out, h, conv_cache
+
+
+def init_mamba_layer(key, cfg: ModelConfig, dtype=jnp.float32
+                     ) -> Dict[str, Any]:
+    d = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    return {
+        "norm": jnp.ones((D,), dtype),
+        "w_in": (jax.random.normal(ks[0], (D, d["d_in_proj"]), jnp.float32)
+                 * D ** -0.5).astype(dtype),
+        "w_out": (jax.random.normal(ks[1], (d["d_inner"], D), jnp.float32)
+                  * d["d_inner"] ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(
+            ks[2], (cfg.ssm_conv_width, d["conv_channels"]), jnp.float32)
+            * 0.3).astype(dtype),
+        "conv_b": jnp.zeros((d["conv_channels"],), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, d["nheads"])).astype(dtype),
+        "D": jnp.ones((d["nheads"],), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, d["nheads"]))).astype(dtype),
+        "gate_norm": jnp.ones((d["d_inner"],), dtype),
+    }

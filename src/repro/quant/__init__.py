@@ -1,0 +1,9 @@
+from repro.quant.int8 import (  # noqa: F401
+    quantize_int8, dequantize_int8, Int8Weight,
+)
+from repro.quant.nf4 import (  # noqa: F401
+    quantize_nf4, dequantize_nf4, NF4Weight, NF4_CODEBOOK,
+)
+from repro.quant.apply import (  # noqa: F401
+    linear_init, linear_apply, quantize_params, dequantize_weight,
+)

@@ -1,0 +1,102 @@
+"""Vector-wise absmax int8 weight quantization (LLM.int8, TPU-adapted).
+
+Paper §2: "LLM.int8 performs 8-bit matrix multiplications with
+outlier-aware mixed precision, isolating rows or columns with large
+activation features and computing them in 16-bit".
+
+TPU adaptation (DESIGN.md §2): there is no mixed-precision warp path on
+TPU. We keep the *algorithm* — vector-wise (per-output-column) absmax
+scales plus an outlier decomposition — but realize it as:
+
+* int8 codes + per-column f32 scales, stored contiguously in (8,128)-
+  friendly layout;
+* an optional thin 16-bit slice of outlier *input columns* computed as a
+  second matmul and added back (the LLM.int8 decomposition at the XLA
+  level rather than inside a CUDA kernel).
+
+The Pallas ``quant_matmul`` kernel consumes exactly this representation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+
+class Int8Weight(NamedTuple):
+    """Quantized (in_dim, out_dim) weight.
+
+    ``codes``  int8  (in_dim, out_dim)
+    ``scale``  f32   (out_dim,)           absmax / 127 per output column
+    ``outlier_idx``  int32 (n_outliers,)  input rows kept in 16-bit
+    ``outlier_w``    bf16  (n_outliers, out_dim)
+    """
+    codes: jnp.ndarray
+    scale: jnp.ndarray
+    outlier_idx: jnp.ndarray
+    outlier_w: jnp.ndarray
+
+
+def quantize_int8(w: jnp.ndarray, outlier_fraction: float = 0.0
+                  ) -> Int8Weight:
+    """Vector-wise absmax quantization with optional outlier split.
+
+    Outlier *input rows* (those with the largest L-inf norm — the rows
+    multiplied by outlier activation features) are zeroed in the int8
+    codes and kept in a thin bf16 matrix, mirroring LLM.int8's
+    decomposition.
+    """
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D weight, got {w.shape}")
+    w = w.astype(jnp.float32)
+    in_dim = w.shape[0]
+    n_out = int(round(outlier_fraction * in_dim))
+    if n_out > 0:
+        row_mag = jnp.max(jnp.abs(w), axis=1)
+        # top-n_out rows by magnitude
+        outlier_idx = jnp.argsort(-row_mag)[:n_out].astype(jnp.int32)
+        outlier_w = w[outlier_idx].astype(jnp.bfloat16)
+        w = w.at[outlier_idx].set(0.0)
+    else:
+        outlier_idx = jnp.zeros((0,), jnp.int32)
+        outlier_w = jnp.zeros((0, w.shape[1]), jnp.bfloat16)
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(w / scale[None, :]), -127, 127).astype(jnp.int8)
+    return Int8Weight(codes=codes, scale=scale, outlier_idx=outlier_idx,
+                      outlier_w=outlier_w)
+
+
+def dequantize_int8(q: Int8Weight, dtype=jnp.bfloat16) -> jnp.ndarray:
+    w = q.codes.astype(jnp.float32) * q.scale[None, :]
+    if q.outlier_idx.shape[0]:
+        w = w.at[q.outlier_idx].add(q.outlier_w.astype(jnp.float32))
+    return w.astype(dtype)
+
+
+def int8_matmul(x: jnp.ndarray, q: Int8Weight,
+                compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Reference path: dequant-then-matmul plus the thin outlier matmul.
+
+    XLA fuses the dequant into the dot; this is the exact computation the
+    Pallas kernel performs tile-by-tile in VMEM.
+    """
+    main = jnp.einsum(
+        "...k,kn->...n",
+        x.astype(compute_dtype),
+        (q.codes.astype(jnp.float32) * q.scale[None, :]).astype(compute_dtype),
+        preferred_element_type=jnp.float32)
+    if q.outlier_idx.shape[0]:
+        x_out = jnp.take(x, q.outlier_idx, axis=-1).astype(compute_dtype)
+        main = main + jnp.einsum("...k,kn->...n", x_out,
+                                 q.outlier_w.astype(compute_dtype),
+                                 preferred_element_type=jnp.float32)
+    return main.astype(compute_dtype)
+
+
+def quantization_error(w: jnp.ndarray, q: Int8Weight) -> float:
+    """Relative Frobenius error — used by property tests."""
+    deq = dequantize_int8(q, jnp.float32)
+    num = jnp.linalg.norm(w.astype(jnp.float32) - deq)
+    den = jnp.linalg.norm(w.astype(jnp.float32)) + 1e-12
+    return float(num / den)

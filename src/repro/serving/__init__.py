@@ -1,0 +1,4 @@
+from repro.serving.requests import Request, RequestStatus  # noqa: F401
+from repro.serving.arrival import (fixed_arrivals, uniform_random_arrivals,  # noqa: F401
+                                   poisson_arrivals, burst_arrivals)
+from repro.serving.engine import ServeEngine, ServeReport  # noqa: F401

@@ -1,0 +1,39 @@
+"""Arrival shaping — the paper's §5 lever.
+
+Patterns evaluated in the paper:
+* random delays:  t_i = sum of U(k, l) gaps   (Fig 3a/3b)
+* fixed intervals: constant spacing (50/300/500 ms)  (Fig 3c)
+plus Poisson (the standard open-loop model) and burst for completeness.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+def fixed_arrivals(n: int, interval_s: float, start: float = 0.0
+                   ) -> List[float]:
+    return [start + i * interval_s for i in range(n)]
+
+
+def uniform_random_arrivals(n: int, low_s: float, high_s: float,
+                            seed: int = 0, start: float = 0.0
+                            ) -> List[float]:
+    rng = np.random.default_rng(seed)
+    gaps = rng.uniform(low_s, high_s, size=n)
+    t = start + np.cumsum(gaps)
+    return list(t - gaps[0])           # first request at start
+
+
+def poisson_arrivals(n: int, rate_per_s: float, seed: int = 0,
+                     start: float = 0.0) -> List[float]:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_per_s, size=n)
+    t = start + np.cumsum(gaps)
+    return list(t - gaps[0])
+
+
+def burst_arrivals(n: int, burst_size: int, burst_gap_s: float,
+                   start: float = 0.0) -> List[float]:
+    return [start + (i // burst_size) * burst_gap_s for i in range(n)]

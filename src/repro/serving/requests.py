@@ -1,0 +1,44 @@
+"""Request lifecycle objects for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: Optional[np.ndarray]        # token ids; None in sim-only mode
+    prompt_len: int
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    # lifecycle
+    status: RequestStatus = RequestStatus.QUEUED
+    t_prefill_start: float = -1.0
+    t_first_token: float = -1.0
+    t_done: float = -1.0
+    tokens_generated: int = 0
+    generated: list = dataclasses.field(default_factory=list)
+    # accounting
+    energy_j: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.arrival_time
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.arrival_time
+
+    @property
+    def energy_wh(self) -> float:
+        return self.energy_j / 3600.0

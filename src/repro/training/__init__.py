@@ -1,0 +1,3 @@
+from repro.training.optimizer import adamw_init, adamw_update, AdamWConfig  # noqa: F401
+from repro.training.losses import lm_loss, chunked_cross_entropy  # noqa: F401
+from repro.training.train_loop import TrainState, make_train_step, train  # noqa: F401

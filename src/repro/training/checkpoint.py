@@ -1,0 +1,89 @@
+"""Minimal npz checkpointing for params/optimizer pytrees.
+
+Flattens the pytree with '/'-joined key paths; quantized leaves
+(Int8Weight / NF4Weight NamedTuples) round-trip via their field names.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.int8 import Int8Weight
+from repro.quant.nf4 import NF4Weight
+
+_SEP = "//"
+_TYPES = {"Int8Weight": Int8Weight, "NF4Weight": NF4Weight}
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (Int8Weight, NF4Weight)):
+        tname = type(tree).__name__
+        for f, v in tree._asdict().items():
+            out.update(_flatten(v, f"{prefix}@{tname}.{f}{_SEP}"))
+    else:
+        key = prefix[:-len(_SEP)]
+        arr = np.asarray(tree)
+        if arr.dtype == jnp.bfloat16:
+            out[key + "@bf16"] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    return out
+
+
+def save_checkpoint(path: str, params: Any, opt_state: Any = None,
+                    step: int = 0) -> None:
+    flat = _flatten({"params": params})
+    if opt_state is not None:
+        flat.update(_flatten({"opt": opt_state}))
+    flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def _set_path(tree: Dict, keys, value):
+    node = tree
+    for k in keys[:-1]:
+        node = node.setdefault(k, {})
+    node[keys[-1]] = value
+
+
+def _rebuild(node):
+    if not isinstance(node, dict):
+        return node
+    keys = list(node.keys())
+    tagged = [k for k in keys if k.startswith("@")]
+    if tagged:
+        tname, _ = tagged[0][1:].split(".", 1)
+        cls = _TYPES[tname]
+        fields = {k[1:].split(".", 1)[1]: _rebuild(node[k]) for k in keys}
+        return cls(**fields)
+    return {k: _rebuild(v) for k, v in node.items()}
+
+
+def load_checkpoint(path: str):
+    """Returns (params, opt_state_or_None, step)."""
+    data = np.load(path, allow_pickle=False)
+    tree: Dict = {}
+    step = 0
+    for key in data.files:
+        if key == "__step__":
+            step = int(data[key])
+            continue
+        arr = data[key]
+        if key.endswith("@bf16"):
+            key = key[:-len("@bf16")]
+            arr = jnp.asarray(arr).view(jnp.bfloat16)
+        else:
+            arr = jnp.asarray(arr)
+        _set_path(tree, key.split(_SEP), arr)
+    params = _rebuild(tree.get("params", {}))
+    opt = _rebuild(tree["opt"]) if "opt" in tree else None
+    return params, opt, step

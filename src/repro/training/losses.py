@@ -1,0 +1,83 @@
+"""LM losses with sequence-chunked logits.
+
+Full logits for (256, 4096, 256k-vocab) would be ~0.5 TB — the LM head is
+therefore applied per sequence chunk inside a lax.scan (the logits tensor
+never materializes beyond one chunk). This is what lets the train_4k
+dry-run compile within per-device memory for the 256k-vocab archs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+from repro.quant.apply import linear_apply
+
+LOSS_CHUNK = 512
+
+
+def chunked_cross_entropy(hidden: jnp.ndarray, lm_head: Any,
+                          labels: jnp.ndarray, policy: PrecisionPolicy,
+                          mask: Optional[jnp.ndarray] = None,
+                          chunk: int = LOSS_CHUNK
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean next-token cross-entropy.
+
+    hidden: (B, S, D); labels: (B, S) — already shifted by the caller.
+    Returns (loss, n_tokens).
+    """
+    B, S, D = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+    h = hidden.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    y = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    mk = mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        hc, yc, mc = inp
+        logits = linear_apply(lm_head, hc, policy).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None],
+                                   axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (h, y, mk))
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+def lm_loss(model, params, batch: Dict[str, jnp.ndarray],
+            aux_weights: Optional[Dict[str, float]] = None,
+            remat: bool = False) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Next-token LM loss for any family; adds MoE aux losses."""
+    aux_weights = aux_weights or {"load_balance_loss": 0.01,
+                                  "router_z_loss": 1e-3}
+    hidden, aux = model.forward_train(params, batch, remat=remat)
+    tokens = batch["tokens"]
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    S = tokens.shape[1]
+    if hidden.shape[1] != S:      # vlm: drop patch positions
+        hidden = hidden[:, hidden.shape[1] - S:]
+    # last position has no next token
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    loss, n_tok = chunked_cross_entropy(hidden, params["lm_head"], labels,
+                                        model.policy, mask)
+    metrics = {"lm_loss": loss, "n_tokens": n_tok}
+    total = loss
+    for k, wgt in aux_weights.items():
+        if aux and k in aux:
+            total = total + wgt * aux[k]
+            metrics[k] = aux[k]
+    if aux and "dropped_fraction" in aux:
+        metrics["dropped_fraction"] = aux["dropped_fraction"]
+    metrics["total_loss"] = total
+    return total, metrics

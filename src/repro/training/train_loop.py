@@ -1,0 +1,67 @@
+"""Training loop: jit'd train_step (grad + AdamW) and the loop driver.
+
+``make_train_step`` returns the pure step function the multi-pod dry-run
+lowers with pjit shardings; ``train`` is the single-host driver used by
+the examples and smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.training.losses import lm_loss
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+def make_train_step(model: Model, opt_cfg: Optional[AdamWConfig] = None,
+                    remat: bool = False) -> Callable:
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(model, p, batch, remat=remat),
+            has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(model: Model, batches: Iterable[Dict[str, jnp.ndarray]],
+          n_steps: int, seed: int = 0,
+          opt_cfg: Optional[AdamWConfig] = None,
+          log_every: int = 10,
+          callback: Optional[Callable[[int, Dict], None]] = None
+          ) -> TrainState:
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    t0 = time.perf_counter()
+    it = iter(batches)
+    metrics: Dict[str, Any] = {}
+    for step in range(n_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if callback is not None:
+            callback(step, metrics)
+        if log_every and (step % log_every == 0 or step == n_steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            print(f"step {step:5d}  loss={m['lm_loss']:.4f}  "
+                  f"grad_norm={m['grad_norm']:.3f}  "
+                  f"({dt:.1f}s elapsed)", flush=True)
+    return TrainState(params=params, opt_state=opt_state, step=n_steps)

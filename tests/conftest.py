@@ -1,0 +1,33 @@
+import os
+import sys
+
+# tests see the single real CPU device (the 512-device override is
+# strictly limited to the dry-run launcher, per the assignment)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def batch_for(cfg, tokens, seed: int = 5):
+    """Build a model input batch for any family."""
+    b = {"tokens": tokens}
+    B, S = tokens.shape
+    if cfg.family == "vlm":
+        b["patches"] = (jax.random.normal(
+            jax.random.PRNGKey(seed), (B, cfg.num_patches, cfg.d_model))
+            * 0.1).astype(jnp.bfloat16)
+    if cfg.family == "audio":
+        b["frames"] = (jax.random.normal(
+            jax.random.PRNGKey(seed + 1),
+            (B, max(S // cfg.enc_frames_ratio, 1), cfg.d_model))
+            * 0.1).astype(jnp.bfloat16)
+    return b

@@ -1,0 +1,131 @@
+"""Batching tests: static padding accounting, paged KV allocator
+invariants (hypothesis-driven), continuous batcher scheduling."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.batching import (pad_batch, bucket_length, StaticBatcher,
+                            PagedKVAllocator, ContinuousBatcher)
+from repro.serving.requests import Request
+
+
+class TestStatic:
+    def test_pad_counts(self):
+        b = pad_batch([np.zeros(3, np.int32), np.zeros(7, np.int32)])
+        assert b.tokens.shape == (2, 7)
+        assert b.effective_tokens == 10
+        assert b.computed_tokens == 14
+        assert b.padding_fraction == pytest.approx(4 / 14)
+
+    def test_bucketing_rounds_up(self):
+        assert bucket_length(100) == 128
+        assert bucket_length(129) == 256
+        assert bucket_length(5000) == 8192
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(1, 300), min_size=1, max_size=16))
+    def test_property_padding(self, lens):
+        b = pad_batch([np.zeros(n, np.int32) for n in lens])
+        assert b.tokens.shape == (len(lens), max(lens))
+        assert b.effective_tokens == sum(lens)
+        assert b.computed_tokens >= b.effective_tokens
+        bb = pad_batch([np.zeros(n, np.int32) for n in lens], bucket=True)
+        assert bb.tokens.shape[1] >= b.tokens.shape[1]
+
+    def test_static_batcher_groups(self):
+        prompts = [np.zeros(n, np.int32) for n in (5, 6, 7, 8, 9)]
+        batches = list(StaticBatcher(2).batches(prompts))
+        assert [b.tokens.shape[0] for b in batches] == [2, 2, 1]
+
+
+class TestPagedAllocator:
+    def test_alloc_extend_release(self):
+        a = PagedKVAllocator(16, page_size=4)
+        t = a.allocate(1, 5)          # 2 pages
+        assert len(t.pages) == 2
+        a.extend(1, 3)                # 8 tokens -> still 2 pages
+        assert len(a.tables[1].pages) == 2
+        a.extend(1, 1)                # 9 tokens -> 3 pages
+        assert len(a.tables[1].pages) == 3
+        a.release(1)
+        assert a.used_pages == 0
+        a.check_invariants()
+
+    def test_oom(self):
+        a = PagedKVAllocator(2, page_size=4)
+        a.allocate(1, 8)
+        with pytest.raises(MemoryError):
+            a.allocate(2, 1)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["alloc", "extend",
+                                               "release"]),
+                              st.integers(0, 7), st.integers(1, 40)),
+                    min_size=1, max_size=60))
+    def test_property_invariants(self, ops):
+        """Random op sequences never double-allocate or leak pages."""
+        a = PagedKVAllocator(64, page_size=8)
+        for op, sid, n in ops:
+            try:
+                if op == "alloc" and sid not in a.tables:
+                    a.allocate(sid, n)
+                elif op == "extend" and sid in a.tables:
+                    a.extend(sid, n)
+                elif op == "release" and sid in a.tables:
+                    a.release(sid)
+            except MemoryError:
+                pass
+            a.check_invariants()
+
+    def test_utilization(self):
+        a = PagedKVAllocator(8, page_size=8)
+        a.allocate(1, 4)             # 1 page, half full
+        assert a.utilization() == pytest.approx(0.5)
+
+
+def _req(i, plen=10, out=4, t=0.0):
+    return Request(req_id=i, prompt=None, prompt_len=plen,
+                   max_new_tokens=out, arrival_time=t)
+
+
+class TestContinuousBatcher:
+    def test_prefill_respects_slots(self):
+        b = ContinuousBatcher(2, kv_pages=1024)
+        for i in range(5):
+            b.admit(_req(i))
+        picks = b.schedule_prefill()
+        assert len(picks) == 2
+        assert b.n_live == 2
+        assert len(b.waiting) == 3
+
+    def test_memory_admission_blocks(self):
+        b = ContinuousBatcher(4, kv_pages=2, page_size=8)
+        b.admit(_req(0, plen=8, out=8))      # needs 2 pages worst case
+        b.admit(_req(1, plen=8, out=8))
+        picks = b.schedule_prefill()
+        assert len(picks) == 1               # second blocked on memory
+        b.finish(picks[0][0])
+        assert len(b.schedule_prefill()) == 1
+
+    def test_finish_frees_everything(self):
+        b = ContinuousBatcher(2, kv_pages=64)
+        b.admit(_req(0))
+        (slot, r), = b.schedule_prefill()
+        b.step_decode_bookkeeping()
+        b.finish(slot)
+        assert b.n_live == 0
+        b.kv.check_invariants()
+        assert b.kv.used_pages == 0
+
+    def test_length_grouped_prefill(self):
+        """The beyond-paper bucket-grouped prefill: a 4000-token request
+        does not get padded together with 150-token ones."""
+        b = ContinuousBatcher(8, kv_pages=4096)
+        b.admit(_req(0, plen=150))
+        b.admit(_req(1, plen=4000))
+        b.admit(_req(2, plen=160))
+        picks = b.schedule_prefill()
+        lens = sorted(r.prompt_len for _, r in picks)
+        assert lens == [150, 160]            # 4000 left for next batch
+        picks2 = b.schedule_prefill()
+        assert [r.prompt_len for _, r in picks2] == [4000]

@@ -1,0 +1,140 @@
+"""Quantization unit + property tests (int8 vector-wise, NF4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_policy
+from repro.quant import (quantize_int8, dequantize_int8, quantize_nf4,
+                         dequantize_nf4, linear_apply, quantize_params)
+from repro.quant.int8 import quantization_error, int8_matmul
+from repro.quant.nf4 import nf4_quantization_error, NF4_CODEBOOK
+
+
+def _w(shape, seed=0, scale=0.05):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+class TestInt8:
+    def test_roundtrip_error_small(self):
+        w = _w((256, 128))
+        q = quantize_int8(w)
+        assert quantization_error(w, q) < 0.01
+
+    def test_outlier_split_reduces_error(self):
+        # inject huge outlier rows — the LLM.int8 motivation
+        w = np.array(_w((256, 128)))
+        w[7] *= 100.0
+        w[123] *= 80.0
+        w = jnp.asarray(w)
+        e_plain = quantization_error(w, quantize_int8(w, 0.0))
+        e_outlier = quantization_error(w, quantize_int8(w, 0.02))
+        assert e_outlier < e_plain * 0.5
+
+    def test_matmul_close(self):
+        w = _w((256, 128))
+        x = _w((8, 256), seed=1, scale=1.0)
+        q = quantize_int8(w)
+        y = int8_matmul(x, q, jnp.float32)
+        rel = jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w)
+        assert float(rel) < 0.02
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 8), st.integers(1, 8),
+           st.floats(0.01, 10.0), st.integers(0, 2**31 - 1))
+    def test_property_bounded_error(self, rows8, cols8, scale, seed):
+        """|w - dq(q(w))|_inf <= absmax/254 per column, any scale/shape."""
+        w = jax.random.normal(jax.random.PRNGKey(seed),
+                              (rows8 * 8, cols8 * 8)) * scale
+        q = quantize_int8(w)
+        deq = dequantize_int8(q, jnp.float32)
+        absmax = jnp.max(jnp.abs(w), axis=0)
+        bound = absmax / 254.0 + 1e-6
+        assert bool(jnp.all(jnp.abs(w - deq) <= bound[None, :] * 1.001))
+
+    def test_scale_invariance(self):
+        """quantize(k*w) == k*quantize(w) codes (absmax is linear)."""
+        w = _w((64, 32))
+        q1 = quantize_int8(w)
+        q2 = quantize_int8(4.0 * w)
+        assert bool(jnp.all(q1.codes == q2.codes))
+
+
+class TestNF4:
+    def test_codebook_properties(self):
+        cb = np.asarray(NF4_CODEBOOK)
+        assert cb[0] == -1.0 and cb[-1] == 1.0 and cb[7] == 0.0
+        assert np.all(np.diff(cb) > 0)
+
+    def test_roundtrip_error(self):
+        w = _w((256, 128))
+        q = quantize_nf4(w, 64)
+        assert nf4_quantization_error(w, q) < 0.15
+
+    def test_block_derivation(self):
+        q = quantize_nf4(_w((256, 32)), 32)
+        assert q.block == 32
+        assert q.packed.shape == (128, 32)
+        assert q.absmax.shape == (8, 32)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.sampled_from([16, 32, 64]), st.integers(0, 2**31 - 1),
+           st.floats(0.01, 5.0))
+    def test_property_block_bounded(self, block, seed, scale):
+        """Per-block: error <= absmax * max code gap / 2."""
+        w = jax.random.normal(jax.random.PRNGKey(seed), (128, 16)) * scale
+        q = quantize_nf4(w, block)
+        deq = dequantize_nf4(q, jnp.float32)
+        gap = float(np.max(np.diff(np.asarray(NF4_CODEBOOK)))) / 2
+        wb = w.reshape(-1, block, 16)
+        err = jnp.abs(w - deq).reshape(-1, block, 16)
+        bound = q.absmax[:, None, :] * gap * 1.01 + 1e-6
+        assert bool(jnp.all(err <= bound))
+
+    def test_exact_at_codebook_points(self):
+        """Weights already on codebook points quantize exactly."""
+        cb = np.asarray(NF4_CODEBOOK)
+        w = jnp.asarray(np.tile(cb, (4, 8)).T.reshape(64, 8),
+                        jnp.float32)
+        q = quantize_nf4(w, 64)
+        deq = dequantize_nf4(q, jnp.float32)
+        assert float(jnp.max(jnp.abs(deq - w))) < 1e-6
+
+
+class TestPolicyDispatch:
+    @pytest.mark.parametrize("fmt", ["float32", "bfloat16", "int8", "nf4"])
+    def test_linear_apply_all_formats(self, fmt):
+        w = _w((128, 64))
+        x = _w((4, 128), seed=1, scale=1.0)
+        pol = make_policy(fmt)
+        params = {"wq": w}
+        qp = quantize_params(params, pol)
+        y = linear_apply(qp["wq"], x, pol)
+        ref = x @ w
+        rel = float(jnp.linalg.norm(y.astype(jnp.float32) - ref)
+                    / jnp.linalg.norm(ref))
+        tol = {"float32": 1e-6, "bfloat16": 0.02, "int8": 0.03,
+               "nf4": 0.2}[fmt]
+        assert rel < tol
+
+    def test_quantize_params_skips_norms_and_router(self):
+        pol = make_policy("int8")
+        params = {"attn_norm": jnp.ones((64,)),
+                  "w_router": _w((64, 8)),
+                  "wq": _w((64, 64))}
+        qp = quantize_params(params, pol)
+        assert isinstance(qp["attn_norm"], jnp.ndarray)
+        assert isinstance(qp["w_router"], jnp.ndarray)
+        assert not isinstance(qp["wq"], jnp.ndarray)
+
+    def test_stacked_quantization(self):
+        pol = make_policy("nf4")
+        params = {"w_gate": _w((3, 128, 64))}
+        qp = quantize_params(params, pol)
+        assert qp["w_gate"].packed.shape == (3, 64, 64)
+
+    def test_weight_bits(self):
+        assert make_policy("int8").weight_bits == 8
+        assert make_policy("float32").weight_bits == 32
+        assert 4 < make_policy("nf4").weight_bits < 5
