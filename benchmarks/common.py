@@ -14,31 +14,11 @@ import os
 import time
 from typing import Callable, Dict, List
 
-from repro.configs.base import ModelConfig
+# the paper's §2 model selection (single source of truth in src)
+from repro.configs.paper_zoo import PAPER_MODELS  # noqa: F401
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..",
                            "experiments", "bench")
-
-
-def _dense(name, L, d, H, kv, ff, V=151936) -> ModelConfig:
-    return ModelConfig(name=name, family="dense", num_layers=L, d_model=d,
-                       num_heads=H, num_kv_heads=kv, d_ff=ff, vocab_size=V,
-                       source="paper §2 benchmark zoo")
-
-
-# the paper's §2 model selection
-PAPER_MODELS: Dict[str, ModelConfig] = {
-    "qwen2.5-0.5b": _dense("qwen2.5-0.5b", 24, 896, 14, 2, 4864),
-    "qwen2.5-1.5b": _dense("qwen2.5-1.5b", 28, 1536, 12, 2, 8960),
-    "qwen2.5-3b": _dense("qwen2.5-3b", 36, 2048, 16, 2, 11008),
-    "qwen2.5-7b": _dense("qwen2.5-7b", 28, 3584, 28, 4, 18944),
-    "qwen2.5-14b": _dense("qwen2.5-14b", 48, 5120, 40, 8, 13824),
-    "mistral-7b": _dense("mistral-7b", 32, 4096, 32, 8, 14336, 32768),
-    "llama-3.1-8b": _dense("llama-3.1-8b", 32, 4096, 32, 8, 14336,
-                           128256),
-    "llama-3.1-70b": _dense("llama-3.1-70b", 80, 8192, 64, 8, 28672,
-                            128256),
-}
 
 PAPER_PROMPT_MEAN = 1200        # §3.1: s_mean ~ 1200
 PAPER_OUTPUT_MEAN = 80          # §2: outputs 10-300, chat-like
@@ -58,6 +38,25 @@ def save_results(bench: str, rows: List[Dict]) -> None:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, bench + ".json"), "w") as f:
         json.dump(rows, f, indent=1)
+
+
+def paper_requests(n: int, arrivals, seed: int = 0,
+                   prompt_range=None) -> list:
+    """Serving requests sampled from the paper's §2/§3.1 workload
+    distribution (shared by the serving and cluster benchmarks)."""
+    from repro.serving import Request
+    from repro.training.data import RequestDistribution
+    kw = {"seed": seed}
+    if prompt_range is not None:
+        kw["prompt_range"] = prompt_range
+    dist = RequestDistribution(**kw)
+    out = []
+    for i in range(n):
+        s = dist.sample()
+        out.append(Request(req_id=i, prompt=None, prompt_len=s.prompt_len,
+                           max_new_tokens=s.output_len,
+                           arrival_time=arrivals[i]))
+    return out
 
 
 def timeit(fn: Callable, n: int = 3) -> float:

@@ -8,12 +8,11 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import Row, timeit, save_results
 from repro.configs import get_config
 from repro.models import build_model
-from repro.quant import quantize_int8, quantize_nf4
+from repro.quant import quantize_int8
 from repro.kernels.quant_matmul.kernel import int8_matmul_pallas
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.training import adamw_init, make_train_step

@@ -3,6 +3,7 @@
     fig 1a/1b + fig 4/5  -> benchmarks.precision
     fig 2a/2b + fig 6/7  -> benchmarks.batching
     fig 3a/3b/3c         -> benchmarks.serving
+    fleet / routing      -> benchmarks.cluster
     §6 macro estimate    -> benchmarks.macro
     roofline (ours, §g)  -> benchmarks.roofline_report
     CPU wall-time micro  -> benchmarks.microbench
@@ -10,22 +11,49 @@
 Prints ``name,us_per_call,derived`` CSV. Claim-check rows are named
 ``claim/...`` with pass/fail in the derived column; run.py exits
 non-zero if any claim fails.
+
+CLI:
+    --only a,b   run only the named benches
+    --quick      cheapest configuration (CI smoke): skips the
+                 real-compute microbench and shrinks the cluster sweep
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
 
 
-def main() -> None:
-    from benchmarks import precision, batching, serving, macro, \
-        roofline_report, microbench
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run")
+    ap.add_argument("--quick", action="store_true",
+                    help="cheapest/dry configuration for CI smoke")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        os.environ.setdefault("REPRO_CLUSTER_NREQ", "80")
+
+    from benchmarks import precision, batching, serving, cluster, \
+        macro, roofline_report, microbench
     benches = [("precision", precision.run),
                ("batching", batching.run),
                ("serving", serving.run),
+               ("cluster", cluster.run),
                ("macro", macro.run),
                ("roofline", roofline_report.run),
                ("microbench", microbench.run)]
+    if args.only:
+        want = {w.strip() for w in args.only.split(",")}
+        unknown = want - {n for n, _ in benches}
+        if unknown:
+            raise SystemExit(f"unknown benches: {sorted(unknown)}")
+        benches = [(n, fn) for n, fn in benches if n in want]
+    elif args.quick:    # an explicit --only selection wins over --quick
+        benches = [(n, fn) for n, fn in benches if n != "microbench"]
+
     print("name,us_per_call,derived")
     failed = []
     for name, fn in benches:

@@ -15,27 +15,15 @@ from __future__ import annotations
 
 from typing import List
 
-import numpy as np
-
-from benchmarks.common import (PAPER_MODELS, PAPER_OUTPUT_MEAN, Row,
+from benchmarks.common import (PAPER_MODELS, Row, paper_requests,
                                save_results)
-from repro.serving import (ServeEngine, Request, fixed_arrivals,
+from repro.serving import (ServeEngine, fixed_arrivals,
                            uniform_random_arrivals)
-from repro.training.data import RequestDistribution
 
 N_REQ = 400
 INTERVALS_MS = (10, 20, 50, 100, 300, 500)
 
-
-def _requests(n: int, arrivals, seed: int = 0) -> List[Request]:
-    dist = RequestDistribution(seed=seed)
-    out = []
-    for i in range(n):
-        s = dist.sample()
-        out.append(Request(req_id=i, prompt=None, prompt_len=s.prompt_len,
-                           max_new_tokens=s.output_len,
-                           arrival_time=arrivals[i]))
-    return out
+_requests = paper_requests
 
 
 def run() -> List[Row]:
@@ -90,15 +78,8 @@ def run() -> List[Row]:
     # EXPERIMENTS.md §Validation for the floor analysis. prompts 200-600
     # put the workload in that regime.
     def _short(n, arrivals, seed=0):
-        dist = RequestDistribution(seed=seed, prompt_range=(200, 600))
-        out = []
-        for i in range(n):
-            s = dist.sample()
-            out.append(Request(req_id=i, prompt=None,
-                               prompt_len=s.prompt_len,
-                               max_new_tokens=s.output_len,
-                               arrival_time=arrivals[i]))
-        return out
+        return paper_requests(n, arrivals, seed=seed,
+                              prompt_range=(200, 600))
 
     naive_s = record("short/naive_sequential_bf16", ServeEngine(
         cfg8, fmt="bfloat16", mode="sequential").run(

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import (ServeEngine, Request, fixed_arrivals,
+from repro.serving import (ServeEngine, Request,
                            uniform_random_arrivals)
 
 

@@ -20,9 +20,8 @@ results in §5 transfer.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, List, Optional
+from typing import TYPE_CHECKING, List, Optional
 
-import numpy as np
 
 from repro.batching.kvcache import PagedKVAllocator
 

@@ -13,7 +13,7 @@ fragmentation — which feeds the energy model's batch-size ceiling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 

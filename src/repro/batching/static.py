@@ -8,7 +8,7 @@ both counts so benchmarks can reproduce Fig. 2a/2b exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Sequence
 
 import numpy as np
 

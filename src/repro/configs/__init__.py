@@ -2,3 +2,4 @@ from repro.configs.base import (  # noqa: F401
     ModelConfig, ShapeConfig, INPUT_SHAPES, get_config, list_archs,
     get_shape,
 )
+from repro.configs.paper_zoo import PAPER_MODELS  # noqa: F401

@@ -52,6 +52,12 @@ class DeviceSpec:
     min_transaction_bytes: int
     # HBM capacity (bytes).
     hbm_capacity: float
+    # Power draw (W) when the fleet scheduler has power-gated the chip
+    # (clocks floored / low-power state). A gated chip cannot serve until
+    # woken; waking costs ``wake_latency_s`` at idle power (clock ramp)
+    # before the next phase can run — the cluster simulator charges it.
+    gated_power: float = 40.0
+    wake_latency_s: float = 0.25
 
     def peak_flops(self, bits: float) -> float:
         """Matmul peak for a given operand width (compute side).
@@ -85,6 +91,8 @@ H100_SXM = DeviceSpec(
     launch_overhead_fused=5e-6,   # TGI/CUDA-graph-ish dispatch
     min_transaction_bytes=64,
     hbm_capacity=80e9,
+    gated_power=45.0,           # deep low-power state, well under 120 W idle
+    wake_latency_s=0.25,        # clock/power ramp back to serving state
 )
 
 TPU_V5E = DeviceSpec(
@@ -101,6 +109,8 @@ TPU_V5E = DeviceSpec(
     launch_overhead_fused=2e-6,   # fused program per step)
     min_transaction_bytes=512,    # one 8x128 f32 tile row
     hbm_capacity=16e9,
+    gated_power=15.0,
+    wake_latency_s=0.1,
 )
 
 DEVICES = {d.name: d for d in (H100_SXM, TPU_V5E)}

@@ -13,11 +13,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Optional
 
 from repro.configs.base import ModelConfig
-from repro.core.energy import (EnergyModel, EnergyReport, PhaseWorkload,
-                               combine)
+from repro.core.energy import EnergyModel, EnergyReport, combine
 from repro.core.hardware import DeviceSpec, H100_SXM
 from repro.core.precision import PrecisionPolicy
 from repro.core import workload as W

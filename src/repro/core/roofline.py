@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.core.hardware import DeviceSpec, TPU_V5E
 

@@ -21,7 +21,7 @@ import argparse
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,7 @@ from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, ModelConfig,
                                 ShapeConfig, get_config)
 from repro.core import workload as W
 from repro.core.hlo_analysis import analyze_hlo
-from repro.core.roofline import parse_collective_bytes, RooflineTerms
+from repro.core.roofline import RooflineTerms
 from repro.core.hardware import TPU_V5E
 from repro.launch.mesh import make_production_mesh, n_chips
 from repro.launch import sharding as sh

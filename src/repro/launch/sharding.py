@@ -16,7 +16,7 @@ size divides evenly, so the same rules serve all 10 archs x 4 shapes.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import numpy as np

@@ -14,12 +14,24 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+try:                                    # jax >= 0.6: public top-level API
+    from jax import shard_map
+except ImportError:                     # older jax: experimental path, with
+    import functools                    # check_rep instead of check_vma
+
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    @functools.wraps(_shard_map_exp)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return _shard_map_exp(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma,
+                              **kw)
 
 from repro.core.precision import PrecisionPolicy
 from repro.quant.apply import linear_apply

@@ -110,7 +110,6 @@ def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
     CB = jnp.einsum("bnigs,bnjgs->bngij",
                     Cc.astype(jnp.float32), Bc.astype(jnp.float32))
     CB = jnp.repeat(CB, rep, axis=2)                   # (b,nc,nh,L,L)
-    li = l[..., None, :].transpose(0, 1, 3, 2, 4)      # -> (b,nc,nh,L,1)?
     decay = jnp.exp(
         l.transpose(0, 1, 3, 2)[..., :, None]          # (b,nc,nh,L,1) l_i
         - l.transpose(0, 1, 3, 2)[..., None, :])       # (b,nc,nh,1,L) l_j

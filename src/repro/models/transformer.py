@@ -13,7 +13,6 @@ lowers with O(chunk^2) attention memory.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

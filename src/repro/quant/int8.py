@@ -18,7 +18,7 @@ The Pallas ``quant_matmul`` kernel consumes exactly this representation.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax.numpy as jnp
 

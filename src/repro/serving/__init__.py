@@ -2,3 +2,9 @@ from repro.serving.requests import Request, RequestStatus  # noqa: F401
 from repro.serving.arrival import (fixed_arrivals, uniform_random_arrivals,  # noqa: F401
                                    poisson_arrivals, burst_arrivals)
 from repro.serving.engine import ServeEngine, ServeReport  # noqa: F401
+from repro.serving.router import (Router, RoundRobinRouter,  # noqa: F401
+                                  LeastLoadedRouter, ShortestWorkRouter,
+                                  EnergyAwareRouter, make_router,
+                                  POLICIES)
+from repro.serving.cluster import (ClusterEngine, ClusterReport,  # noqa: F401
+                                   make_cluster)

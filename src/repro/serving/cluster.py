@@ -1,0 +1,213 @@
+"""Multi-replica cluster serving: N ``ServeEngine`` replicas behind a
+routing policy, co-simulated against one shared arrival clock.
+
+This is the fleet-scale extension of the single-engine result: the
+paper shows orchestration dominates per-request energy on one device;
+at cluster scale the *router* decides how well each replica batches and
+how much fleet idle power is burned. The co-simulation is a
+conservative discrete-event loop over the replicas' stream primitives
+(:meth:`ServeEngine.stream_step` etc.):
+
+* the replica with work and the earliest local clock executes its next
+  phase (so replicas interleave correctly on the shared timeline),
+* when the next fleet event is an arrival, replicas without work are
+  first advanced to the arrival instant — accruing idle power, or gated
+  power when the policy gates idle replicas — and only then does the
+  router observe the fleet and place the request,
+* at the end, all replicas are aligned to the fleet wall clock, so
+  fleet energy includes the tail idle of early-finishing replicas (this
+  is what makes consolidate-and-gate policies comparable to spreading
+  policies on equal footing).
+
+Replicas may be heterogeneous: each owns its precision policy, device
+spec, ``max_batch`` and energy model, and the energy-aware router
+scores marginal energy per replica accordingly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.engine import ServeEngine, ServeReport
+from repro.serving.requests import Request
+from repro.serving.router import Router, make_router
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    """Fleet-level aggregate over per-replica :class:`ServeReport`s."""
+
+    replica_reports: List[ServeReport]
+    policy: str
+    wall_time_s: float
+
+    # -- fleet energy ---------------------------------------------------
+    @property
+    def total_energy_j(self) -> float:
+        return sum(r.total_energy_j for r in self.replica_reports)
+
+    @property
+    def busy_energy_j(self) -> float:
+        return sum(r.busy_energy_j for r in self.replica_reports)
+
+    @property
+    def idle_energy_j(self) -> float:
+        return sum(r.idle_energy_j for r in self.replica_reports)
+
+    @property
+    def gated_energy_j(self) -> float:
+        return sum(r.gated_energy_j for r in self.replica_reports)
+
+    # -- requests -------------------------------------------------------
+    @property
+    def requests(self) -> List[Request]:
+        return [r for rep in self.replica_reports for r in rep.requests]
+
+    @property
+    def n(self) -> int:
+        return len(self.requests)
+
+    @property
+    def mean_energy_per_request_wh(self) -> float:
+        return self.total_energy_j / max(self.n, 1) / 3600.0
+
+    @property
+    def requests_per_replica(self) -> List[int]:
+        return [rep.n for rep in self.replica_reports]
+
+    @property
+    def utilization_per_replica(self) -> List[float]:
+        # replica wall clocks are aligned to the fleet clock at end of
+        # run, so per-replica utilization is fleet utilization share
+        return [rep.utilization for rep in self.replica_reports]
+
+    @property
+    def idle_fraction_per_replica(self) -> List[float]:
+        return [(rep.idle_time_s + rep.gated_time_s)
+                / max(self.wall_time_s, 1e-12)
+                for rep in self.replica_reports]
+
+    def latency_percentiles(self, qs: Sequence[float] = (50, 90, 99)
+                            ) -> Dict[str, float]:
+        lat = [r.latency for r in self.requests]
+        return {f"p{int(q)}": (float(np.percentile(lat, q)) if lat
+                               else 0.0) for q in qs}
+
+    def ttft_percentiles(self, qs: Sequence[float] = (50, 90, 99)
+                         ) -> Dict[str, float]:
+        ttft = [r.ttft for r in self.requests]
+        return {f"p{int(q)}": (float(np.percentile(ttft, q)) if ttft
+                               else 0.0) for q in qs}
+
+    def summary(self) -> Dict[str, float]:
+        out = {
+            "policy": self.policy,
+            "n_replicas": len(self.replica_reports),
+            "n_requests": self.n,
+            "mean_energy_wh": self.mean_energy_per_request_wh,
+            "fleet_energy_j": self.total_energy_j,
+            "busy_energy_j": self.busy_energy_j,
+            "idle_energy_j": self.idle_energy_j,
+            "gated_energy_j": self.gated_energy_j,
+            "wall_time_s": self.wall_time_s,
+            "mean_utilization": float(
+                np.mean(self.utilization_per_replica)),
+            "mean_idle_fraction": float(
+                np.mean(self.idle_fraction_per_replica)),
+        }
+        for k, v in self.latency_percentiles().items():
+            out[f"latency_{k}_s"] = v
+        for k, v in self.ttft_percentiles().items():
+            out[f"ttft_{k}_s"] = v
+        return out
+
+
+class ClusterEngine:
+    """N continuous-mode replicas driven by one router on a shared
+    arrival clock."""
+
+    def __init__(self, replicas: List[ServeEngine],
+                 router: Optional[Router] = None, *,
+                 policy: str = "round_robin"):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        for r in replicas:
+            if r.mode != "continuous":
+                raise ValueError(
+                    "cluster replicas must be continuous-mode engines")
+        self.replicas = replicas
+        self.router = router if router is not None else \
+            make_router(policy)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request]) -> ClusterReport:
+        reqs = sorted(requests, key=lambda r: r.arrival_time)
+        for eng in self.replicas:
+            eng.stream_start()
+        pending = list(reqs)
+        head = 0
+        gate = self.router.gates_idle
+        self._gated = [False] * len(self.replicas)
+        while True:
+            t_arr = (pending[head].arrival_time
+                     if head < len(pending) else None)
+            ready = [eng for eng in self.replicas
+                     if eng.stream_can_step()]
+            nxt = min(ready, key=lambda e: e.stream_now) if ready \
+                else None
+            # arrivals at or before the earliest steppable clock are
+            # delivered FIRST — same-instant burst members must all be
+            # admitted before the prefill batch is formed, exactly as
+            # the single-engine loop admits arrivals <= now before
+            # scheduling
+            if nxt is not None and (t_arr is None
+                                    or nxt.stream_now < t_arr - 1e-12):
+                nxt.stream_step()
+                continue
+            if t_arr is None:
+                break
+            # next fleet event is an arrival: bring work-less replicas
+            # up to the arrival instant (idle or gated), then route
+            for j, eng in enumerate(self.replicas):
+                if eng.stream_now < t_arr and not eng.stream_can_step():
+                    eng.stream_idle(t_arr, gated=gate)
+                    if gate:
+                        self._gated[j] = True
+            req = pending[head]
+            head += 1
+            i = self.router.select(req, self.replicas, t_arr)
+            if self._gated[i]:
+                # waking a gated replica: clock ramp at idle power
+                # before it can serve again
+                self.replicas[i].stream_idle(
+                    self.replicas[i].stream_now
+                    + self.replicas[i].device.wake_latency_s)
+                self._gated[i] = False
+            self.replicas[i].stream_submit(req)
+        stuck = [i for i, eng in enumerate(self.replicas)
+                 if eng.stream_stuck()]
+        if stuck:
+            raise RuntimeError(
+                f"deadlock: replicas {stuck} hold waiting requests that "
+                "can never be scheduled (KV pool too small)")
+        # align every replica to the fleet wall clock so trailing idle
+        # (or gated) time is part of the fleet energy bill
+        t_end = max(eng.stream_now for eng in self.replicas)
+        for eng in self.replicas:
+            eng.stream_idle(t_end, gated=gate)
+        reports = [eng.stream_report() for eng in self.replicas]
+        return ClusterReport(replica_reports=reports,
+                             policy=self.router.name,
+                             wall_time_s=t_end)
+
+
+def make_cluster(cfg, n_replicas: int, *, policy: str = "round_robin",
+                 fmt: str = "bfloat16", max_batch: int = 32,
+                 **engine_kw) -> ClusterEngine:
+    """Homogeneous-fleet convenience constructor."""
+    replicas = [ServeEngine(cfg, fmt=fmt, mode="continuous",
+                            max_batch=max_batch, **engine_kw)
+                for _ in range(n_replicas)]
+    return ClusterEngine(replicas, make_router(policy))

@@ -21,7 +21,7 @@ Energy accounting (paper §5 methodology):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -43,7 +43,7 @@ _CACHE_BATCH_AXIS = {"k": 1, "v": 1, "ssm_state": 1, "conv": 1,
 @dataclasses.dataclass
 class ServeReport:
     requests: List[Request]
-    total_energy_j: float          # busy + idle
+    total_energy_j: float          # busy + idle (+ gated)
     busy_energy_j: float
     idle_energy_j: float
     wall_time_s: float
@@ -51,25 +51,40 @@ class ServeReport:
     mean_batch: float              # time-weighted live batch during decode
     n_prefill_batches: int = 0
     n_decode_steps: int = 0
+    # power-gated accounting (cluster serving: a router may gate an idle
+    # replica so it draws gated_power instead of idle_power)
+    gated_energy_j: float = 0.0
+    gated_time_s: float = 0.0
+    idle_time_s: float = 0.0
 
     @property
     def n(self) -> int:
         return len(self.requests)
 
     @property
+    def utilization(self) -> float:
+        return self.busy_time_s / max(self.wall_time_s, 1e-12)
+
+    @property
     def mean_energy_per_request_wh(self) -> float:
-        return self.total_energy_j / self.n / 3600.0
+        return self.total_energy_j / max(self.n, 1) / 3600.0
 
     @property
     def mean_attributed_energy_wh(self) -> float:
+        if not self.requests:
+            return 0.0
         return float(np.mean([r.energy_j for r in self.requests])) / 3600.0
 
     @property
     def mean_latency_s(self) -> float:
+        if not self.requests:
+            return 0.0
         return float(np.mean([r.latency for r in self.requests]))
 
     @property
     def mean_ttft_s(self) -> float:
+        if not self.requests:
+            return 0.0
         return float(np.mean([r.ttft for r in self.requests]))
 
     @property
@@ -91,6 +106,31 @@ class ServeReport:
         }
 
 
+@dataclasses.dataclass
+class _StreamState:
+    """Mutable per-run accounting for one continuous-mode stream.
+
+    The single-engine ``run()`` and the cluster co-simulation both drive
+    the engine through this state via the ``stream_*`` primitives, so
+    one replica can be advanced phase-by-phase against an external
+    (shared) arrival clock.
+    """
+
+    now: float = 0.0
+    busy_e: float = 0.0
+    idle_e: float = 0.0
+    gated_e: float = 0.0
+    busy_t: float = 0.0
+    idle_t: float = 0.0
+    gated_t: float = 0.0
+    batch_time: float = 0.0        # integral of live batch over decode time
+    decode_time: float = 0.0
+    n_prefills: int = 0
+    n_decode: int = 0
+    submitted: List[Request] = dataclasses.field(default_factory=list)
+    done: List[Request] = dataclasses.field(default_factory=list)
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, *, fmt: str = "bfloat16",
                  device: DeviceSpec = H100_SXM, n_chips: int = 1,
@@ -109,10 +149,13 @@ class ServeEngine:
         self.mode = mode
         self.stack = "fused" if mode == "continuous" else "eager"
         self.energy = energy_model_cls(device, self.policy)
-        self.batcher = ContinuousBatcher(
-            max_batch, kv_pages=kv_pages, page_size=page_size,
+        self.max_batch = max_batch
+        self._batcher_kw = dict(
+            kv_pages=kv_pages, page_size=page_size,
             max_prefill_batch=max_prefill_batch,
             bucket_prefill=bucket_prefill)
+        self.batcher = ContinuousBatcher(max_batch, **self._batcher_kw)
+        self._stream: Optional[_StreamState] = None
         self.execute = execute
         self.model = model
         self.params = params
@@ -186,77 +229,158 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def _run_continuous(self, reqs: List[Request]) -> ServeReport:
-        now, busy_e, idle_e, busy_t = 0.0, 0.0, 0.0, 0.0
-        batch_time = 0.0           # integral of live-batch over decode time
-        decode_time = 0.0
-        n_prefills = n_decode = 0
+        self.stream_start()
         pending = list(reqs)
-        done: List[Request] = []
-        b = self.batcher
-        while len(done) < len(reqs):
-            while pending and pending[0].arrival_time <= now + 1e-12:
-                b.admit(pending.pop(0))
-            picks = b.schedule_prefill()
-            if picks:
-                lens = [r.prompt_len for _, r in picks]
-                pad = bucket_length(max(lens)) if b.bucket_prefill \
-                    else max(lens)
-                rep = self.energy.evaluate(W.prefill_workload(
-                    self.cfg, len(picks), pad, stack=self.stack),
-                    self.n_chips)
-                now += rep.latency
-                busy_t += rep.latency
-                busy_e += rep.energy_j
-                n_prefills += 1
-                for _, r in picks:
-                    r.status = RequestStatus.RUNNING
-                    r.t_prefill_start = now - rep.latency
-                    r.t_first_token = now
-                    r.tokens_generated = 1
-                    r.energy_j += rep.energy_j / len(picks)
-                if self.execute:
-                    self._execute_prefill(picks, pad)
-                self._finish_ready(b, done, now)
-                continue
-            live = b.live_slots()
-            if live:
-                cache_lens = [b.slots[i].request.prompt_len
-                              + b.slots[i].request.tokens_generated
-                              for i in live]
-                rep = self.energy.evaluate(W.decode_step_workload(
-                    self.cfg, len(live), int(np.mean(cache_lens)),
-                    stack=self.stack), self.n_chips)
-                now += rep.latency
-                busy_t += rep.latency
-                busy_e += rep.energy_j
-                decode_time += rep.latency
-                batch_time += rep.latency * len(live)
-                n_decode += 1
-                b.step_decode_bookkeeping()
-                for i in live:
-                    r = b.slots[i].request
-                    r.tokens_generated += 1
-                    r.energy_j += rep.energy_j / len(live)
-                if self.execute:
-                    self._execute_decode(live)
-                self._finish_ready(b, done, now)
+        while len(self._stream.done) < len(reqs):
+            while (pending and pending[0].arrival_time
+                    <= self._stream.now + 1e-12):
+                self.stream_submit(pending.pop(0))
+            if self.stream_can_step():
+                self.stream_step()
                 continue
             if pending:
-                gap = pending[0].arrival_time - now
-                idle_e += self.device.idle_power * max(gap, 0.0)
-                now = pending[0].arrival_time
+                self.stream_idle(pending[0].arrival_time)
             else:   # waiting queue blocked on memory with nothing live
-                if b.waiting:
+                if self.batcher.waiting:
                     raise RuntimeError("deadlock: waiting requests cannot "
                                        "be scheduled (KV pool too small)")
                 break
-        mean_batch = batch_time / decode_time if decode_time else 0.0
-        return ServeReport(requests=reqs, total_energy_j=busy_e + idle_e,
-                           busy_energy_j=busy_e, idle_energy_j=idle_e,
-                           wall_time_s=now, busy_time_s=busy_t,
-                           mean_batch=mean_batch,
-                           n_prefill_batches=n_prefills,
-                           n_decode_steps=n_decode)
+        return self.stream_report()
+
+    # -- stream primitives (single-engine run + cluster co-simulation) --
+    def stream_start(self, t0: float = 0.0) -> None:
+        """Begin a fresh continuous-mode stream at clock ``t0``."""
+        if self.mode != "continuous":
+            raise RuntimeError("streams require mode='continuous'")
+        self.batcher = ContinuousBatcher(self.max_batch,
+                                         **self._batcher_kw)
+        self._stream = _StreamState(now=t0)
+        if self.execute:
+            import jax.numpy as jnp
+            self.cache = self.model.init_cache(self.max_batch,
+                                               self.buf_len)
+            self.slot_tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
+
+    @property
+    def stream_now(self) -> float:
+        return self._stream.now
+
+    @property
+    def stream_load(self) -> int:
+        """Requests on this replica that are not finished."""
+        return self.batcher.n_live + len(self.batcher.waiting)
+
+    def stream_outstanding_work(self) -> float:
+        """Outstanding token work: un-prefilled prompt tokens plus
+        remaining decode tokens of queued + running requests."""
+        b = self.batcher
+        work = sum(r.prompt_len + r.max_new_tokens for r in b.waiting)
+        work += sum(b.slots[i].request.max_new_tokens
+                    - b.slots[i].request.tokens_generated
+                    for i in b.live_slots())
+        return float(work)
+
+    def stream_submit(self, req: Request) -> None:
+        self._stream.submitted.append(req)
+        self.batcher.admit(req)
+
+    def stream_can_step(self) -> bool:
+        """True if the scheduler can make progress right now (a prefill
+        batch is admissible, or live slots can take a decode step)."""
+        b = self.batcher
+        if b.live_slots():
+            return True
+        if b.waiting and b.free_slots():
+            head = b.waiting[0]
+            return b.kv.can_allocate(head.prompt_len
+                                     + head.max_new_tokens)
+        return False
+
+    def stream_stuck(self) -> bool:
+        """Waiting requests exist but can never be scheduled (KV pool
+        too small and nothing live to release pages)."""
+        return bool(self.batcher.waiting) and not self.stream_can_step()
+
+    def stream_step(self) -> float:
+        """Execute one scheduler iteration (one prefill batch or one
+        decode step), advancing the stream clock. Returns the phase
+        latency (0.0 if there was nothing to do)."""
+        s, b = self._stream, self.batcher
+        picks = b.schedule_prefill()
+        if picks:
+            lens = [r.prompt_len for _, r in picks]
+            pad = bucket_length(max(lens)) if b.bucket_prefill \
+                else max(lens)
+            rep = self.energy.evaluate(W.prefill_workload(
+                self.cfg, len(picks), pad, stack=self.stack),
+                self.n_chips)
+            s.now += rep.latency
+            s.busy_t += rep.latency
+            s.busy_e += rep.energy_j
+            s.n_prefills += 1
+            for _, r in picks:
+                r.status = RequestStatus.RUNNING
+                r.t_prefill_start = s.now - rep.latency
+                r.t_first_token = s.now
+                r.tokens_generated = 1
+                r.energy_j += rep.energy_j / len(picks)
+            if self.execute:
+                self._execute_prefill(picks, pad)
+            self._finish_ready(b, s.done, s.now)
+            return rep.latency
+        live = b.live_slots()
+        if live:
+            cache_lens = [b.slots[i].request.prompt_len
+                          + b.slots[i].request.tokens_generated
+                          for i in live]
+            rep = self.energy.evaluate(W.decode_step_workload(
+                self.cfg, len(live), int(np.mean(cache_lens)),
+                stack=self.stack), self.n_chips)
+            s.now += rep.latency
+            s.busy_t += rep.latency
+            s.busy_e += rep.energy_j
+            s.decode_time += rep.latency
+            s.batch_time += rep.latency * len(live)
+            s.n_decode += 1
+            b.step_decode_bookkeeping()
+            for i in live:
+                r = b.slots[i].request
+                r.tokens_generated += 1
+                r.energy_j += rep.energy_j / len(live)
+            if self.execute:
+                self._execute_decode(live)
+            self._finish_ready(b, s.done, s.now)
+            return rep.latency
+        return 0.0
+
+    def stream_idle(self, until: float, gated: bool = False) -> None:
+        """Advance the stream clock to ``until``, accruing idle power —
+        or gated power, when a cluster router has power-gated this
+        replica for the gap."""
+        s = self._stream
+        gap = until - s.now
+        if gap <= 0:
+            return
+        if gated:
+            s.gated_e += self.device.gated_power * gap
+            s.gated_t += gap
+        else:
+            s.idle_e += self.device.idle_power * gap
+            s.idle_t += gap
+        s.now = until
+
+    def stream_report(self) -> ServeReport:
+        s = self._stream
+        mean_batch = (s.batch_time / s.decode_time
+                      if s.decode_time else 0.0)
+        return ServeReport(
+            requests=list(s.submitted),
+            total_energy_j=s.busy_e + s.idle_e + s.gated_e,
+            busy_energy_j=s.busy_e, idle_energy_j=s.idle_e,
+            wall_time_s=s.now, busy_time_s=s.busy_t,
+            mean_batch=mean_batch, n_prefill_batches=s.n_prefills,
+            n_decode_steps=s.n_decode, gated_energy_j=s.gated_e,
+            gated_time_s=s.gated_t, idle_time_s=s.idle_t)
 
     def _finish_ready(self, b: ContinuousBatcher, done: List[Request],
                       now: float) -> None:

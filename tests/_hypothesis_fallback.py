@@ -1,0 +1,112 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is absent.
+
+The container this repo is developed in cannot install new packages, but
+the test suite uses hypothesis property tests. CI installs the real
+hypothesis (see pyproject ``[test]`` extra) and this module is then
+never imported; locally, :mod:`tests.conftest` registers it in
+``sys.modules`` as a fallback so the suite still collects and runs.
+
+The fallback draws ``max_examples`` pseudo-random samples per test from
+a deterministic per-test RNG. It supports exactly the strategy surface
+this repo uses: integers, floats, lists, tuples, sampled_from, booleans.
+It does no shrinking and no example database — it is a sampler, not a
+property-testing engine.
+"""
+from __future__ import annotations
+
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                  max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq) -> _Strategy:
+    pool = list(seq)
+    return _Strategy(lambda rng: pool[int(rng.integers(len(pool)))])
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters)
+        is_method = bool(params) and params[0] == "self"
+
+        def run(*bound):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            # crc32, not hash(): str hash is salted per process, and a
+            # failing draw must reproduce on rerun
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                fn(*bound, *(s.example(rng) for s in strategies))
+
+        if is_method:
+            def wrapper(self):
+                run(self)
+        else:
+            def wrapper():
+                run()
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def build_module() -> types.ModuleType:
+    """Assemble a module object mimicking ``hypothesis``'s public API."""
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from",
+                 "lists", "tuples"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    mod.given = given
+    mod.settings = settings
+    mod.__is_repro_fallback__ = True
+    return mod

@@ -7,6 +7,19 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# CI installs real hypothesis (pyproject [test] extra); the dev container
+# cannot, so fall back to the deterministic sampler in
+# tests/_hypothesis_fallback.py to keep property tests collectable.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_fallback import build_module
+
+    _mod = build_module()
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
+
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import pytest  # noqa: E402

@@ -1,0 +1,77 @@
+"""Arrival-generator coverage: monotonicity, determinism under a fixed
+seed, rate, and burst structure (the paper's §5 arrival-shaping lever
+depends on these generators being exactly reproducible)."""
+import numpy as np
+import pytest
+
+from repro.serving import (burst_arrivals, fixed_arrivals,
+                           poisson_arrivals, uniform_random_arrivals)
+
+GENERATORS = {
+    "fixed": lambda n, seed: fixed_arrivals(n, 0.05),
+    "uniform": lambda n, seed: uniform_random_arrivals(
+        n, 0.01, 0.2, seed=seed),
+    "poisson": lambda n, seed: poisson_arrivals(
+        n, rate_per_s=8.0, seed=seed),
+    "burst": lambda n, seed: burst_arrivals(n, 7, 0.5),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+class TestAllGenerators:
+    def test_monotone_nondecreasing(self, name):
+        a = GENERATORS[name](200, seed=3)
+        assert all(x <= y for x, y in zip(a, a[1:]))
+
+    def test_length_and_start(self, name):
+        a = GENERATORS[name](64, seed=1)
+        assert len(a) == 64
+        assert a[0] == pytest.approx(0.0)
+
+    def test_deterministic_under_seed(self, name):
+        a = GENERATORS[name](100, seed=7)
+        b = GENERATORS[name](100, seed=7)
+        assert a == b
+
+
+class TestSeedSensitivity:
+    @pytest.mark.parametrize("gen", ["uniform", "poisson"])
+    def test_different_seeds_differ(self, gen):
+        a = GENERATORS[gen](50, seed=0)
+        b = GENERATORS[gen](50, seed=1)
+        assert a != b
+
+
+class TestStructure:
+    def test_fixed_spacing_exact(self):
+        a = fixed_arrivals(10, 0.25, start=1.0)
+        gaps = np.diff(a)
+        assert np.allclose(gaps, 0.25)
+        assert a[0] == 1.0
+
+    def test_burst_structure(self):
+        a = burst_arrivals(10, burst_size=3, burst_gap_s=2.0)
+        # bursts of exactly burst_size share one timestamp ...
+        assert a == [0.0, 0.0, 0.0, 2.0, 2.0, 2.0, 4.0, 4.0, 4.0, 6.0]
+        # ... separated by exactly burst_gap_s
+        uniq = sorted(set(a))
+        assert np.allclose(np.diff(uniq), 2.0)
+
+    def test_poisson_mean_rate(self):
+        a = poisson_arrivals(4000, rate_per_s=20.0, seed=2)
+        assert a[-1] == pytest.approx(4000 / 20.0, rel=0.15)
+
+    def test_uniform_gap_bounds(self):
+        a = uniform_random_arrivals(500, 0.1, 0.3, seed=5)
+        gaps = np.diff(a)
+        assert gaps.min() >= 0.1 - 1e-12
+        assert gaps.max() <= 0.3 + 1e-12
+
+    def test_start_offset(self):
+        for gen in ("uniform", "poisson"):
+            fn = {"uniform": uniform_random_arrivals,
+                  "poisson": poisson_arrivals}[gen]
+            kw = {"seed": 4, "start": 3.0}
+            a = (fn(20, 0.1, 0.2, **kw) if gen == "uniform"
+                 else fn(20, rate_per_s=5.0, **kw))
+            assert a[0] == pytest.approx(3.0)

@@ -1,0 +1,229 @@
+"""Cluster serving tests: completion and conservation invariants,
+router-policy behavior (round-robin fairness, least-loaded, shortest-
+work, energy-aware consolidation + gating), heterogeneous fleets, and
+the headline claim that energy-aware routing beats round-robin on mean
+Wh/request for bursty arrivals (asserted here and in
+benchmarks/cluster.py)."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.serving import (ClusterEngine, Request, ServeEngine,
+                           burst_arrivals, fixed_arrivals, make_cluster,
+                           make_router, poisson_arrivals)
+from repro.serving.requests import RequestStatus
+
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+
+
+def _reqs(n, arrivals, plen=256, out=16, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else None
+    out_l = []
+    for i in range(n):
+        p = plen if rng is None else int(rng.integers(64, plen + 1))
+        o = out if rng is None else int(rng.integers(4, out + 1))
+        out_l.append(Request(req_id=i, prompt=None, prompt_len=p,
+                             max_new_tokens=o,
+                             arrival_time=arrivals[i]))
+    return out_l
+
+
+class TestClusterInvariants:
+    @pytest.mark.parametrize("policy", ["round_robin", "least_loaded",
+                                        "shortest_work", "energy_aware"])
+    def test_all_requests_complete(self, policy):
+        cl = make_cluster(LLAMA8B, 3, policy=policy, max_batch=8)
+        reqs = _reqs(30, poisson_arrivals(30, 20.0, seed=1), seed=2)
+        rep = cl.run(reqs)
+        assert rep.n == 30
+        assert sum(rep.requests_per_replica) == 30
+        assert all(r.status == RequestStatus.DONE for r in rep.requests)
+        assert all(r.tokens_generated == r.max_new_tokens
+                   for r in rep.requests)
+        assert all(r.t_done >= r.arrival_time for r in rep.requests)
+
+    def test_energy_conservation(self):
+        cl = make_cluster(LLAMA8B, 2, policy="round_robin", max_batch=8)
+        rep = cl.run(_reqs(20, fixed_arrivals(20, 0.05)))
+        total = sum(r.total_energy_j for r in rep.replica_reports)
+        assert rep.total_energy_j == pytest.approx(total, rel=1e-9)
+        attributed = sum(r.energy_j for r in rep.requests)
+        assert attributed == pytest.approx(rep.busy_energy_j, rel=1e-6)
+        for sub in rep.replica_reports:
+            assert sub.total_energy_j == pytest.approx(
+                sub.busy_energy_j + sub.idle_energy_j
+                + sub.gated_energy_j, rel=1e-9)
+
+    def test_replicas_share_wall_clock(self):
+        """Every replica report spans the same fleet wall clock."""
+        cl = make_cluster(LLAMA8B, 3, policy="round_robin", max_batch=8)
+        rep = cl.run(_reqs(21, burst_arrivals(21, 7, 1.0)))
+        for sub in rep.replica_reports:
+            assert sub.wall_time_s == pytest.approx(rep.wall_time_s)
+            assert (sub.busy_time_s + sub.idle_time_s + sub.gated_time_s
+                    == pytest.approx(sub.wall_time_s, rel=1e-9))
+
+    @pytest.mark.parametrize("arrivals", [
+        fixed_arrivals(15, 0.1),
+        burst_arrivals(16, 8, 2.0),     # tied arrival instants
+        [0.0] * 12,                     # all-simultaneous burst
+    ])
+    def test_single_replica_matches_engine(self, arrivals):
+        """A 1-replica cluster = the plain engine, plus trailing-idle
+        alignment (none with one replica). Tied/simultaneous arrivals
+        must form the same prefill batches as the single-engine loop."""
+        n = len(arrivals)
+        eng_rep = ServeEngine(LLAMA8B, mode="continuous",
+                              max_batch=8).run(_reqs(n, arrivals))
+        cl_rep = make_cluster(LLAMA8B, 1, policy="round_robin",
+                              max_batch=8,
+                              fmt="bfloat16").run(_reqs(n, arrivals))
+        assert (cl_rep.replica_reports[0].n_prefill_batches
+                == eng_rep.n_prefill_batches)
+        assert cl_rep.total_energy_j == pytest.approx(
+            eng_rep.total_energy_j, rel=1e-9)
+        assert cl_rep.wall_time_s == pytest.approx(eng_rep.wall_time_s,
+                                                   rel=1e-9)
+
+    def test_deadlock_detection(self):
+        eng = ServeEngine(LLAMA8B, mode="continuous", max_batch=4,
+                          kv_pages=2, page_size=8)
+        cl = ClusterEngine([eng], make_router("round_robin"))
+        with pytest.raises(RuntimeError, match="deadlock"):
+            cl.run(_reqs(1, [0.0], plen=800, out=16))
+
+    def test_rejects_sequential_replicas(self):
+        eng = ServeEngine(LLAMA8B, mode="sequential")
+        with pytest.raises(ValueError, match="continuous"):
+            ClusterEngine([eng], make_router("round_robin"))
+
+
+class TestRouterPolicies:
+    def test_round_robin_fairness(self):
+        cl = make_cluster(LLAMA8B, 4, policy="round_robin", max_batch=8)
+        rep = cl.run(_reqs(40, fixed_arrivals(40, 0.05)))
+        assert rep.requests_per_replica == [10, 10, 10, 10]
+
+    def test_round_robin_order_is_cyclic(self):
+        cl = make_cluster(LLAMA8B, 3, policy="round_robin", max_batch=8)
+        reqs = _reqs(9, fixed_arrivals(9, 0.2))
+        rep = cl.run(reqs)
+        for i, sub in enumerate(rep.replica_reports):
+            assert [r.req_id % 3 for r in sub.requests] == [i] * 3
+
+    def test_least_loaded_prefers_empty_replica(self):
+        """With one replica pre-loaded, least-loaded sends the next
+        arrivals elsewhere."""
+        cl = make_cluster(LLAMA8B, 2, policy="least_loaded", max_batch=8)
+        # first 4 requests land alternately (loads 0,0 then 1,1 ...);
+        # a big simultaneous burst must split evenly
+        rep = cl.run(_reqs(16, [0.0] * 16))
+        assert rep.requests_per_replica == [8, 8]
+
+    def test_shortest_work_accounts_for_prompt_length(self):
+        """One huge-prompt request must not attract the next arrival
+        under shortest-work even though queue depths tie."""
+        cl = make_cluster(LLAMA8B, 2, policy="shortest_work",
+                          max_batch=8)
+        reqs = [Request(req_id=0, prompt=None, prompt_len=4096,
+                        max_new_tokens=64, arrival_time=0.0),
+                Request(req_id=1, prompt=None, prompt_len=64,
+                        max_new_tokens=8, arrival_time=0.0),
+                Request(req_id=2, prompt=None, prompt_len=64,
+                        max_new_tokens=8, arrival_time=0.0)]
+        rep = cl.run(reqs)
+        by_replica = [[r.req_id for r in sub.requests]
+                      for sub in rep.replica_reports]
+        assert by_replica == [[0], [1, 2]]
+
+    def test_energy_aware_consolidates_and_gates(self):
+        cl = make_cluster(LLAMA8B, 4, policy="energy_aware",
+                          max_batch=32)
+        rep = cl.run(_reqs(40, burst_arrivals(40, 10, 3.0), seed=3))
+        # load concentrated on few replicas, the rest fully gated
+        n_used = sum(1 for k in rep.requests_per_replica if k > 0)
+        assert n_used < 4
+        assert rep.gated_energy_j > 0
+        # only idle time left is the wake ramps out of the gated state
+        total_idle_t = sum(r.idle_time_s for r in rep.replica_reports)
+        total_gated_t = sum(r.gated_time_s for r in rep.replica_reports)
+        assert total_idle_t < total_gated_t
+
+    def test_energy_aware_spills_when_saturated(self):
+        """A saturated replica must not price queued work as free: a
+        simultaneous burst far beyond one replica's max_batch spills to
+        other replicas instead of starving the fleet."""
+        cl = make_cluster(LLAMA8B, 4, policy="energy_aware", max_batch=4)
+        rep = cl.run(_reqs(30, [0.0] * 30, plen=512, out=32))
+        assert sum(1 for k in rep.requests_per_replica if k > 0) >= 2
+
+    def test_gated_round_robin_variant(self):
+        r = make_router("round_robin_gated")
+        assert r.gates_idle and r.name == "round_robin_gated"
+        cl = make_cluster(LLAMA8B, 4, policy="round_robin_gated",
+                          max_batch=8)
+        rep = cl.run(_reqs(24, burst_arrivals(24, 6, 3.0)))
+        assert rep.gated_energy_j > 0
+        # spreads exactly like plain round-robin
+        assert rep.requests_per_replica == [6, 6, 6, 6]
+
+    def test_energy_aware_beats_round_robin_on_bursty(self):
+        """The tentpole claim (also checked in benchmarks/cluster.py):
+        energy-aware routing yields lower mean Wh/request than
+        round-robin on a bursty arrival stream."""
+        arrivals = burst_arrivals(60, 12, 4.0)
+        whs = {}
+        for policy in ("round_robin", "energy_aware"):
+            cl = make_cluster(LLAMA8B, 4, policy=policy, max_batch=32)
+            whs[policy] = cl.run(
+                _reqs(60, arrivals, plen=1024, out=64,
+                      seed=11)).mean_energy_per_request_wh
+        assert whs["energy_aware"] < whs["round_robin"]
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError, match="unknown routing policy"):
+            make_router("nope")
+
+
+class TestHeterogeneousFleet:
+    def test_energy_aware_prefers_cheaper_format(self):
+        """bf16 replicas are cheaper per marginal joule than fp32, so
+        the energy-aware router should load them first."""
+        fleet = [ServeEngine(LLAMA8B, fmt="float32", mode="continuous",
+                             max_batch=16),
+                 ServeEngine(LLAMA8B, fmt="bfloat16", mode="continuous",
+                             max_batch=16)]
+        cl = ClusterEngine(fleet, make_router("energy_aware"))
+        rep = cl.run(_reqs(12, burst_arrivals(12, 4, 2.0)))
+        n_fp32, n_bf16 = rep.requests_per_replica
+        assert n_bf16 > n_fp32
+
+    def test_mixed_max_batch_completes(self):
+        fleet = [ServeEngine(LLAMA8B, mode="continuous", max_batch=4),
+                 ServeEngine(LLAMA8B, mode="continuous", max_batch=16)]
+        cl = ClusterEngine(fleet, make_router("least_loaded"))
+        rep = cl.run(_reqs(24, poisson_arrivals(24, 30.0, seed=4)))
+        assert all(r.status == RequestStatus.DONE for r in rep.requests)
+
+
+class TestClusterBenchmarkClaim:
+    def test_benchmark_module_claim(self, monkeypatch):
+        """benchmarks/cluster.py end-to-end in its quick configuration:
+        every claim row must pass, including energy-aware < round-robin
+        on the bursty workload."""
+        import importlib
+        import os
+        import sys
+        os.environ["REPRO_CLUSTER_NREQ"] = "60"
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+        try:
+            import benchmarks.cluster as bc
+            importlib.reload(bc)   # re-read N_REQ from the env
+            rows = bc.run()
+        finally:
+            sys.path.pop(0)
+            del os.environ["REPRO_CLUSTER_NREQ"]
+        claims = {r.name: r.derived for r in rows
+                  if r.name.startswith("claim/")}
+        assert "claim/energy_aware_beats_rr_bursty_4rep" in claims
+        assert all("pass=True" in v for v in claims.values()), claims

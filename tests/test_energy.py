@@ -1,5 +1,4 @@
 """Energy-model tests: paper-claim validation + properties."""
-import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 

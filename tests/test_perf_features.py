@@ -96,7 +96,11 @@ print("EP_MATCH_OK", err)
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
                                      "src")
-    env.pop("JAX_PLATFORMS", None)
+    # hermetic CPU child: a jax-initialized parent exports
+    # TPU_LIBRARY_PATH (libtpu ships in the image), and a child that
+    # inherits it without JAX_PLATFORMS blocks trying to grab a TPU
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("TPU_LIBRARY_PATH", None)
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=300)
     assert "EP_MATCH_OK" in out.stdout, out.stderr[-2500:]

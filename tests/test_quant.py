@@ -87,7 +87,6 @@ class TestNF4:
         q = quantize_nf4(w, block)
         deq = dequantize_nf4(q, jnp.float32)
         gap = float(np.max(np.diff(np.asarray(NF4_CODEBOOK)))) / 2
-        wb = w.reshape(-1, block, 16)
         err = jnp.abs(w - deq).reshape(-1, block, 16)
         bound = q.absmax[:, None, :] * gap * 1.01 + 1e-6
         assert bool(jnp.all(err <= bound))

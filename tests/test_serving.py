@@ -8,16 +8,14 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
-from repro.configs.base import ModelConfig
+from repro.configs.paper_zoo import PAPER_MODELS
 from repro.models import build_model
 from repro.serving import (ServeEngine, Request, fixed_arrivals,
                            uniform_random_arrivals, poisson_arrivals,
                            burst_arrivals)
 from repro.serving.requests import RequestStatus
 
-LLAMA8B = ModelConfig(name="llama-3.1-8b", family="dense", num_layers=32,
-                      d_model=4096, num_heads=32, num_kv_heads=8,
-                      d_ff=14336, vocab_size=128256)
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
 
 
 def _reqs(n, arrivals, plen=256, out=16, rng=None):

@@ -8,7 +8,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
@@ -119,7 +118,9 @@ print("SUBPROCESS_OK")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
                                      "src")
-    env.pop("JAX_PLATFORMS", None)
+    # hermetic CPU child — see test_perf_features for the rationale
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("TPU_LIBRARY_PATH", None)
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=300)
     assert "SUBPROCESS_OK" in out.stdout, out.stderr[-2000:]
