@@ -4,6 +4,7 @@
     fig 2a/2b + fig 6/7  -> benchmarks.batching
     fig 3a/3b/3c         -> benchmarks.serving
     fleet / routing      -> benchmarks.cluster
+    §5 scheduling        -> benchmarks.scheduler
     §6 macro estimate    -> benchmarks.macro
     roofline (ours, §g)  -> benchmarks.roofline_report
     CPU wall-time micro  -> benchmarks.microbench
@@ -13,16 +14,38 @@ Prints ``name,us_per_call,derived`` CSV. Claim-check rows are named
 non-zero if any claim fails.
 
 CLI:
-    --only a,b   run only the named benches
-    --quick      cheapest configuration (CI smoke): skips the
-                 real-compute microbench and shrinks the cluster sweep
+    --only a,b    run only the named benches
+    --quick       cheapest configuration (CI smoke): skips the
+                  real-compute microbench and shrinks the sweeps
+    --json PATH   additionally dump every row as a machine-readable
+                  JSON record (one per row, claims carry pass/fail),
+                  so the perf trajectory can be tracked across commits
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
+
+
+def _row_record(suite: str, row) -> dict:
+    """One machine-readable record per printed row (claims also carry
+    their parsed value and pass/fail verdict)."""
+    rec = {"suite": suite, "name": row.name,
+           "us_per_call": row.us_per_call, "derived": row.derived,
+           "is_claim": row.name.startswith("claim/")}
+    if rec["is_claim"]:
+        for tok in row.derived.split():
+            if tok.startswith("value="):
+                try:
+                    rec["value"] = float(tok[len("value="):])
+                except ValueError:
+                    pass
+            elif tok.startswith("pass="):
+                rec["pass"] = tok[len("pass="):] == "True"
+    return rec
 
 
 def main(argv=None) -> None:
@@ -31,17 +54,21 @@ def main(argv=None) -> None:
                     help="comma-separated bench names to run")
     ap.add_argument("--quick", action="store_true",
                     help="cheapest/dry configuration for CI smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump all suite rows as JSON records to PATH")
     args = ap.parse_args(argv)
 
     if args.quick:
         os.environ.setdefault("REPRO_CLUSTER_NREQ", "80")
+        os.environ.setdefault("REPRO_SCHED_NREQ", "80")
 
     from benchmarks import precision, batching, serving, cluster, \
-        macro, roofline_report, microbench
+        scheduler, macro, roofline_report, microbench
     benches = [("precision", precision.run),
                ("batching", batching.run),
                ("serving", serving.run),
                ("cluster", cluster.run),
+               ("scheduler", scheduler.run),
                ("macro", macro.run),
                ("roofline", roofline_report.run),
                ("microbench", microbench.run)]
@@ -56,14 +83,27 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     failed = []
+    records = []
+    t_start = time.time()
     for name, fn in benches:
         t0 = time.perf_counter()
         rows = fn()
         for r in rows:
             print(r.csv(), flush=True)
+            records.append(_row_record(name, r))
             if r.name.startswith("claim/") and "pass=False" in r.derived:
                 failed.append(r.name)
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              flush=True)
+    if args.json:
+        blob = {"schema": "repro-bench-rows/v1",
+                "generated_unix": t_start,
+                "quick": bool(args.quick),
+                "n_failed_claims": len(failed),
+                "records": records}
+        with open(args.json, "w") as f:
+            json.dump(blob, f, indent=1)
+        print(f"# wrote {len(records)} records to {args.json}",
               flush=True)
     if failed:
         print(f"# FAILED claims: {failed}", flush=True)

@@ -1,0 +1,86 @@
+"""Paper §5 with an *active* scheduler: the same bursty request stream
+served unshaped (naive sequential, then plain continuous batching) and
+shaped by each scheduling policy, with the power-state timeline showing
+where the saved joules come from.
+
+    PYTHONPATH=src python examples/schedule_shaping.py
+"""
+from repro.configs.base import ModelConfig
+from repro.serving import (EnergyBudgetScheduler, PowerTrace, Request,
+                           ServeEngine, assign_slos, burst_arrivals,
+                           estimate_request_latency, estimate_service_rate,
+                           make_scheduler)
+from repro.training.data import RequestDistribution
+
+LLAMA8B = ModelConfig(name="llama-3.1-8b", family="dense", num_layers=32,
+                      d_model=4096, num_heads=32, num_kv_heads=8,
+                      d_ff=14336, vocab_size=128256)
+N = 160
+
+
+def requests(arrivals, seed=0):
+    dist = RequestDistribution(seed=seed, prompt_range=(200, 600))
+    out = []
+    for i in range(len(arrivals)):
+        s = dist.sample()
+        out.append(Request(req_id=i, prompt=None, prompt_len=s.prompt_len,
+                           max_new_tokens=s.output_len,
+                           arrival_time=arrivals[i]))
+    return out
+
+
+def main() -> None:
+    arrivals = burst_arrivals(N, 20, 6.0)   # bursty, low mean rate
+
+    naive = ServeEngine(LLAMA8B, fmt="bfloat16",
+                        mode="sequential").run(requests(arrivals))
+    base = naive.mean_energy_per_request_wh
+    print(f"{'policy':26s} {'Wh/request':>10s} {'p99 lat':>8s} "
+          f"{'shed':>5s} {'vs naive':>9s}")
+    print(f"{'unshaped naive sequential':26s} {base:10.5f} "
+          f"{naive.latency_percentiles()['p99']:7.1f}s {0:5d} "
+          f"{1.0:8.1f}x")
+
+    rate = estimate_service_rate(LLAMA8B, prompt_len=400, new_tokens=80,
+                                 batch=32)
+    lat = estimate_request_latency(LLAMA8B, prompt_len=400, new_tokens=80,
+                                   batch=32)
+    window_trace = PowerTrace()
+    policies = [
+        ("passthrough (continuous)", make_scheduler("passthrough"), None),
+        ("window 2s", make_scheduler("window", window_s=2.0),
+         window_trace),
+        ("paced 30/s burst 8",
+         make_scheduler("paced", rate_per_s=30, burst=8), None),
+        ("deadline (EDF + shed)",
+         make_scheduler("deadline", service_rate_per_s=rate,
+                        est_latency_s=lat), None),
+        ("energy budget 10 mWh", None, None),   # built per engine below
+    ]
+    for label, sched, trace in policies:
+        eng = ServeEngine(LLAMA8B, fmt="bfloat16", mode="continuous",
+                          max_batch=64)
+        if sched is None:
+            sched = EnergyBudgetScheduler.for_engine(eng, 0.010)
+        reqs = assign_slos(requests(arrivals), seed=1)
+        rep = eng.run(reqs, scheduler=sched, trace=trace)
+        wh = rep.mean_energy_per_request_wh
+        print(f"{label:26s} {wh:10.5f} "
+              f"{rep.latency_percentiles()['p99']:7.1f}s "
+              f"{rep.n_shed:5d} {base / wh:8.1f}x")
+
+    total = window_trace.total_energy_j
+    print("\nwindow-shaped power-state timeline "
+          f"({len(window_trace.segments)} segments, "
+          f"{total:.0f} J total):")
+    for state, e in window_trace.energy_by_state().items():
+        t = window_trace.time_by_state()[state]
+        print(f"  {state:8s} {e:8.0f} J  ({100 * e / total:5.1f}%)  "
+              f"{t:7.1f} s")
+    print("\nshaping turns unplanned idle (120 W) into planned gated "
+          "gaps (45 W)\nand consolidates prefills — the paper's "
+          "up-to-100x §5 lever, now a scheduler policy.")
+
+
+if __name__ == "__main__":
+    main()

@@ -75,6 +75,17 @@ class DeviceSpec:
         return (self.launch_overhead_fused if stack == "fused"
                 else self.launch_overhead_eager)
 
+    def state_power(self, state: str) -> float:
+        """Nominal power draw (W) for a non-busy power state on the
+        serving timeline (:mod:`repro.serving.trace`). Busy states
+        (prefill/decode) are regime-dependent and carry their own
+        energy, so they have no single nominal wattage here."""
+        if state == "idle":
+            return self.idle_power
+        if state == "gated":
+            return self.gated_power
+        raise ValueError(f"no nominal power for state {state!r}")
+
 
 H100_SXM = DeviceSpec(
     name="h100-sxm",

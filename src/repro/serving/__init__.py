@@ -8,3 +8,13 @@ from repro.serving.router import (Router, RoundRobinRouter,  # noqa: F401
                                   POLICIES)
 from repro.serving.cluster import (ClusterEngine, ClusterReport,  # noqa: F401
                                    make_cluster)
+from repro.serving.scheduler import (Scheduler, ScheduleResult,  # noqa: F401
+                                     PassthroughScheduler, PacedScheduler,
+                                     WindowScheduler, DeadlineScheduler,
+                                     EnergyBudgetScheduler, make_scheduler,
+                                     SCHEDULERS)
+from repro.serving.slo import (SLOTier, INTERACTIVE, STANDARD, BATCH,  # noqa: F401
+                               TIERS, get_tier, assign_slos, attainment,
+                               slo_summary, estimate_request_latency,
+                               estimate_service_rate)
+from repro.serving.trace import PowerTrace, Segment, STATES  # noqa: F401

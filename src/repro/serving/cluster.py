@@ -33,6 +33,9 @@ import numpy as np
 from repro.serving.engine import ServeEngine, ServeReport
 from repro.serving.requests import Request
 from repro.serving.router import Router, make_router
+from repro.serving.scheduler import Scheduler, apply_schedule
+from repro.serving import slo
+from repro.serving.trace import PowerTrace
 
 
 @dataclasses.dataclass
@@ -42,6 +45,9 @@ class ClusterReport:
     replica_reports: List[ServeReport]
     policy: str
     wall_time_s: float
+    # requests an admission-control scheduler rejected fleet-wide (never
+    # routed; excluded from per-replica reports and every mean_*)
+    shed: List[Request] = dataclasses.field(default_factory=list)
 
     # -- fleet energy ---------------------------------------------------
     @property
@@ -70,8 +76,24 @@ class ClusterReport:
         return len(self.requests)
 
     @property
+    def n_shed(self) -> int:
+        return len(self.shed)
+
+    @property
+    def completed(self) -> List[Request]:
+        return slo.completed(self.requests)
+
+    @property
     def mean_energy_per_request_wh(self) -> float:
-        return self.total_energy_j / max(self.n, 1) / 3600.0
+        if self.n == 0:
+            return 0.0
+        return self.total_energy_j / self.n / 3600.0
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of offered load (served + shed) meeting its latency
+        SLO; shed requests count as misses."""
+        return slo.attainment(self.requests, self.shed)
 
     @property
     def requests_per_replica(self) -> List[int]:
@@ -91,21 +113,19 @@ class ClusterReport:
 
     def latency_percentiles(self, qs: Sequence[float] = (50, 90, 99)
                             ) -> Dict[str, float]:
-        lat = [r.latency for r in self.requests]
-        return {f"p{int(q)}": (float(np.percentile(lat, q)) if lat
-                               else 0.0) for q in qs}
+        return slo.percentiles(self.requests, field="latency", qs=qs)
 
     def ttft_percentiles(self, qs: Sequence[float] = (50, 90, 99)
                          ) -> Dict[str, float]:
-        ttft = [r.ttft for r in self.requests]
-        return {f"p{int(q)}": (float(np.percentile(ttft, q)) if ttft
-                               else 0.0) for q in qs}
+        return slo.percentiles(self.requests, field="ttft", qs=qs)
 
     def summary(self) -> Dict[str, float]:
         out = {
             "policy": self.policy,
             "n_replicas": len(self.replica_reports),
             "n_requests": self.n,
+            "n_shed": self.n_shed,
+            "slo_attainment": self.slo_attainment,
             "mean_energy_wh": self.mean_energy_per_request_wh,
             "fleet_energy_j": self.total_energy_j,
             "busy_energy_j": self.busy_energy_j,
@@ -142,16 +162,35 @@ class ClusterEngine:
             make_router(policy)
 
     # ------------------------------------------------------------------
-    def run(self, requests: List[Request]) -> ClusterReport:
-        reqs = sorted(requests, key=lambda r: r.arrival_time)
+    def run(self, requests: List[Request], *,
+            scheduler: Optional[Scheduler] = None,
+            trace: Optional[PowerTrace] = None) -> ClusterReport:
+        """Serve a request stream across the fleet. A scheduler shapes
+        and admits the *shared* stream before the router sees it, so
+        shaping composes with routing; a planning scheduler also lets
+        work-less replicas power-gate the known gaps (same effect as a
+        gating router, without changing placement)."""
+        reqs, shed = apply_schedule(requests, scheduler)
+        gate = self.router.gates_idle or (scheduler is not None
+                                          and scheduler.plans_gaps)
+        for i, eng in enumerate(self.replicas):
+            eng._trace = trace
+            eng._trace_replica = i
+        try:
+            return self._run(reqs, shed, gate)
+        finally:
+            for eng in self.replicas:
+                eng._trace = None
+
+    def _run(self, reqs: List[Request], shed: List[Request],
+             gate: bool) -> ClusterReport:
         for eng in self.replicas:
             eng.stream_start()
         pending = list(reqs)
         head = 0
-        gate = self.router.gates_idle
         self._gated = [False] * len(self.replicas)
         while True:
-            t_arr = (pending[head].arrival_time
+            t_arr = (pending[head].effective_arrival
                      if head < len(pending) else None)
             ready = [eng for eng in self.replicas
                      if eng.stream_can_step()]
@@ -200,7 +239,7 @@ class ClusterEngine:
         reports = [eng.stream_report() for eng in self.replicas]
         return ClusterReport(replica_reports=reports,
                              policy=self.router.name,
-                             wall_time_s=t_end)
+                             wall_time_s=t_end, shed=shed)
 
 
 def make_cluster(cfg, n_replicas: int, *, policy: str = "round_robin",

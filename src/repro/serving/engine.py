@@ -21,7 +21,7 @@ Energy accounting (paper §5 methodology):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -33,6 +33,9 @@ from repro.core.hardware import DeviceSpec, H100_SXM
 from repro.core.precision import PrecisionPolicy, make_policy
 from repro.core import workload as W
 from repro.serving.requests import Request, RequestStatus
+from repro.serving.scheduler import Scheduler, apply_schedule
+from repro.serving import slo
+from repro.serving.trace import PowerTrace
 
 # batch-axis position of each cache leaf (for slot insertion)
 _CACHE_BATCH_AXIS = {"k": 1, "v": 1, "ssm_state": 1, "conv": 1,
@@ -56,10 +59,24 @@ class ServeReport:
     gated_energy_j: float = 0.0
     gated_time_s: float = 0.0
     idle_time_s: float = 0.0
+    # admission control: requests a scheduler rejected (never served;
+    # excluded from every mean_* aggregate, charged against SLO
+    # attainment)
+    shed: List[Request] = dataclasses.field(default_factory=list)
 
     @property
     def n(self) -> int:
         return len(self.requests)
+
+    @property
+    def n_shed(self) -> int:
+        return len(self.shed)
+
+    @property
+    def completed(self) -> List[Request]:
+        """Requests that actually finished (guards every latency/TTFT
+        aggregate against empty or fully-shed runs)."""
+        return slo.completed(self.requests)
 
     @property
     def utilization(self) -> float:
@@ -67,7 +84,9 @@ class ServeReport:
 
     @property
     def mean_energy_per_request_wh(self) -> float:
-        return self.total_energy_j / max(self.n, 1) / 3600.0
+        if self.n == 0:
+            return 0.0
+        return self.total_energy_j / self.n / 3600.0
 
     @property
     def mean_attributed_energy_wh(self) -> float:
@@ -77,32 +96,56 @@ class ServeReport:
 
     @property
     def mean_latency_s(self) -> float:
-        if not self.requests:
+        done = self.completed
+        if not done:
             return 0.0
-        return float(np.mean([r.latency for r in self.requests]))
+        return float(np.mean([r.latency for r in done]))
 
     @property
     def mean_ttft_s(self) -> float:
-        if not self.requests:
+        done = self.completed
+        if not done:
             return 0.0
-        return float(np.mean([r.ttft for r in self.requests]))
+        return float(np.mean([r.ttft for r in done]))
 
     @property
     def tokens_per_s(self) -> float:
         toks = sum(r.tokens_generated for r in self.requests)
         return toks / max(self.wall_time_s, 1e-12)
 
+    def latency_percentiles(self, qs: Sequence[float] = (50, 90, 99)
+                            ) -> Dict[str, float]:
+        return slo.percentiles(self.requests, field="latency", qs=qs)
+
+    def ttft_percentiles(self, qs: Sequence[float] = (50, 90, 99)
+                         ) -> Dict[str, float]:
+        return slo.percentiles(self.requests, field="ttft", qs=qs)
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of offered load (served + shed) that met its
+        latency SLO; shed requests count as misses."""
+        return slo.attainment(self.requests, self.shed)
+
     def summary(self) -> Dict[str, float]:
         return {
             "n_requests": self.n,
+            "n_shed": self.n_shed,
             "mean_energy_wh": self.mean_energy_per_request_wh,
             "mean_attributed_wh": self.mean_attributed_energy_wh,
             "mean_latency_s": self.mean_latency_s,
             "mean_ttft_s": self.mean_ttft_s,
+            "latency_p99_s": self.latency_percentiles()["p99"],
             "tokens_per_s": self.tokens_per_s,
             "mean_batch": self.mean_batch,
+            "slo_attainment": self.slo_attainment,
             "idle_fraction": (self.idle_energy_j
                               / max(self.total_energy_j, 1e-12)),
+            # planned-gap gating converts idle burn into gated burn;
+            # report it separately so shaped runs don't read as having
+            # eliminated non-busy power
+            "gated_fraction": (self.gated_energy_j
+                               / max(self.total_energy_j, 1e-12)),
         }
 
 
@@ -156,6 +199,10 @@ class ServeEngine:
             bucket_prefill=bucket_prefill)
         self.batcher = ContinuousBatcher(max_batch, **self._batcher_kw)
         self._stream: Optional[_StreamState] = None
+        # power-state telemetry (repro.serving.trace): set per run by
+        # run(trace=...) or by the cluster before stream_start()
+        self._trace: Optional[PowerTrace] = None
+        self._trace_replica: int = 0
         self.execute = execute
         self.model = model
         self.params = params
@@ -172,23 +219,50 @@ class ServeEngine:
             self.slot_tokens = jnp.zeros((max_batch, 1), jnp.int32)
 
     # ------------------------------------------------------------------
-    def run(self, requests: List[Request]) -> ServeReport:
-        reqs = sorted(requests, key=lambda r: r.arrival_time)
-        if self.mode == "sequential":
-            return self._run_sequential(reqs)
-        return self._run_continuous(reqs)
+    def run(self, requests: List[Request], *,
+            scheduler: Optional[Scheduler] = None,
+            trace: Optional[PowerTrace] = None) -> ServeReport:
+        """Serve a request list, optionally shaped/admitted by a
+        :class:`~repro.serving.scheduler.Scheduler` and recorded onto a
+        :class:`~repro.serving.trace.PowerTrace` timeline."""
+        reqs, shed = apply_schedule(requests, scheduler)
+        self._trace = trace
+        self._trace_replica = 0     # standalone run (cluster sets >0)
+        plans_gaps = scheduler is not None and scheduler.plans_gaps
+        try:
+            if self.mode == "sequential":
+                rep = self._run_sequential(reqs)
+            else:
+                rep = self._run_continuous(reqs, plans_gaps=plans_gaps)
+        finally:
+            self._trace = None
+        rep.shed = shed
+        return rep
+
+    def _record(self, state: str, t0: float, t1: float, energy_j: float,
+                batch: float = 0.0) -> None:
+        if self._trace is not None and t1 > t0:
+            self._trace.record(self._trace_replica, state, t0, t1,
+                               energy_j, batch)
 
     # ------------------------------------------------------------------
     def _run_sequential(self, reqs: List[Request]) -> ServeReport:
         now, busy_e, idle_e, busy_t = 0.0, 0.0, 0.0, 0.0
+        idle_t = 0.0
         for r in reqs:
-            if r.arrival_time > now:
-                idle_e += self.device.idle_power * (r.arrival_time - now)
-                now = r.arrival_time
+            if r.effective_arrival > now:
+                gap = r.effective_arrival - now
+                idle_e += self.device.idle_power * gap
+                idle_t += gap
+                self._record("idle", now, r.effective_arrival,
+                             self.device.idle_power * gap)
+                now = r.effective_arrival
             r.t_prefill_start = now
             pre = self.energy.evaluate(W.prefill_workload(
                 self.cfg, 1, r.prompt_len, stack=self.stack), self.n_chips)
             now += pre.latency
+            self._record("prefill", r.t_prefill_start, now,
+                         pre.energy_j, 1.0)
             r.t_first_token = now
             r.tokens_generated = 1
             dec_steps = max(r.max_new_tokens - 1, 0)
@@ -197,6 +271,8 @@ class ServeEngine:
                 dec = self.energy.evaluate(W.decode_workload(
                     self.cfg, 1, r.prompt_len, dec_steps, stack=self.stack),
                     self.n_chips)
+                self._record("decode", now, now + dec.latency,
+                             dec.energy_j, 1.0)
                 now += dec.latency
                 e += dec.energy_j
                 r.tokens_generated += dec_steps
@@ -210,6 +286,7 @@ class ServeEngine:
         return ServeReport(requests=reqs, total_energy_j=busy_e + idle_e,
                            busy_energy_j=busy_e, idle_energy_j=idle_e,
                            wall_time_s=now, busy_time_s=busy_t,
+                           idle_time_s=idle_t,
                            mean_batch=1.0, n_prefill_batches=len(reqs),
                            n_decode_steps=sum(r.tokens_generated - 1
                                               for r in reqs))
@@ -228,18 +305,27 @@ class ServeEngine:
             r.generated.append(int(tok[0, 0]))
 
     # ------------------------------------------------------------------
-    def _run_continuous(self, reqs: List[Request]) -> ServeReport:
+    def _run_continuous(self, reqs: List[Request],
+                        plans_gaps: bool = False) -> ServeReport:
         self.stream_start()
         pending = list(reqs)
         while len(self._stream.done) < len(reqs):
-            while (pending and pending[0].arrival_time
+            while (pending and pending[0].effective_arrival
                     <= self._stream.now + 1e-12):
                 self.stream_submit(pending.pop(0))
             if self.stream_can_step():
                 self.stream_step()
                 continue
             if pending:
-                self.stream_idle(pending[0].arrival_time)
+                t_next = pending[0].effective_arrival
+                gap = t_next - self._stream.now
+                wake = self.device.wake_latency_s
+                if plans_gaps and gap > wake:
+                    # the scheduler planned this gap, so the device can
+                    # power-gate it and ramp back up (at idle power)
+                    # just in time for the next release
+                    self.stream_idle(t_next - wake, gated=True)
+                self.stream_idle(t_next)
             else:   # waiting queue blocked on memory with nothing live
                 if self.batcher.waiting:
                     raise RuntimeError("deadlock: waiting requests cannot "
@@ -314,6 +400,8 @@ class ServeEngine:
             rep = self.energy.evaluate(W.prefill_workload(
                 self.cfg, len(picks), pad, stack=self.stack),
                 self.n_chips)
+            self._record("prefill", s.now, s.now + rep.latency,
+                         rep.energy_j, float(len(picks)))
             s.now += rep.latency
             s.busy_t += rep.latency
             s.busy_e += rep.energy_j
@@ -336,6 +424,8 @@ class ServeEngine:
             rep = self.energy.evaluate(W.decode_step_workload(
                 self.cfg, len(live), int(np.mean(cache_lens)),
                 stack=self.stack), self.n_chips)
+            self._record("decode", s.now, s.now + rep.latency,
+                         rep.energy_j, float(len(live)))
             s.now += rep.latency
             s.busy_t += rep.latency
             s.busy_e += rep.energy_j
@@ -361,12 +451,15 @@ class ServeEngine:
         gap = until - s.now
         if gap <= 0:
             return
+        state = "gated" if gated else "idle"
+        e = self.device.state_power(state) * gap
         if gated:
-            s.gated_e += self.device.gated_power * gap
+            s.gated_e += e
             s.gated_t += gap
         else:
-            s.idle_e += self.device.idle_power * gap
+            s.idle_e += e
             s.idle_t += gap
+        self._record(state, s.now, until, e)
         s.now = until
 
     def stream_report(self) -> ServeReport:

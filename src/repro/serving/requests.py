@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 from typing import Optional
 
 import numpy as np
@@ -12,6 +13,7 @@ class RequestStatus(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
     DONE = "done"
+    SHED = "shed"           # rejected by an admission-control scheduler
 
 
 @dataclasses.dataclass
@@ -21,6 +23,14 @@ class Request:
     prompt_len: int
     max_new_tokens: int
     arrival_time: float = 0.0
+    # SLO (set by the client or repro.serving.slo.assign_slos)
+    priority: int = 0                   # higher = more important
+    deadline_s: float = math.inf        # latency SLO relative to arrival
+    slo_tier: Optional[str] = None
+    # scheduling (set by a repro.serving.scheduler policy; None means the
+    # request is handed to the engine at its raw arrival time)
+    release_time: Optional[float] = None
+    shed_reason: Optional[str] = None
     # lifecycle
     status: RequestStatus = RequestStatus.QUEUED
     t_prefill_start: float = -1.0
@@ -32,12 +42,31 @@ class Request:
     energy_j: float = 0.0
 
     @property
+    def effective_arrival(self) -> float:
+        """When the engine first sees this request: the scheduler's
+        release time if one shaped it, else the raw arrival."""
+        return (self.release_time if self.release_time is not None
+                else self.arrival_time)
+
+    @property
+    def abs_deadline(self) -> float:
+        return self.arrival_time + self.deadline_s
+
+    @property
     def latency(self) -> float:
         return self.t_done - self.arrival_time
 
     @property
     def ttft(self) -> float:
         return self.t_first_token - self.arrival_time
+
+    @property
+    def met_deadline(self) -> bool:
+        """Completed within its latency SLO (shed/unfinished = missed,
+        unless the deadline is infinite and the request finished)."""
+        if self.t_done < 0:
+            return False
+        return self.latency <= self.deadline_s + 1e-12
 
     @property
     def energy_wh(self) -> float:

@@ -1,0 +1,147 @@
+"""Power-state telemetry for the serving timeline.
+
+The paper attributes energy per *phase* (compute-bound prefill,
+memory/idle-bound decode, idle gaps); the scheduler work in §5 only
+makes sense if the saved joules are attributable to a phase on a
+timeline. :class:`PowerTrace` records, per replica, every segment the
+engine executes — ``prefill`` / ``decode`` / ``idle`` / ``gated`` —
+with its time span, energy, and (for busy phases) batch size, and can
+export the timeline as JSON so energy deltas between two runs can be
+diffed segment-by-segment.
+
+The recorder is conservative by construction: engines report each
+accrual (one prefill batch, one decode step, one idle gap) at the
+moment it is added to the energy books, so the trace's total energy
+equals the report's total energy to float precision. Adjacent segments
+in the same state are merged to keep exports compact (a 10k-step decode
+run collapses into a handful of segments at the batch-size change
+points).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+#: canonical power states on the serving timeline
+STATES = ("prefill", "decode", "idle", "gated")
+
+
+@dataclasses.dataclass
+class Segment:
+    replica: int
+    state: str                  # one of STATES
+    t0: float
+    t1: float
+    energy_j: float
+    batch: float = 0.0          # time-weighted mean live batch (busy states)
+    n_events: int = 1           # accruals merged into this segment
+
+    @property
+    def duration_s(self) -> float:
+        return self.t1 - self.t0
+
+    @property
+    def power_w(self) -> float:
+        """Mean power over the segment (0.0 for zero-length segments)."""
+        d = self.duration_s
+        return self.energy_j / d if d > 0 else 0.0
+
+    def as_dict(self) -> Dict:
+        return {"replica": self.replica, "state": self.state,
+                "t0": self.t0, "t1": self.t1,
+                "duration_s": self.duration_s,
+                "energy_j": self.energy_j, "power_w": self.power_w,
+                "batch": self.batch, "n_events": self.n_events}
+
+
+class PowerTrace:
+    """Per-replica power-state timeline recorder."""
+
+    def __init__(self, merge_tol_s: float = 1e-9):
+        self.segments: List[Segment] = []
+        self._last: Dict[int, Segment] = {}   # tail segment per replica
+        self.merge_tol_s = merge_tol_s
+
+    # ------------------------------------------------------------------
+    def record(self, replica: int, state: str, t0: float, t1: float,
+               energy_j: float, batch: float = 0.0) -> None:
+        if state not in STATES:
+            raise ValueError(f"unknown power state {state!r}")
+        if t1 < t0:
+            raise ValueError(f"segment ends before it starts: {t0}..{t1}")
+        tail = self._last.get(replica)
+        if (tail is not None and tail.state == state
+                and abs(t0 - tail.t1) <= self.merge_tol_s):
+            # merge contiguous same-state accruals; batch is
+            # duration-weighted so decode batch decay stays visible
+            d_old, d_new = tail.duration_s, t1 - t0
+            d_tot = d_old + d_new
+            if d_tot > 0:
+                tail.batch = (tail.batch * d_old + batch * d_new) / d_tot
+            elif batch:
+                tail.batch = batch
+            tail.t1 = t1
+            tail.energy_j += energy_j
+            tail.n_events += 1
+            return
+        seg = Segment(replica=replica, state=state, t0=t0, t1=t1,
+                      energy_j=energy_j, batch=batch)
+        self.segments.append(seg)
+        self._last[replica] = seg
+
+    # ------------------------------------------------------------------
+    @property
+    def n_replicas(self) -> int:
+        return len({s.replica for s in self.segments})
+
+    @property
+    def total_energy_j(self) -> float:
+        return sum(s.energy_j for s in self.segments)
+
+    @property
+    def span_s(self) -> float:
+        if not self.segments:
+            return 0.0
+        return (max(s.t1 for s in self.segments)
+                - min(s.t0 for s in self.segments))
+
+    def energy_by_state(self) -> Dict[str, float]:
+        out = {s: 0.0 for s in STATES}
+        for seg in self.segments:
+            out[seg.state] += seg.energy_j
+        return out
+
+    def time_by_state(self, replica: Optional[int] = None
+                      ) -> Dict[str, float]:
+        out = {s: 0.0 for s in STATES}
+        for seg in self.segments:
+            if replica is None or seg.replica == replica:
+                out[seg.state] += seg.duration_s
+        return out
+
+    def coverage(self, reference_energy_j: float) -> float:
+        """Fraction of a report's total energy this trace accounts for
+        (the acceptance bar is >= 0.95; by construction it is ~1.0)."""
+        if reference_energy_j <= 0:
+            return 1.0 if self.total_energy_j <= 0 else 0.0
+        return self.total_energy_j / reference_energy_j
+
+    # ------------------------------------------------------------------
+    def as_dict(self) -> Dict:
+        return {
+            "n_segments": len(self.segments),
+            "n_replicas": self.n_replicas,
+            "span_s": self.span_s,
+            "total_energy_j": self.total_energy_j,
+            "energy_by_state_j": self.energy_by_state(),
+            "time_by_state_s": self.time_by_state(),
+            "segments": [s.as_dict() for s in self.segments],
+        }
+
+    def to_json(self, path: Optional[str] = None, indent: int = 1) -> str:
+        blob = json.dumps(self.as_dict(), indent=indent)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(blob)
+        return blob

@@ -1,0 +1,358 @@
+"""Scheduler-subsystem tests: shaping invariants (determinism under a
+fixed seed, monotone non-decreasing releases, token-bucket
+conservation), admission control (EDF shedding, energy-budget
+rejection), composition with arrival generators and with the
+engine/cluster stack, and the planned-gap power-gating telemetry."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.serving import (EnergyBudgetScheduler, PowerTrace, Request,
+                           RequestStatus, ServeEngine, assign_slos,
+                           burst_arrivals, estimate_service_rate,
+                           fixed_arrivals, make_cluster, make_scheduler,
+                           poisson_arrivals, uniform_random_arrivals)
+
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+
+GENERATORS = {
+    "fixed": lambda n, seed: fixed_arrivals(n, 0.05),
+    "uniform": lambda n, seed: uniform_random_arrivals(
+        n, 0.0, 0.2, seed=seed),
+    "poisson": lambda n, seed: poisson_arrivals(n, rate_per_s=15.0,
+                                                seed=seed),
+    "burst": lambda n, seed: burst_arrivals(n, 7, 0.5),
+}
+
+
+def _reqs(arrivals, plen=256, out=16, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else None
+    out_l = []
+    for i, t in enumerate(arrivals):
+        p = plen if rng is None else int(rng.integers(64, plen + 1))
+        o = out if rng is None else int(rng.integers(4, out + 1))
+        out_l.append(Request(req_id=i, prompt=None, prompt_len=p,
+                             max_new_tokens=o, arrival_time=t))
+    return out_l
+
+
+def _shapers():
+    return [make_scheduler("passthrough"),
+            make_scheduler("paced", rate_per_s=25.0, burst=3),
+            make_scheduler("window", window_s=0.3),
+            make_scheduler("deadline", service_rate_per_s=50.0)]
+
+
+class TestShapingInvariants:
+    """Satellite: arrival generators composed with the scheduler."""
+
+    @pytest.mark.parametrize("gen", sorted(GENERATORS))
+    @pytest.mark.parametrize("policy", ["passthrough", "paced",
+                                        "window", "deadline"])
+    def test_release_invariants_all_generators(self, gen, policy):
+        sched = {s.name: s for s in _shapers()}[policy]
+        res = sched.schedule(_reqs(GENERATORS[gen](40, seed=3)))
+        rel = [r.release_time for r in res.released]
+        # conservation: nothing released before its arrival
+        assert all(r.release_time >= r.arrival_time - 1e-12
+                   for r in res.released)
+        # shaped release times are monotone non-decreasing in shaped
+        # order
+        assert all(a <= b + 1e-12 for a, b in zip(rel, rel[1:]))
+        assert res.n_released + res.n_shed == 40
+
+    @pytest.mark.parametrize("gen", sorted(GENERATORS))
+    def test_deterministic_under_seed(self, gen):
+        def shape():
+            sched = make_scheduler("paced", rate_per_s=30.0, burst=2)
+            res = sched.schedule(_reqs(GENERATORS[gen](60, seed=9)))
+            return [(r.req_id, r.release_time) for r in res.released]
+        assert shape() == shape()
+
+    def test_passthrough_is_identity(self):
+        arr = poisson_arrivals(30, 20.0, seed=2)
+        res = make_scheduler("passthrough").schedule(_reqs(arr))
+        assert [r.release_time for r in res.released] \
+            == sorted(arr)
+        assert res.n_shed == 0
+
+
+class TestPaced:
+    def test_token_bucket_rate_conservation(self):
+        """No window of width dt may release more than burst + rate*dt
+        requests (the defining token-bucket property)."""
+        rate, burst = 20.0, 4
+        sched = make_scheduler("paced", rate_per_s=rate, burst=burst)
+        res = sched.schedule(_reqs(burst_arrivals(80, 20, 1.0)))
+        rel = sorted(r.release_time for r in res.released)
+        for i in range(len(rel)):
+            for j in range(i + 1, len(rel)):
+                dt = rel[j] - rel[i]
+                n_in_window = j - i + 1
+                assert n_in_window <= burst + rate * dt + 1 + 1e-6
+
+    def test_burst_passes_through_bucket(self):
+        """A burst no deeper than the bucket releases instantly."""
+        sched = make_scheduler("paced", rate_per_s=5.0, burst=4)
+        res = sched.schedule(_reqs([0.0] * 4))
+        assert all(r.release_time == 0.0 for r in res.released)
+
+    def test_excess_burst_is_paced(self):
+        sched = make_scheduler("paced", rate_per_s=10.0, burst=2)
+        res = sched.schedule(_reqs([0.0] * 6))
+        rel = [r.release_time for r in res.released]
+        assert rel[:2] == [0.0, 0.0]
+        assert rel[2:] == pytest.approx([0.1, 0.2, 0.3, 0.4])
+
+    def test_bucket_refills_during_quiet_gap(self):
+        sched = make_scheduler("paced", rate_per_s=10.0, burst=3)
+        # drain the bucket, then wait long enough to refill fully
+        arr = [0.0, 0.0, 0.0, 10.0, 10.0, 10.0]
+        res = sched.schedule(_reqs(arr))
+        assert all(r.release_time == r.arrival_time
+                   for r in res.released)
+
+    def test_invalid_params(self):
+        with pytest.raises(ValueError):
+            make_scheduler("paced", rate_per_s=0.0)
+        with pytest.raises(ValueError):
+            make_scheduler("paced", rate_per_s=1.0, burst=0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 60), st.integers(0, 2**31 - 1))
+    def test_property_conservation_and_monotone(self, n, seed):
+        rng = np.random.default_rng(seed)
+        arr = np.cumsum(rng.exponential(0.03, n)).tolist()
+        sched = make_scheduler("paced", rate_per_s=15.0, burst=2)
+        res = sched.schedule(_reqs(arr))
+        rel = [r.release_time for r in res.released]
+        assert all(r.release_time >= r.arrival_time - 1e-12
+                   for r in res.released)
+        assert all(a <= b + 1e-12 for a, b in zip(rel, rel[1:]))
+
+
+class TestWindow:
+    def test_coalesces_to_window_edges(self):
+        sched = make_scheduler("window", window_s=1.0)
+        res = sched.schedule(_reqs([0.0, 0.2, 0.9, 1.0, 1.5, 2.49]))
+        assert [r.release_time for r in res.released] \
+            == pytest.approx([0.0, 1.0, 1.0, 1.0, 2.0, 3.0])
+
+    def test_max_added_delay_below_window(self):
+        sched = make_scheduler("window", window_s=0.5)
+        res = sched.schedule(
+            _reqs(uniform_random_arrivals(100, 0.0, 0.2, seed=4)))
+        delays = [r.release_time - r.arrival_time
+                  for r in res.released]
+        assert max(delays) < 0.5 + 1e-9
+
+    def test_consolidates_prefill_batches(self):
+        """Windowed release of a dribble forms fewer prefill batches
+        than the unshaped dribble."""
+        def reqs():
+            return _reqs(fixed_arrivals(16, 0.15), plen=256, out=8)
+        plain = ServeEngine(LLAMA8B, mode="continuous",
+                            max_batch=16).run(reqs())
+        shaped = ServeEngine(LLAMA8B, mode="continuous", max_batch=16) \
+            .run(reqs(), scheduler=make_scheduler("window", window_s=1.2))
+        assert shaped.n_prefill_batches < plain.n_prefill_batches
+
+
+class TestDeadline:
+    def test_priority_order_wins_contention(self):
+        """Backlogged releases drain high-priority first."""
+        reqs = _reqs([0.0] * 6, out=8)
+        for i, r in enumerate(reqs):
+            r.priority = 1 if i >= 3 else 0
+            r.deadline_s = 100.0
+        sched = make_scheduler("deadline", service_rate_per_s=10.0,
+                               shed_late=False)
+        res = sched.schedule(reqs)
+        first_ids = [r.req_id for r in res.released[:3]]
+        assert sorted(first_ids) == [3, 4, 5]
+
+    def test_edf_within_priority(self):
+        reqs = _reqs([0.0] * 3, out=8)
+        for r, d in zip(reqs, (9.0, 3.0, 6.0)):
+            r.deadline_s = d
+        sched = make_scheduler("deadline", service_rate_per_s=10.0,
+                               shed_late=False)
+        res = sched.schedule(reqs)
+        assert [r.req_id for r in res.released] == [1, 2, 0]
+
+    def test_sheds_infeasible_requests(self):
+        """With 1 release/s, later queue members cannot make a 1.5 s
+        deadline and must be shed, not served late."""
+        reqs = _reqs([0.0] * 5, out=8)
+        for r in reqs:
+            r.deadline_s = 1.5
+        res = make_scheduler("deadline",
+                             service_rate_per_s=1.0).schedule(reqs)
+        assert res.n_released == 2 and res.n_shed == 3
+        assert all(r.status == RequestStatus.SHED
+                   and r.shed_reason == "deadline_infeasible"
+                   for r in res.shed)
+
+    def test_shed_requests_never_reach_engine(self):
+        reqs = _reqs([0.0] * 5, out=8)
+        for r in reqs:
+            r.deadline_s = 1.5
+        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=8).run(
+            reqs, scheduler=make_scheduler("deadline",
+                                           service_rate_per_s=1.0))
+        assert rep.n == 2 and rep.n_shed == 3
+        assert all(r.tokens_generated == 0 for r in rep.shed)
+        assert all(r.t_done < 0 for r in rep.shed)
+        # shed requests count against attainment
+        assert rep.slo_attainment <= 2 / 5
+
+
+class TestEnergyBudget:
+    def _sched(self, cap, **kw):
+        return EnergyBudgetScheduler(cap, LLAMA8B, max_batch=32, **kw)
+
+    def test_burst_cheaper_than_straggler(self):
+        """Predicted marginal Wh of a burst member is far below a lone
+        straggler's (batch amortization)."""
+        s = self._sched(1.0)
+        r = Request(req_id=0, prompt=None, prompt_len=256,
+                    max_new_tokens=64)
+        alone = s.predicted_marginal_wh(r, inflight=0, group_size=1)
+        grouped = s.predicted_marginal_wh(r, inflight=0, group_size=16)
+        assert grouped < alone / 4
+
+    def test_admits_bursts_sheds_stragglers(self):
+        burst = _reqs([0.0] * 12, plen=256, out=32)
+        lone = _reqs([30.0, 60.0], plen=256, out=32)
+        for i, r in enumerate(lone):
+            r.req_id = 100 + i
+        cap = self._sched(1.0).predicted_marginal_wh(
+            burst[0], 0, group_size=12) * 3.0
+        res = self._sched(cap).schedule(burst + lone)
+        shed_ids = {r.req_id for r in res.shed}
+        assert shed_ids == {100, 101}
+        assert all(r.shed_reason == "over_energy_budget"
+                   for r in res.shed)
+
+    def test_for_engine_matches_engine_model(self):
+        eng = ServeEngine(LLAMA8B, fmt="float32", mode="continuous",
+                          max_batch=8)
+        s = EnergyBudgetScheduler.for_engine(eng, 0.01)
+        assert s.energy is eng.energy
+        assert s.max_batch == 8 and s.stack == eng.stack
+
+
+class TestEngineIntegration:
+    def test_passthrough_matches_no_scheduler(self):
+        arr = burst_arrivals(24, 6, 1.0)
+        plain = ServeEngine(LLAMA8B, mode="continuous",
+                            max_batch=8).run(_reqs(arr))
+        shaped = ServeEngine(LLAMA8B, mode="continuous", max_batch=8) \
+            .run(_reqs(arr), scheduler=make_scheduler("passthrough"))
+        assert shaped.total_energy_j == pytest.approx(
+            plain.total_energy_j, rel=1e-9)
+        assert shaped.wall_time_s == pytest.approx(plain.wall_time_s)
+        assert shaped.n_prefill_batches == plain.n_prefill_batches
+
+    @pytest.mark.parametrize("mode", ["sequential", "continuous"])
+    def test_all_released_complete(self, mode):
+        rep = ServeEngine(LLAMA8B, mode=mode, max_batch=8).run(
+            _reqs(poisson_arrivals(20, 25.0, seed=1), seed=2),
+            scheduler=make_scheduler("paced", rate_per_s=20.0, burst=2))
+        assert rep.n == 20
+        assert all(r.status == RequestStatus.DONE for r in rep.requests)
+        # served no earlier than the shaped release
+        assert all(r.t_prefill_start >= r.release_time - 1e-9
+                   for r in rep.requests)
+
+    def test_planned_gaps_are_gated(self):
+        """A planning scheduler lets the engine gate known quiet gaps;
+        passthrough burns full idle power over the same gaps."""
+        arr = burst_arrivals(24, 8, 4.0)
+        plain = ServeEngine(LLAMA8B, mode="continuous",
+                            max_batch=16).run(_reqs(arr))
+        shaped = ServeEngine(LLAMA8B, mode="continuous", max_batch=16) \
+            .run(_reqs(arr), scheduler=make_scheduler("window",
+                                                      window_s=0.5))
+        assert plain.gated_energy_j == 0.0
+        assert shaped.gated_energy_j > 0.0
+        assert shaped.total_energy_j < plain.total_energy_j
+
+    def test_energy_conservation_with_scheduler(self):
+        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=8).run(
+            _reqs(burst_arrivals(20, 5, 2.0)),
+            scheduler=make_scheduler("paced", rate_per_s=15.0, burst=4))
+        attributed = sum(r.energy_j for r in rep.requests)
+        assert attributed == pytest.approx(rep.busy_energy_j, rel=1e-6)
+        assert rep.total_energy_j == pytest.approx(
+            rep.busy_energy_j + rep.idle_energy_j + rep.gated_energy_j,
+            rel=1e-9)
+
+
+class TestClusterIntegration:
+    def test_scheduler_composes_with_routing(self):
+        cl = make_cluster(LLAMA8B, 2, policy="round_robin", max_batch=8)
+        rep = cl.run(_reqs(burst_arrivals(24, 6, 2.0)),
+                     scheduler=make_scheduler("window", window_s=1.0))
+        assert rep.n == 24
+        assert all(r.status == RequestStatus.DONE for r in rep.requests)
+        # planning scheduler gates work-less replicas during known gaps
+        assert rep.gated_energy_j > 0.0
+
+    def test_cluster_shed_accounting(self):
+        reqs = _reqs([0.0] * 6, out=8)
+        for r in reqs:
+            r.deadline_s = 1.5
+        cl = make_cluster(LLAMA8B, 2, policy="least_loaded", max_batch=8)
+        rep = cl.run(reqs, scheduler=make_scheduler(
+            "deadline", service_rate_per_s=1.0))
+        assert rep.n + rep.n_shed == 6
+        assert rep.n_shed > 0
+        assert rep.slo_attainment < 1.0
+
+    def test_cluster_trace_covers_fleet_energy(self):
+        trace = PowerTrace()
+        cl = make_cluster(LLAMA8B, 3, policy="round_robin", max_batch=8)
+        rep = cl.run(_reqs(burst_arrivals(18, 6, 2.0)),
+                     scheduler=make_scheduler("paced", rate_per_s=20.0,
+                                              burst=6),
+                     trace=trace)
+        assert trace.coverage(rep.total_energy_j) \
+            == pytest.approx(1.0, abs=1e-6)
+        assert trace.n_replicas == 3
+
+
+class TestFactoryAndSLOHelpers:
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError, match="unknown scheduling"):
+            make_scheduler("nope")
+
+    def test_plans_gaps_only_for_shaping_policies(self):
+        """Gating is licensed only by planned release times: shaping
+        policies plan, passthrough and pure admission control do not
+        (energy_budget releases at raw arrival times)."""
+        flags = {"passthrough": False, "paced": True, "window": True,
+                 "deadline": True, "energy_budget": False}
+        kw = {"paced": dict(rate_per_s=10.0),
+              "window": dict(window_s=1.0),
+              "deadline": dict(service_rate_per_s=10.0),
+              "energy_budget": dict(max_wh_per_request=0.01,
+                                    cfg=LLAMA8B)}
+        for name, want in flags.items():
+            sched = make_scheduler(name, **kw.get(name, {}))
+            assert sched.plans_gaps is want, name
+
+    def test_service_rate_estimate_positive_and_batch_monotone(self):
+        r1 = estimate_service_rate(LLAMA8B, prompt_len=512,
+                                   new_tokens=64, batch=1)
+        r16 = estimate_service_rate(LLAMA8B, prompt_len=512,
+                                    new_tokens=64, batch=16)
+        assert 0 < r1 < r16
+
+    def test_assign_slos_deterministic(self):
+        a = assign_slos(_reqs([0.0] * 50), seed=7)
+        b = assign_slos(_reqs([0.0] * 50), seed=7)
+        assert [r.slo_tier for r in a] == [r.slo_tier for r in b]
+        assert {r.slo_tier for r in a} <= {"interactive", "standard",
+                                           "batch"}

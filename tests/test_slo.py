@@ -1,0 +1,154 @@
+"""SLO layer tests: tier assignment, attainment scoring (shed counts
+as missed), analytic service estimates, and the empty/fully-shed
+report guards (satellite: no ZeroDivisionError/NaN on empty runs)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.serving import (BATCH, INTERACTIVE, Request, ServeEngine,
+                           SLOTier, STANDARD, assign_slos, attainment,
+                           estimate_request_latency, get_tier,
+                           make_cluster, make_scheduler, slo_summary)
+
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+
+
+def _req(i, arrival=0.0, **kw):
+    r = Request(req_id=i, prompt=None, prompt_len=128, max_new_tokens=8,
+                arrival_time=arrival)
+    for k, v in kw.items():
+        setattr(r, k, v)
+    return r
+
+
+class TestTiers:
+    def test_registry(self):
+        assert get_tier("interactive") is INTERACTIVE
+        assert get_tier("batch") is BATCH
+        with pytest.raises(ValueError, match="unknown SLO tier"):
+            get_tier("gold")
+
+    def test_priority_ordering(self):
+        assert INTERACTIVE.priority > STANDARD.priority > BATCH.priority
+        assert INTERACTIVE.deadline_s < STANDARD.deadline_s
+        assert math.isinf(BATCH.deadline_s)
+
+    def test_assign_weights(self):
+        reqs = assign_slos([_req(i) for i in range(600)],
+                           weights=(1.0, 0.0, 0.0), seed=0)
+        assert all(r.slo_tier == "interactive" for r in reqs)
+        assert all(r.priority == INTERACTIVE.priority for r in reqs)
+        assert all(r.deadline_s == INTERACTIVE.deadline_s for r in reqs)
+
+    def test_custom_tiers(self):
+        gold = SLOTier("gold", priority=9, deadline_s=0.5)
+        reqs = assign_slos([_req(0)], tiers=(gold,), seed=1)
+        assert reqs[0].slo_tier == "gold" and reqs[0].priority == 9
+
+
+class TestAttainment:
+    def test_met_and_missed(self):
+        met = _req(0, deadline_s=2.0)
+        met.t_done = 1.5
+        miss = _req(1, deadline_s=2.0)
+        miss.t_done = 3.0
+        assert met.met_deadline and not miss.met_deadline
+        assert attainment([met, miss]) == 0.5
+
+    def test_shed_counts_as_miss(self):
+        met = _req(0, deadline_s=2.0)
+        met.t_done = 1.0
+        shed = _req(1, deadline_s=2.0)
+        assert attainment([met], shed=[shed]) == 0.5
+
+    def test_empty_is_vacuous(self):
+        assert attainment([]) == 1.0
+
+    def test_summary_per_tier(self):
+        a = _req(0, deadline_s=2.0, slo_tier="interactive")
+        a.t_done = 1.0
+        b = _req(1, deadline_s=2.0, slo_tier="interactive")
+        b.t_done = 5.0
+        c = _req(2, deadline_s=math.inf, slo_tier="batch")
+        c.t_done = 50.0
+        s = slo_summary([a, b, c], shed=[])
+        assert s["attainment_interactive"] == 0.5
+        assert s["attainment_batch"] == 1.0
+        assert s["n_offered"] == 3 and s["n_shed"] == 0
+
+
+class TestEstimates:
+    def test_latency_scales_with_tokens(self):
+        short = estimate_request_latency(LLAMA8B, prompt_len=256,
+                                         new_tokens=16, batch=8)
+        long = estimate_request_latency(LLAMA8B, prompt_len=256,
+                                        new_tokens=256, batch=8)
+        assert 0 < short < long
+
+    def test_latency_tracks_engine_scale(self):
+        """The analytic estimate is the right order of magnitude vs the
+        discrete-event engine serving one request."""
+        est = estimate_request_latency(LLAMA8B, prompt_len=512,
+                                       new_tokens=64, batch=1)
+        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=1).run(
+            [_req(0, prompt_len=512, max_new_tokens=64)])
+        real = rep.requests[0].latency
+        assert real / 3 < est < real * 3
+
+
+class TestEmptyReportGuards:
+    """Satellite: empty or fully-shed runs must produce 0.0/NaN-free
+    summaries, not ZeroDivisionError."""
+
+    def _assert_finite(self, summary):
+        for k, v in summary.items():
+            if isinstance(v, float):
+                assert math.isfinite(v), k
+
+    def test_engine_empty_run(self):
+        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=4).run([])
+        assert rep.mean_energy_per_request_wh == 0.0
+        assert rep.mean_latency_s == 0.0
+        assert rep.mean_ttft_s == 0.0
+        assert rep.tokens_per_s == 0.0
+        assert rep.latency_percentiles()["p99"] == 0.0
+        assert rep.slo_attainment == 1.0
+        self._assert_finite(rep.summary())
+
+    def test_engine_fully_shed_run(self):
+        reqs = [_req(i, deadline_s=0.01) for i in range(5)]
+        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=4).run(
+            reqs, scheduler=make_scheduler("deadline",
+                                           service_rate_per_s=1.0,
+                                           est_latency_s=10.0))
+        assert rep.n == 0 and rep.n_shed == 5
+        assert rep.mean_energy_per_request_wh == 0.0
+        assert rep.mean_latency_s == 0.0
+        assert rep.slo_attainment == 0.0
+        self._assert_finite(rep.summary())
+
+    def test_cluster_empty_run(self):
+        cl = make_cluster(LLAMA8B, 2, policy="round_robin", max_batch=4)
+        rep = cl.run([])
+        assert rep.mean_energy_per_request_wh == 0.0
+        assert rep.latency_percentiles()["p99"] == 0.0
+        assert rep.ttft_percentiles()["p50"] == 0.0
+        assert rep.slo_attainment == 1.0
+        s = rep.summary()
+        for k, v in s.items():
+            if isinstance(v, float):
+                assert not np.isnan(v), k
+
+    def test_cluster_fully_shed_run(self):
+        reqs = [_req(i, deadline_s=0.01) for i in range(4)]
+        cl = make_cluster(LLAMA8B, 2, policy="round_robin", max_batch=4)
+        rep = cl.run(reqs, scheduler=make_scheduler(
+            "deadline", service_rate_per_s=1.0, est_latency_s=10.0))
+        assert rep.n == 0 and rep.n_shed == 4
+        assert rep.slo_attainment == 0.0
+        s = rep.summary()
+        for k, v in s.items():
+            if isinstance(v, float):
+                assert not np.isnan(v), k

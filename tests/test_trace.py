@@ -1,0 +1,140 @@
+"""Power-state trace tests: segment bookkeeping, merge behavior, exact
+energy accounting against engine reports, and JSON export."""
+import json
+
+import pytest
+
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.core.hardware import H100_SXM
+from repro.serving import (PowerTrace, Request, ServeEngine, STATES,
+                           burst_arrivals, make_scheduler)
+
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+
+
+def _reqs(arrivals, plen=256, out=16):
+    return [Request(req_id=i, prompt=None, prompt_len=plen,
+                    max_new_tokens=out, arrival_time=t)
+            for i, t in enumerate(arrivals)]
+
+
+class TestRecorder:
+    def test_basic_segment(self):
+        tr = PowerTrace()
+        tr.record(0, "idle", 0.0, 2.0, 240.0)
+        (seg,) = tr.segments
+        assert seg.power_w == pytest.approx(120.0)
+        assert seg.duration_s == 2.0
+
+    def test_adjacent_same_state_merge(self):
+        tr = PowerTrace()
+        tr.record(0, "decode", 0.0, 1.0, 10.0, batch=4)
+        tr.record(0, "decode", 1.0, 3.0, 20.0, batch=1)
+        assert len(tr.segments) == 1
+        seg = tr.segments[0]
+        assert seg.energy_j == 30.0 and seg.n_events == 2
+        # duration-weighted mean batch: (4*1 + 1*2) / 3
+        assert seg.batch == pytest.approx(2.0)
+
+    def test_state_change_starts_new_segment(self):
+        tr = PowerTrace()
+        tr.record(0, "decode", 0.0, 1.0, 10.0)
+        tr.record(0, "idle", 1.0, 2.0, 120.0)
+        tr.record(0, "decode", 2.0, 3.0, 10.0)
+        assert [s.state for s in tr.segments] \
+            == ["decode", "idle", "decode"]
+
+    def test_replicas_do_not_merge(self):
+        tr = PowerTrace()
+        tr.record(0, "idle", 0.0, 1.0, 120.0)
+        tr.record(1, "idle", 1.0, 2.0, 120.0)
+        assert len(tr.segments) == 2 and tr.n_replicas == 2
+
+    def test_rejects_bad_input(self):
+        tr = PowerTrace()
+        with pytest.raises(ValueError, match="unknown power state"):
+            tr.record(0, "nap", 0.0, 1.0, 1.0)
+        with pytest.raises(ValueError, match="ends before"):
+            tr.record(0, "idle", 2.0, 1.0, 1.0)
+
+    def test_empty_trace_is_nan_free(self):
+        tr = PowerTrace()
+        assert tr.total_energy_j == 0.0
+        assert tr.span_s == 0.0
+        assert tr.coverage(0.0) == 1.0
+        assert set(tr.energy_by_state()) == set(STATES)
+
+
+class TestEngineAccounting:
+    def _run(self, scheduler=None, mode="continuous"):
+        tr = PowerTrace()
+        rep = ServeEngine(LLAMA8B, mode=mode, max_batch=8).run(
+            _reqs(burst_arrivals(16, 4, 2.0)), scheduler=scheduler,
+            trace=tr)
+        return rep, tr
+
+    @pytest.mark.parametrize("mode", ["sequential", "continuous"])
+    def test_trace_energy_equals_report_total(self, mode):
+        rep, tr = self._run(mode=mode)
+        assert tr.total_energy_j == pytest.approx(rep.total_energy_j,
+                                                  rel=1e-9)
+        assert tr.coverage(rep.total_energy_j) \
+            == pytest.approx(1.0, abs=1e-9)
+
+    def test_states_split_matches_report(self):
+        rep, tr = self._run(
+            scheduler=make_scheduler("window", window_s=0.5))
+        by_state = tr.energy_by_state()
+        assert by_state["prefill"] + by_state["decode"] \
+            == pytest.approx(rep.busy_energy_j, rel=1e-9)
+        assert by_state["idle"] == pytest.approx(rep.idle_energy_j,
+                                                 rel=1e-9)
+        assert by_state["gated"] == pytest.approx(rep.gated_energy_j,
+                                                  rel=1e-9)
+        assert by_state["gated"] > 0.0
+
+    def test_gated_power_below_idle_power(self):
+        _, tr = self._run(
+            scheduler=make_scheduler("window", window_s=0.5))
+        for seg in tr.segments:
+            if seg.state == "gated":
+                assert seg.power_w == pytest.approx(
+                    H100_SXM.gated_power)
+            if seg.state == "idle":
+                assert seg.power_w == pytest.approx(H100_SXM.idle_power)
+
+    def test_timeline_is_contiguous_per_replica(self):
+        rep, tr = self._run()
+        segs = sorted(tr.segments, key=lambda s: s.t0)
+        for a, b in zip(segs, segs[1:]):
+            assert b.t0 == pytest.approx(a.t1, abs=1e-9)
+        assert segs[-1].t1 == pytest.approx(rep.wall_time_s, abs=1e-9)
+
+    def test_trace_detached_after_run(self):
+        eng = ServeEngine(LLAMA8B, mode="continuous", max_batch=8)
+        tr = PowerTrace()
+        eng.run(_reqs([0.0] * 4), trace=tr)
+        n = len(tr.segments)
+        eng.run(_reqs([0.0] * 4))   # no trace passed
+        assert len(tr.segments) == n
+
+
+class TestExport:
+    def test_json_roundtrip(self, tmp_path):
+        tr = PowerTrace()
+        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=8).run(
+            _reqs(burst_arrivals(8, 4, 1.0)),
+            scheduler=make_scheduler("paced", rate_per_s=10.0, burst=4),
+            trace=tr)
+        path = tmp_path / "trace.json"
+        tr.to_json(str(path))
+        blob = json.loads(path.read_text())
+        assert blob["n_segments"] == len(tr.segments)
+        assert blob["total_energy_j"] == pytest.approx(
+            rep.total_energy_j, rel=1e-9)
+        assert set(blob["energy_by_state_j"]) == set(STATES)
+        assert len(blob["segments"]) == blob["n_segments"]
+        s0 = blob["segments"][0]
+        for key in ("replica", "state", "t0", "t1", "energy_j",
+                    "power_w", "batch"):
+            assert key in s0
