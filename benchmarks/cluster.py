@@ -1,5 +1,5 @@
-"""Cluster serving sweep: routing policy x replica count x arrival
-pattern, on the paper's LLaMA-3.1-8B workload.
+"""Cluster serving sweep (routing policy x replica count x arrival
+pattern) as a declarative grid over :class:`repro.ExperimentSpec`.
 
 Fleet-level extension of Fig 3: the single-device result (orchestration
 dominates per-request energy) compounds across replicas — a router that
@@ -7,18 +7,16 @@ spreads bursty traffic keeps every replica warm at low batch (worst of
 both worlds), while the energy-aware policy consolidates load onto few
 warm replicas, batches them well, and power-gates the rest.
 
-Claims validated:
+Claims validated (same rows as ever, via declarative `repro.Claim`s):
 * energy-aware routing beats round-robin on mean Wh/request for bursty
-  arrivals on a 4-replica fleet (the consolidation + gating win),
+  arrivals on 4- and 2-replica fleets,
 * it also beats round-robin WITH idle gating (``round_robin_gated``),
   so the win is consolidation/batching quality, not just the gated-
   power discount,
 * energy-aware is never worse than round-robin on the steady fixed-
-  interval workload (consolidation cannot lose when spreading is
-  already optimal-ish),
+  interval workload,
 * a heterogeneous fleet (bf16 + fp32 replicas) routed energy-aware
-  beats round-robin on the same bursty workload (the router also picks
-  the cheaper format).
+  beats round-robin on the same bursty workload.
 
 Environment knobs (CI smoke / quick mode):
 * ``REPRO_CLUSTER_NREQ``    — requests per scenario (default 240).
@@ -28,11 +26,8 @@ from __future__ import annotations
 import os
 from typing import List
 
-from benchmarks.common import (PAPER_MODELS, Row, paper_requests,
-                               save_results)
-from repro.serving import (ClusterEngine, ServeEngine, burst_arrivals,
-                           fixed_arrivals, make_cluster, make_router,
-                           poisson_arrivals)
+from benchmarks.common import Row, claim_rows, save_sweep
+from repro import Claim, ExperimentSpec, Option, sweep
 
 N_REQ = int(os.environ.get("REPRO_CLUSTER_NREQ", "240"))
 # round_robin_gated spreads like round_robin but gates idle replicas —
@@ -41,92 +36,73 @@ N_REQ = int(os.environ.get("REPRO_CLUSTER_NREQ", "240"))
 # gating alone
 POLICIES = ("round_robin", "round_robin_gated", "least_loaded",
             "shortest_work", "energy_aware")
-REPLICAS = (2, 4)
 
+BASE = ExperimentSpec(model="llama-3.1-8b", fmt="bfloat16",
+                      mode="continuous", max_batch=32, n_requests=N_REQ)
 
-def _arrival_grid(n: int):
-    return {
-        "burst": burst_arrivals(n, max(n // 10, 1), 4.0),
-        "poisson_5rps": poisson_arrivals(n, rate_per_s=5.0, seed=0),
-        "fixed_100ms": fixed_arrivals(n, 0.1),
-    }
+ARRIVAL_AXIS = [
+    Option("burst", arrival="burst",
+           arrival_params={"burst_size": max(N_REQ // 10, 1),
+                           "burst_gap_s": 4.0}),
+    Option("poisson_5rps", arrival="poisson",
+           arrival_params={"rate_per_s": 5.0, "seed": 0}),
+    Option("fixed_100ms", arrival="fixed",
+           arrival_params={"interval_s": 0.1}),
+]
+
+CLAIMS = (
+    Claim("energy_aware_beats_rr_bursty_4rep",
+          ratio_of=("round_robin/4rep/burst", "energy_aware/4rep/burst"),
+          op=">", threshold=1.0),
+    Claim("energy_aware_beats_rr_bursty_2rep",
+          ratio_of=("round_robin/2rep/burst", "energy_aware/2rep/burst"),
+          op=">", threshold=1.0),
+    # beats round-robin WITH gating too: routing/consolidation quality,
+    # not just the gated-power discount
+    Claim("energy_aware_beats_gated_rr_bursty_4rep",
+          ratio_of=("round_robin_gated/4rep/burst",
+                    "energy_aware/4rep/burst"),
+          op=">", threshold=1.0),
+    Claim("energy_aware_no_worse_steady",
+          ratio_of=("round_robin/4rep/fixed_100ms",
+                    "energy_aware/4rep/fixed_100ms"),
+          threshold=1.0 / 1.02),
+    Claim("hetero_energy_aware_beats_rr",
+          ratio_of=("hetero/round_robin/4rep/burst",
+                    "hetero/energy_aware/4rep/burst"),
+          op=">", threshold=1.0),
+)
 
 
 def run() -> List[Row]:
-    cfg = PAPER_MODELS["llama-3.1-8b"]
-    rows: List[Row] = []
-    results = {}
-
-    def record(name: str, rep) -> None:
-        s = rep.summary()
-        results[name] = s
-        rows.append(Row(
-            name=f"cluster/{name}",
-            us_per_call=s["latency_p50_s"] * 1e6,
-            derived=(f"Wh/req={s['mean_energy_wh']:.5f} "
-                     f"util={s['mean_utilization']:.2f} "
-                     f"gatedJ={s['gated_energy_j']:.0f} "
-                     f"p99={s['latency_p99_s']:.2f}s")))
-
-    for n_rep in REPLICAS:
-        for arr_name, arrivals in _arrival_grid(N_REQ).items():
-            for policy in POLICIES:
-                cl = make_cluster(cfg, n_rep, policy=policy,
-                                  max_batch=32)
-                rep = cl.run(paper_requests(N_REQ, arrivals))
-                record(f"{policy}/{n_rep}rep/{arr_name}", rep)
+    res = sweep(BASE, {
+        "router": [Option(p, router=p) for p in POLICIES],
+        "replicas": [Option(f"{n}rep", replicas=n) for n in (2, 4)],
+        "arrival": ARRIVAL_AXIS,
+    })
 
     # heterogeneous fleet: half bf16, half fp32 replicas — the energy-
     # aware router should steer work to the cheaper bf16 replicas
-    def _hetero(policy: str) -> ClusterEngine:
-        fleet = [ServeEngine(cfg, fmt="bfloat16", mode="continuous",
-                             max_batch=32) for _ in range(2)]
-        fleet += [ServeEngine(cfg, fmt="float32", mode="continuous",
-                              max_batch=32) for _ in range(2)]
-        return ClusterEngine(fleet, make_router(policy))
+    hetero = BASE.derive(
+        replicas=4,
+        replica_overrides=({"fmt": "bfloat16"}, {"fmt": "bfloat16"},
+                           {"fmt": "float32"}, {"fmt": "float32"}))
+    res = res.merge(sweep(hetero, {
+        "router": [Option(p, router=p)
+                   for p in ("round_robin", "energy_aware")],
+        "replicas": [Option("4rep")],
+        "arrival": [ARRIVAL_AXIS[0]],
+    }, tag="hetero"))
+    res.check(CLAIMS)
 
-    arrivals = _arrival_grid(N_REQ)["burst"]
-    for policy in ("round_robin", "energy_aware"):
-        record(f"hetero/{policy}/4rep/burst",
-               _hetero(policy).run(paper_requests(N_REQ, arrivals)))
-
-    def wh(name: str) -> float:
-        return results[name]["mean_energy_wh"]
-
-    checks = {
-        "energy_aware_beats_rr_bursty_4rep": (
-            wh("round_robin/4rep/burst")
-            / wh("energy_aware/4rep/burst"),
-            wh("energy_aware/4rep/burst")
-            < wh("round_robin/4rep/burst")),
-        "energy_aware_beats_rr_bursty_2rep": (
-            wh("round_robin/2rep/burst")
-            / wh("energy_aware/2rep/burst"),
-            wh("energy_aware/2rep/burst")
-            < wh("round_robin/2rep/burst")),
-        # beats round-robin WITH gating too: routing/consolidation
-        # quality, not just the gated-power discount
-        "energy_aware_beats_gated_rr_bursty_4rep": (
-            wh("round_robin_gated/4rep/burst")
-            / wh("energy_aware/4rep/burst"),
-            wh("energy_aware/4rep/burst")
-            < wh("round_robin_gated/4rep/burst")),
-        "energy_aware_no_worse_steady": (
-            wh("round_robin/4rep/fixed_100ms")
-            / wh("energy_aware/4rep/fixed_100ms"),
-            wh("energy_aware/4rep/fixed_100ms")
-            <= wh("round_robin/4rep/fixed_100ms") * 1.02),
-        "hetero_energy_aware_beats_rr": (
-            wh("hetero/round_robin/4rep/burst")
-            / wh("hetero/energy_aware/4rep/burst"),
-            wh("hetero/energy_aware/4rep/burst")
-            < wh("hetero/round_robin/4rep/burst")),
-    }
-    for k, (v, ok) in checks.items():
-        rows.append(Row(name=f"claim/{k}", us_per_call=0.0,
-                        derived=f"value={v:.2f} pass={ok}"))
-    save_results("cluster", [{"results": results,
-                              "checks": {k: [float(v), bool(ok)]
-                                         for k, (v, ok)
-                                         in checks.items()}}])
+    rows = [Row(name=f"cluster/{label}",
+                us_per_call=r.latency_p50_s * 1e6,
+                derived=(f"Wh/req={r.mean_energy_wh:.5f} "
+                         f"util={r.utilization:.2f} "
+                         f"gatedJ={r.gated_energy_j:.0f} "
+                         f"p99={r.latency_p99_s:.2f}s"),
+                spec_hash=r.spec_hash)
+            for label, r in res.results.items()]
+    rows += claim_rows(res.claims)
+    save_sweep("cluster", res)
     return rows

@@ -1,10 +1,11 @@
 """Shared benchmark infrastructure.
 
-Defines the paper's model zoo (§2: Qwen-2.5 0.5–14B, Mistral-7B,
-LLaMA-3.1-8B/70B) as ModelConfigs, plus CSV/reporting helpers. Energy
-numbers come from the phase-aware analytic model on H100 constants
-(the paper's measurement platform); latency micro-measurements for the
-real-compute benches run reduced models on CPU.
+The paper's model zoo and the §2/§3.1 request sampler live in ``src``
+(`repro.configs.paper_zoo.PAPER_MODELS`,
+`repro.serving.arrival.paper_requests`) — re-exported here so older
+callers keep working. The benchmarks themselves are declarative sweeps
+over :class:`repro.ExperimentSpec` (see `repro.sweep`); this module
+keeps the CSV row schema and the result-dump helpers.
 """
 from __future__ import annotations
 
@@ -12,10 +13,12 @@ import dataclasses
 import json
 import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, Iterable, List
 
-# the paper's §2 model selection (single source of truth in src)
+# single sources of truth in src (re-exported for compatibility)
 from repro.configs.paper_zoo import PAPER_MODELS  # noqa: F401
+from repro.serving.arrival import paper_requests  # noqa: F401
+from repro.sweep import ClaimResult, SweepResult
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..",
                            "experiments", "bench")
@@ -29,9 +32,24 @@ class Row:
     name: str
     us_per_call: float
     derived: str
+    spec_hash: str = ""         # provenance: ExperimentSpec content hash
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def claim_rows(claims: Iterable[ClaimResult]) -> List[Row]:
+    """One ``claim/...`` row per declarative claim verdict (the schema
+    run.py's exit code and the CI gate key on)."""
+    return [Row(name=f"claim/{c.name}", us_per_call=0.0,
+                derived=f"value={c.value:.2f} pass={c.passed}")
+            for c in claims]
+
+
+def sweep_summary(res: SweepResult) -> Dict[str, Dict]:
+    """results-dict view of a sweep (label -> flat record) for
+    :func:`save_results`."""
+    return {label: r.to_dict() for label, r in res.results.items()}
 
 
 def save_results(bench: str, rows: List[Dict]) -> None:
@@ -40,23 +58,15 @@ def save_results(bench: str, rows: List[Dict]) -> None:
         json.dump(rows, f, indent=1)
 
 
-def paper_requests(n: int, arrivals, seed: int = 0,
-                   prompt_range=None) -> list:
-    """Serving requests sampled from the paper's §2/§3.1 workload
-    distribution (shared by the serving and cluster benchmarks)."""
-    from repro.serving import Request
-    from repro.training.data import RequestDistribution
-    kw = {"seed": seed}
-    if prompt_range is not None:
-        kw["prompt_range"] = prompt_range
-    dist = RequestDistribution(**kw)
-    out = []
-    for i in range(n):
-        s = dist.sample()
-        out.append(Request(req_id=i, prompt=None, prompt_len=s.prompt_len,
-                           max_new_tokens=s.output_len,
-                           arrival_time=arrivals[i]))
-    return out
+def save_sweep(bench: str, res: SweepResult) -> None:
+    """Standard dump for a sweep-based benchmark: per-label records plus
+    claim verdicts."""
+    save_results(bench, [{
+        "results": sweep_summary(res),
+        "checks": {c.name: [float(c.value), bool(c.passed)]
+                   for c in res.claims},
+        "cache": {"hits": res.cache_hits, "misses": res.cache_misses},
+    }])
 
 
 def timeit(fn: Callable, n: int = 3) -> float:

@@ -1,4 +1,5 @@
-"""Paper §6 macro impact estimate: serving LLaMA-8B at 1M requests/day.
+"""Paper §6 macro impact estimate: serving LLaMA-8B at 1M requests/day,
+as a two-point declarative sweep.
 
 naive (fp32, no batching, eager)  vs  optimized (bf16 + continuous
 batching + best fixed arrival spacing).
@@ -11,46 +12,39 @@ from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import PAPER_MODELS, Row, save_results
-from repro.serving import ServeEngine, Request, fixed_arrivals
-from repro.training.data import RequestDistribution
+from benchmarks.common import Row, claim_rows, save_sweep
+from repro import Claim, ExperimentSpec, Option, sweep
 
 N_REQ = 300
 REQ_PER_DAY = 1e6
 
+BASE = ExperimentSpec(model="llama-3.1-8b", n_requests=N_REQ)
 
-def _requests(n, arrivals, seed=0):
-    dist = RequestDistribution(seed=seed)
-    out = []
-    for i in range(n):
-        s = dist.sample()
-        out.append(Request(req_id=i, prompt=None, prompt_len=s.prompt_len,
-                           max_new_tokens=s.output_len,
-                           arrival_time=arrivals[i]))
-    return out
+CLAIMS = (
+    Claim("macro_reduction_ge_20x", ratio_of=("naive", "optimized"),
+          threshold=20.0),
+)
 
 
 def run() -> List[Row]:
-    cfg = PAPER_MODELS["llama-3.1-8b"]
-    naive = ServeEngine(cfg, fmt="float32", mode="sequential").run(
-        _requests(N_REQ, [0.0] * N_REQ))
-    opt = ServeEngine(cfg, fmt="bfloat16", mode="continuous",
-                      max_batch=64).run(
-        _requests(N_REQ, fixed_arrivals(N_REQ, 0.01)))
-    naive_kwh_day = (naive.mean_energy_per_request_wh * REQ_PER_DAY
-                     / 1e3)
-    opt_kwh_day = opt.mean_energy_per_request_wh * REQ_PER_DAY / 1e3
-    reduction = naive_kwh_day / opt_kwh_day
+    res = sweep(BASE, {"config": [
+        Option("naive", fmt="float32", mode="sequential"),
+        Option("optimized", fmt="bfloat16", mode="continuous",
+               max_batch=64, arrival="fixed",
+               arrival_params={"interval_s": 0.01}),
+    ]}, claims=CLAIMS)
+
+    def kwh_day(label: str) -> float:
+        return res[label].mean_energy_wh * REQ_PER_DAY / 1e3
+
     rows = [
         Row("macro/naive_fp32_kwh_per_day", 0.0,
-            f"{naive_kwh_day:.1f} kWh/day (paper: 1.2e2)"),
+            f"{kwh_day('naive'):.1f} kWh/day (paper: 1.2e2)",
+            spec_hash=res["naive"].spec_hash),
         Row("macro/optimized_kwh_per_day", 0.0,
-            f"{opt_kwh_day:.2f} kWh/day (paper: 1.1e0)"),
-        Row("claim/macro_reduction_ge_20x", 0.0,
-            f"value={reduction:.1f} pass={reduction >= 20}"),
+            f"{kwh_day('optimized'):.2f} kWh/day (paper: 1.1e0)",
+            spec_hash=res["optimized"].spec_hash),
     ]
-    save_results("macro", [{"naive_kwh_day": naive_kwh_day,
-                            "opt_kwh_day": opt_kwh_day,
-                            "reduction": reduction,
-                            "pass": bool(reduction >= 20)}])
+    rows += claim_rows(res.claims)
+    save_sweep("macro", res)
     return rows

@@ -1,7 +1,8 @@
 """Paper Fig. 1a/1b (energy by dtype x model, prefill/decode) and
-Fig. 4/5 (latency by dtype).
+Fig. 4/5 (latency by dtype), as a declarative profile-pipeline sweep
+(model x precision format) over :class:`repro.ExperimentSpec`.
 
-Claims validated:
+Claims validated (same rows as ever, via declarative `repro.Claim`s):
 * prefill: >=2.5x GPU-energy reduction fp32 -> bf16 for the largest
   models; small models gain much less (<2x),
 * prefill latency gain exceeds energy gain (Tensor Core power draw),
@@ -14,88 +15,93 @@ from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import (PAPER_MODELS, PAPER_PROMPT_MEAN,
-                               PAPER_OUTPUT_MEAN, Row, save_results)
-from repro.core import (PhaseProfiler, make_policy, H100_SXM, TPU_V5E,
-                        FusedDequantEnergyModel)
+from benchmarks.common import (PAPER_MODELS, PAPER_OUTPUT_MEAN,
+                               PAPER_PROMPT_MEAN, Row, claim_rows,
+                               save_sweep)
+from repro import Claim, ExperimentSpec, Option, sweep
 
 FORMATS = ("float32", "float16", "bfloat16", "int8", "nf4")
+MODELS = tuple(m for m in PAPER_MODELS if m != "llama-3.1-70b")
+
+#: one profiled prefill+decode point per (model, fmt): batch 1, the §3.1
+#: mean prompt, the §2 mean output length
+BASE = ExperimentSpec(pipeline="profile", max_batch=1,
+                      prompt_range=(PAPER_PROMPT_MEAN, PAPER_PROMPT_MEAN),
+                      output_range=(PAPER_OUTPUT_MEAN, PAPER_OUTPUT_MEAN))
+
+
+def _gain(rs, model: str, metric: str) -> float:
+    return (rs[f"model={model}/fmt=float32"].metric(metric)
+            / rs[f"model={model}/fmt=bfloat16"].metric(metric))
+
+
+CLAIMS = (
+    Claim("prefill_gain_large_fp32_to_bf16",
+          ratio_of=("model=qwen2.5-14b/fmt=float32",
+                    "model=qwen2.5-14b/fmt=bfloat16"),
+          metric="prefill_energy_j", threshold=2.5),
+    Claim("prefill_gain_small_lt_large",
+          value_fn=lambda rs: _gain(rs, "qwen2.5-0.5b",
+                                    "prefill_energy_j"),
+          op=">", threshold=0.0,
+          where=lambda rs: (_gain(rs, "qwen2.5-0.5b", "prefill_energy_j")
+                            < _gain(rs, "qwen2.5-14b",
+                                    "prefill_energy_j"))),
+    Claim("prefill_latency_gain_gt_energy_gain",
+          value_fn=lambda rs: _gain(rs, "qwen2.5-14b",
+                                    "prefill_latency_s"),
+          op=">", threshold=0.0,
+          where=lambda rs: (_gain(rs, "qwen2.5-14b", "prefill_latency_s")
+                            > _gain(rs, "qwen2.5-14b",
+                                    "prefill_energy_j"))),
+    Claim("decode_16bit_near_invariant",
+          ratio_of=("model=llama-3.1-8b/fmt=bfloat16",
+                    "model=llama-3.1-8b/fmt=float32"),
+          metric="decode_j_per_tok", op="range", threshold=(0.5, 1.1)),
+    Claim("decode_int8_penalty",
+          ratio_of=("model=llama-3.1-8b/fmt=int8",
+                    "model=llama-3.1-8b/fmt=float32"),
+          metric="decode_j_per_tok", threshold=1.7),
+    Claim("decode_int4_similar_to_fp32",
+          ratio_of=("model=llama-3.1-8b/fmt=nf4",
+                    "model=llama-3.1-8b/fmt=float32"),
+          metric="decode_j_per_tok", op="range", threshold=(0.6, 1.5)),
+    # beyond-paper: fused TPU dequant removes the int8 penalty
+    Claim("beyond_paper_fused_int8_beats_bf16",
+          ratio_of=("fused/int8_fused_dequant", "fused/bf16"),
+          metric="decode_j_per_tok", op="<", threshold=1.0),
+)
 
 
 def run() -> List[Row]:
+    res = sweep(BASE, {"model": list(MODELS), "fmt": list(FORMATS)})
+
+    # beyond-paper point: our Pallas TPU fused-dequant path, int8 vs
+    # bf16 decode on the fused serving stack
+    fused = BASE.derive(model="llama-3.1-8b", device="tpu-v5e",
+                        stack="fused", output_range=(64, 64))
+    res = res.merge(sweep(fused, {"fmt": [
+        Option("int8_fused_dequant", fmt="int8",
+               energy_model="fused_dequant"),
+        Option("bf16", fmt="bfloat16"),
+    ]}, tag="fused"))
+    res.check(CLAIMS)
+
     rows: List[Row] = []
-    data = []
-    for mname, cfg in PAPER_MODELS.items():
-        if mname == "llama-3.1-70b":
-            continue
-        rec = {"model": mname}
-        for fmt in FORMATS:
-            prof = PhaseProfiler(cfg, H100_SXM, make_policy(fmt))
-            pre = prof.profile_prefill(1, PAPER_PROMPT_MEAN)
-            dec = prof.profile_decode(1, PAPER_PROMPT_MEAN,
-                                      PAPER_OUTPUT_MEAN) \
-                .per(PAPER_OUTPUT_MEAN)
-            rec[fmt] = {
-                "prefill_J": pre.energy_j,
-                "prefill_ms": pre.latency * 1e3,
-                "prefill_bound": pre.bound,
-                "decode_J_per_tok": dec.energy_j,
-                "decode_ms_per_tok": dec.latency * 1e3,
-                "decode_bound": dec.bound,
-            }
-            rows.append(Row(
-                name=f"fig1a_prefill/{mname}/{fmt}",
-                us_per_call=pre.latency * 1e6,
-                derived=f"E={pre.energy_j:.2f}J bound={pre.bound}"))
-            rows.append(Row(
-                name=f"fig1b_decode/{mname}/{fmt}",
-                us_per_call=dec.latency * 1e6,
-                derived=f"E/tok={dec.energy_j:.2f}J bound={dec.bound}"))
-        data.append(rec)
-
-    # ---- claim checks (paper-faithful baseline) ------------------------
-    big = next(r for r in data if r["model"] == "qwen2.5-14b")
-    small = next(r for r in data if r["model"] == "qwen2.5-0.5b")
-    gain_big = big["float32"]["prefill_J"] / big["bfloat16"]["prefill_J"]
-    gain_small = (small["float32"]["prefill_J"]
-                  / small["bfloat16"]["prefill_J"])
-    lat_big = (big["float32"]["prefill_ms"]
-               / big["bfloat16"]["prefill_ms"])
-    l8 = next(r for r in data if r["model"] == "llama-3.1-8b")
-    dec_inv = l8["bfloat16"]["decode_J_per_tok"] \
-        / l8["float32"]["decode_J_per_tok"]
-    int8_pen = l8["int8"]["decode_J_per_tok"] \
-        / l8["float32"]["decode_J_per_tok"]
-    nf4_pen = l8["nf4"]["decode_J_per_tok"] \
-        / l8["float32"]["decode_J_per_tok"]
-    checks = {
-        "prefill_gain_large_fp32_to_bf16": (gain_big, gain_big >= 2.5),
-        "prefill_gain_small_lt_large": (gain_small,
-                                        gain_small < gain_big),
-        "prefill_latency_gain_gt_energy_gain": (lat_big,
-                                                lat_big > gain_big),
-        "decode_16bit_near_invariant": (dec_inv, 0.5 < dec_inv <= 1.1),
-        "decode_int8_penalty": (int8_pen, int8_pen >= 1.7),
-        "decode_int4_similar_to_fp32": (nf4_pen, 0.6 < nf4_pen < 1.5),
-    }
-    # ---- beyond-paper: fused TPU dequant removes the int8 penalty ------
-    prof_f = PhaseProfiler(PAPER_MODELS["llama-3.1-8b"], TPU_V5E,
-                           make_policy("int8"),
-                           energy_model_cls=FusedDequantEnergyModel,
-                           stack="fused")
-    prof_b = PhaseProfiler(PAPER_MODELS["llama-3.1-8b"], TPU_V5E,
-                           make_policy("bfloat16"), stack="fused")
-    e_fused = prof_f.profile_decode(1, PAPER_PROMPT_MEAN, 64).per(64)
-    e_bf16 = prof_b.profile_decode(1, PAPER_PROMPT_MEAN, 64).per(64)
-    fused_ratio = e_fused.energy_j / e_bf16.energy_j
-    checks["beyond_paper_fused_int8_beats_bf16"] = (
-        fused_ratio, fused_ratio < 1.0)
-
-    for k, (v, ok) in checks.items():
-        rows.append(Row(name=f"claim/{k}", us_per_call=0.0,
-                        derived=f"value={v:.3f} pass={ok}"))
-    save_results("precision", [{"data": data,
-                                "checks": {k: [float(v), bool(ok)]
-                                           for k, (v, ok)
-                                           in checks.items()}}])
+    for label, r in res.results.items():
+        model_fmt = label.replace("model=", "").replace("fmt=", "")
+        rows.append(Row(
+            name=f"fig1a_prefill/{model_fmt}",
+            us_per_call=r.prefill_latency_s * 1e6,
+            derived=(f"E={r.prefill_energy_j:.2f}J "
+                     f"bound={r.prefill_bound}"),
+            spec_hash=r.spec_hash))
+        rows.append(Row(
+            name=f"fig1b_decode/{model_fmt}",
+            us_per_call=r.decode_ms_per_tok * 1e3,
+            derived=(f"E/tok={r.decode_j_per_tok:.2f}J "
+                     f"bound={r.decode_bound}"),
+            spec_hash=r.spec_hash))
+    rows += claim_rows(res.claims)
+    save_sweep("precision", res)
     return rows

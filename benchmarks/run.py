@@ -9,17 +9,23 @@
     roofline (ours, §g)  -> benchmarks.roofline_report
     CPU wall-time micro  -> benchmarks.microbench
 
-Prints ``name,us_per_call,derived`` CSV. Claim-check rows are named
-``claim/...`` with pass/fail in the derived column; run.py exits
-non-zero if any claim fails.
+The paper-figure suites are declarative sweeps over
+:class:`repro.ExperimentSpec` (see `repro.sweep`); each prints
+``name,us_per_call,derived`` CSV rows whose JSON records carry the
+spec's content hash for cross-commit comparability. Claim-check rows
+are named ``claim/...`` with pass/fail in the derived column; run.py
+exits non-zero if any claim fails.
 
 CLI:
+    --list        print available suites and their declarative claims,
+                  then exit (runs nothing)
     --only a,b    run only the named benches
     --quick       cheapest configuration (CI smoke): skips the
                   real-compute microbench and shrinks the sweeps
     --json PATH   additionally dump every row as a machine-readable
-                  JSON record (one per row, claims carry pass/fail),
-                  so the perf trajectory can be tracked across commits
+                  JSON record (one per row; claims carry pass/fail,
+                  sweep rows carry their ExperimentSpec hash), so the
+                  perf trajectory can be tracked across commits
 """
 from __future__ import annotations
 
@@ -32,9 +38,11 @@ import time
 
 def _row_record(suite: str, row) -> dict:
     """One machine-readable record per printed row (claims also carry
-    their parsed value and pass/fail verdict)."""
+    their parsed value and pass/fail verdict; sweep-produced rows carry
+    the spec hash of the ExperimentSpec that generated them)."""
     rec = {"suite": suite, "name": row.name,
            "us_per_call": row.us_per_call, "derived": row.derived,
+           "spec_hash": getattr(row, "spec_hash", ""),
            "is_claim": row.name.startswith("claim/")}
     if rec["is_claim"]:
         for tok in row.derived.split():
@@ -48,8 +56,35 @@ def _row_record(suite: str, row) -> dict:
     return rec
 
 
+def _benches():
+    from benchmarks import (batching, cluster, macro, microbench,
+                            precision, roofline_report, scheduler,
+                            serving)
+    return [("precision", precision),
+            ("batching", batching),
+            ("serving", serving),
+            ("cluster", cluster),
+            ("scheduler", scheduler),
+            ("macro", macro),
+            ("roofline", roofline_report),
+            ("microbench", microbench)]
+
+
+def _list_suites() -> None:
+    """``--list``: the suites and the declarative claims each checks."""
+    for name, mod in _benches():
+        claims = getattr(mod, "CLAIMS", ())
+        print(f"{name}  ({len(claims)} claims)")
+        for c in claims:
+            thr = (f"({c.threshold[0]}, {c.threshold[1]})"
+                   if isinstance(c.threshold, tuple) else c.threshold)
+            print(f"  claim/{c.name}  [{c.metric} {c.op} {thr}]")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="print suites + declarative claims and exit")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names to run")
     ap.add_argument("--quick", action="store_true",
@@ -62,16 +97,11 @@ def main(argv=None) -> None:
         os.environ.setdefault("REPRO_CLUSTER_NREQ", "80")
         os.environ.setdefault("REPRO_SCHED_NREQ", "80")
 
-    from benchmarks import precision, batching, serving, cluster, \
-        scheduler, macro, roofline_report, microbench
-    benches = [("precision", precision.run),
-               ("batching", batching.run),
-               ("serving", serving.run),
-               ("cluster", cluster.run),
-               ("scheduler", scheduler.run),
-               ("macro", macro.run),
-               ("roofline", roofline_report.run),
-               ("microbench", microbench.run)]
+    if args.list:
+        _list_suites()
+        return
+
+    benches = [(n, mod.run) for n, mod in _benches()]
     if args.only:
         want = {w.strip() for w in args.only.split(",")}
         unknown = want - {n for n, _ in benches}
@@ -96,7 +126,7 @@ def main(argv=None) -> None:
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
               flush=True)
     if args.json:
-        blob = {"schema": "repro-bench-rows/v1",
+        blob = {"schema": "repro-bench-rows/v2",
                 "generated_unix": t_start,
                 "quick": bool(args.quick),
                 "n_failed_claims": len(failed),

@@ -1,12 +1,13 @@
 """Paper Fig. 3a/3c (serving config + arrival shaping) and Fig. 3b
-(70B scaling), via the discrete-event serving engine.
+(70B scaling) as a declarative sweep over :class:`repro.ExperimentSpec`.
 
-Claims validated:
+Claims validated (same rows as ever, now produced by `repro.Claim`
+objects over the sweep instead of hand-assembled checks):
 * naive (sequential transformers, bf16) ~= 0.12 Wh/request (paper 3a),
 * TGI-style continuous batching >= 10x better than naive,
-* best FIXED inter-arrival spacing -> >= 50x vs naive (paper: up to
-  100x; the exact optimal interval depends on per-step service time —
-  we sweep intervals and report the best, see EXPERIMENTS.md),
+* best FIXED inter-arrival spacing -> >= 15x vs naive on the §2
+  workload and >= 40x in the short-prompt regime (paper: up to 100x;
+  see EXPERIMENTS.md for the prefill-floor analysis),
 * fixed spacing >= uniform-random spacing at equal mean rate,
 * LLaMA-70B on 4 chips with continuous batching beats the naive 8B
   baseline per request (paper 3b).
@@ -15,115 +16,76 @@ from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import (PAPER_MODELS, Row, paper_requests,
-                               save_results)
-from repro.serving import (ServeEngine, fixed_arrivals,
-                           uniform_random_arrivals)
+from benchmarks.common import Row, claim_rows, save_sweep
+from repro import Claim, ExperimentSpec, Option, sweep
 
 N_REQ = 400
 INTERVALS_MS = (10, 20, 50, 100, 300, 500)
 
-_requests = paper_requests
+BASE = ExperimentSpec(model="llama-3.1-8b", fmt="bfloat16",
+                      mode="continuous", max_batch=64, n_requests=N_REQ)
+
+def _fixed(ms: int, prefix: str = "") -> Option:
+    return Option(f"{prefix}fixed_{ms}ms", arrival="fixed",
+                  arrival_params={"interval_s": ms / 1e3})
+
+
+def _random(ms: int) -> Option:
+    return Option(f"random_{ms}ms", arrival="uniform",
+                  arrival_params={"low_s": 0.0, "high_s": 2 * ms / 1e3})
+
+
+CLAIMS = (
+    Claim("naive_near_paper_0.12wh", value_of="naive_sequential_bf16",
+          op="range", threshold=(0.04, 0.4)),
+    Claim("tgi_ge_10x_better",
+          ratio_of=("naive_sequential_bf16", "tgi_burst"),
+          threshold=10.0),
+    # paper: up to 100x. With the §2 workload (prompts 200-4000) the
+    # prefill compute floor caps the ratio near ~30x; the >=40x short-
+    # prompt claim below covers the regime where the headline lives.
+    Claim("best_fixed_ge_15x_paper_workload",
+          ratio_of=("naive_sequential_bf16", "fixed_*ms"),
+          agg_den="min", threshold=15.0),
+    Claim("best_fixed_ge_40x_short_prompts",
+          ratio_of=("short/naive_sequential_bf16", "short/fixed_*ms"),
+          agg_den="min", threshold=40.0),
+    Claim("fixed_beats_random_at_best",
+          ratio_of=("random_10ms", "fixed_10ms"),
+          threshold=1.0 / 1.05),
+    Claim("70b_tgi_beats_naive_8b",
+          ratio_of=("naive_sequential_bf16", "llama70b_tgi_burst_4chip"),
+          op=">", threshold=1.0),
+)
 
 
 def run() -> List[Row]:
-    cfg8 = PAPER_MODELS["llama-3.1-8b"]
-    cfg70 = PAPER_MODELS["llama-3.1-70b"]
-    rows: List[Row] = []
-    results = {}
+    res = sweep(BASE, {"scenario": [
+        # Fig 3a: naive sequential vs TGI-like burst
+        Option("naive_sequential_bf16", mode="sequential"),
+        Option("tgi_burst"),
+        # Fig 3c: arrival-shaping sweep, fixed vs random per interval
+        *[_fixed(ms) for ms in INTERVALS_MS],
+        *[_random(ms) for ms in INTERVALS_MS],
+        # Fig 3b: 70B on 4 chips
+        Option("llama70b_tgi_burst_4chip", model="llama-3.1-70b",
+               n_chips=4),
+        # short-prompt regime (prompts 200-600): where the paper's 100x
+        # headline is physically reachable — see EXPERIMENTS.md
+        Option("short/naive_sequential_bf16", mode="sequential",
+               prompt_range=(200, 600)),
+        *[Option(f"short/fixed_{ms}ms", arrival="fixed",
+                 arrival_params={"interval_s": ms / 1e3},
+                 prompt_range=(200, 600)) for ms in (10, 20, 50)],
+    ]}, claims=CLAIMS)
 
-    def record(name, rep):
-        results[name] = rep.summary()
-        rows.append(Row(
-            name=f"fig3/{name}",
-            us_per_call=rep.mean_latency_s * 1e6,
-            derived=(f"Wh/req={rep.mean_energy_per_request_wh:.5f} "
-                     f"batch={rep.mean_batch:.1f} "
-                     f"idle={rep.summary()['idle_fraction']:.2f}")))
-        return rep
-
-    # naive: sequential transformers (bf16), back-to-back requests
-    naive = record("naive_sequential_bf16", ServeEngine(
-        cfg8, fmt="bfloat16", mode="sequential").run(
-        _requests(N_REQ, [0.0] * N_REQ)))
-
-    # TGI-like burst
-    tgi_burst = record("tgi_burst", ServeEngine(
-        cfg8, fmt="bfloat16", mode="continuous", max_batch=64).run(
-        _requests(N_REQ, [0.0] * N_REQ)))
-
-    # arrival shaping sweep: fixed vs random at each interval (Fig 3c)
-    best_fixed = None
-    for ms in INTERVALS_MS:
-        rep_f = record(f"fixed_{ms}ms", ServeEngine(
-            cfg8, fmt="bfloat16", mode="continuous", max_batch=64).run(
-            _requests(N_REQ, fixed_arrivals(N_REQ, ms / 1e3))))
-        record(f"random_{ms}ms", ServeEngine(
-            cfg8, fmt="bfloat16", mode="continuous", max_batch=64).run(
-            _requests(N_REQ, uniform_random_arrivals(
-                N_REQ, 0.0, 2 * ms / 1e3))))
-        if (best_fixed is None
-                or rep_f.mean_energy_per_request_wh
-                < best_fixed.mean_energy_per_request_wh):
-            best_fixed = rep_f
-
-    # Fig 3b: 70B on 4 chips
-    rep70 = record("llama70b_tgi_burst_4chip", ServeEngine(
-        cfg70, fmt="bfloat16", mode="continuous", max_batch=64,
-        n_chips=4).run(_requests(N_REQ, [0.0] * N_REQ)))
-
-    # short-prompt scenario: the paper's 100x headline is only
-    # physically reachable when the per-request prefill compute floor
-    # (2*N*prompt at 700 W) is small vs the naive decode cost — see
-    # EXPERIMENTS.md §Validation for the floor analysis. prompts 200-600
-    # put the workload in that regime.
-    def _short(n, arrivals, seed=0):
-        return paper_requests(n, arrivals, seed=seed,
-                              prompt_range=(200, 600))
-
-    naive_s = record("short/naive_sequential_bf16", ServeEngine(
-        cfg8, fmt="bfloat16", mode="sequential").run(
-        _short(N_REQ, [0.0] * N_REQ)))
-    best_s = None
-    for ms in (10, 20, 50):
-        rep = record(f"short/fixed_{ms}ms", ServeEngine(
-            cfg8, fmt="bfloat16", mode="continuous", max_batch=64).run(
-            _short(N_REQ, fixed_arrivals(N_REQ, ms / 1e3))))
-        if (best_s is None or rep.mean_energy_per_request_wh
-                < best_s.mean_energy_per_request_wh):
-            best_s = rep
-
-    naive_wh = naive.mean_energy_per_request_wh
-    short_ratio = (naive_s.mean_energy_per_request_wh
-                   / best_s.mean_energy_per_request_wh)
-    checks = {
-        "naive_near_paper_0.12wh": (naive_wh, 0.04 < naive_wh < 0.4),
-        "tgi_ge_10x_better": (naive_wh / tgi_burst
-                              .mean_energy_per_request_wh,
-                              naive_wh / tgi_burst
-                              .mean_energy_per_request_wh >= 10),
-        # paper: up to 100x. With the §2 workload (prompts 200-4000) the
-        # prefill compute floor caps the ratio near ~30x; we assert the
-        # honest >=15x here and >=40x in the short-prompt regime below.
-        "best_fixed_ge_15x_paper_workload": (
-            naive_wh / best_fixed.mean_energy_per_request_wh,
-            naive_wh / best_fixed.mean_energy_per_request_wh >= 15),
-        "best_fixed_ge_40x_short_prompts": (short_ratio,
-                                            short_ratio >= 40),
-        "fixed_beats_random_at_best": (
-            results["random_10ms"]["mean_energy_wh"]
-            / results["fixed_10ms"]["mean_energy_wh"],
-            results["fixed_10ms"]["mean_energy_wh"]
-            <= results["random_10ms"]["mean_energy_wh"] * 1.05),
-        "70b_tgi_beats_naive_8b": (
-            naive_wh / rep70.mean_energy_per_request_wh,
-            rep70.mean_energy_per_request_wh < naive_wh),
-    }
-    for k, (v, ok) in checks.items():
-        rows.append(Row(name=f"claim/{k}", us_per_call=0.0,
-                        derived=f"value={v:.2f} pass={ok}"))
-    save_results("serving", [{"results": results,
-                              "checks": {k: [float(v), bool(ok)]
-                                         for k, (v, ok)
-                                         in checks.items()}}])
+    rows = [Row(name=f"fig3/{label}",
+                us_per_call=r.mean_latency_s * 1e6,
+                derived=(f"Wh/req={r.mean_energy_wh:.5f} "
+                         f"batch={r.mean_batch:.1f} "
+                         f"idle={r.idle_fraction:.2f}"),
+                spec_hash=r.spec_hash)
+            for label, r in res.results.items()]
+    rows += claim_rows(res.claims)
+    save_sweep("serving", res)
     return rows

@@ -1,50 +1,38 @@
 """Paper §5 in miniature: how request arrival shaping changes energy per
-request for LLaMA-3.1-8B under TGI-style continuous batching.
+request for LLaMA-3.1-8B under TGI-style continuous batching — as a
+declarative sweep over `repro.ExperimentSpec`.
 
     PYTHONPATH=src python examples/arrival_shaping.py
 """
-from repro.configs.base import ModelConfig
-from repro.serving import (ServeEngine, Request, fixed_arrivals,
-                           uniform_random_arrivals)
-from repro.training.data import RequestDistribution
+import repro
 
-LLAMA8B = ModelConfig(name="llama-3.1-8b", family="dense", num_layers=32,
-                      d_model=4096, num_heads=32, num_kv_heads=8,
-                      d_ff=14336, vocab_size=128256)
-
-
-def requests(n, arrivals, seed=0):
-    dist = RequestDistribution(seed=seed)
-    out = []
-    for i in range(n):
-        s = dist.sample()
-        out.append(Request(req_id=i, prompt=None, prompt_len=s.prompt_len,
-                           max_new_tokens=s.output_len,
-                           arrival_time=arrivals[i]))
-    return out
+BASE = repro.ExperimentSpec(model="llama-3.1-8b", fmt="bfloat16",
+                            mode="continuous", max_batch=64,
+                            n_requests=300)
 
 
 def main() -> None:
-    n = 300
-    naive = ServeEngine(LLAMA8B, fmt="bfloat16", mode="sequential").run(
-        requests(n, [0.0] * n))
+    naive, _ = repro.run_spec(BASE.derive(mode="sequential"))
+    grid = repro.sweep(BASE, {"pattern": [
+        repro.Option("burst (all at t=0)"),
+        repro.Option("random U(0,100ms)", arrival="uniform",
+                     arrival_params={"low_s": 0.0, "high_s": 0.1}),
+        repro.Option("fixed 50ms", arrival="fixed",
+                     arrival_params={"interval_s": 0.05}),
+        repro.Option("fixed 20ms", arrival="fixed",
+                     arrival_params={"interval_s": 0.02}),
+        repro.Option("fixed 10ms", arrival="fixed",
+                     arrival_params={"interval_s": 0.01}),
+    ]})
+
+    base = naive.mean_energy_wh
     print(f"{'pattern':24s} {'Wh/request':>12s} {'mean batch':>11s} "
           f"{'vs naive':>9s}")
-    base = naive.mean_energy_per_request_wh
     print(f"{'naive sequential':24s} {base:12.5f} {1.0:11.1f} "
           f"{1.0:8.1f}x")
-    for label, arr in [
-        ("burst (all at t=0)", [0.0] * n),
-        ("random U(0,100ms)", uniform_random_arrivals(n, 0.0, 0.1)),
-        ("fixed 50ms", fixed_arrivals(n, 0.05)),
-        ("fixed 20ms", fixed_arrivals(n, 0.02)),
-        ("fixed 10ms", fixed_arrivals(n, 0.01)),
-    ]:
-        rep = ServeEngine(LLAMA8B, fmt="bfloat16", mode="continuous",
-                          max_batch=64).run(requests(n, arr))
-        wh = rep.mean_energy_per_request_wh
-        print(f"{label:24s} {wh:12.5f} {rep.mean_batch:11.1f} "
-              f"{base/wh:8.1f}x")
+    for label, r in grid.results.items():
+        print(f"{label:24s} {r.mean_energy_wh:12.5f} "
+              f"{r.mean_batch:11.1f} {base / r.mean_energy_wh:8.1f}x")
     print("\nsteady spacing at a rate the server can batch -> biggest "
           "win (paper: up to 100x vs the naive baseline)")
 

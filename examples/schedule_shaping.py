@@ -1,80 +1,51 @@
 """Paper §5 with an *active* scheduler: the same bursty request stream
 served unshaped (naive sequential, then plain continuous batching) and
-shaped by each scheduling policy, with the power-state timeline showing
-where the saved joules come from.
+shaped by each scheduling policy — one declarative sweep over the
+scheduler axis — with the power-state breakdown showing where the saved
+joules come from.
 
     PYTHONPATH=src python examples/schedule_shaping.py
 """
-from repro.configs.base import ModelConfig
-from repro.serving import (EnergyBudgetScheduler, PowerTrace, Request,
-                           ServeEngine, assign_slos, burst_arrivals,
-                           estimate_request_latency, estimate_service_rate,
-                           make_scheduler)
-from repro.training.data import RequestDistribution
+import repro
 
-LLAMA8B = ModelConfig(name="llama-3.1-8b", family="dense", num_layers=32,
-                      d_model=4096, num_heads=32, num_kv_heads=8,
-                      d_ff=14336, vocab_size=128256)
-N = 160
-
-
-def requests(arrivals, seed=0):
-    dist = RequestDistribution(seed=seed, prompt_range=(200, 600))
-    out = []
-    for i in range(len(arrivals)):
-        s = dist.sample()
-        out.append(Request(req_id=i, prompt=None, prompt_len=s.prompt_len,
-                           max_new_tokens=s.output_len,
-                           arrival_time=arrivals[i]))
-    return out
+BASE = repro.ExperimentSpec(
+    model="llama-3.1-8b", fmt="bfloat16", mode="continuous",
+    max_batch=64, n_requests=160, prompt_range=(200, 600),
+    arrival="burst", arrival_params={"burst_size": 20,
+                                     "burst_gap_s": 6.0},
+    slo_weights=(1.0, 1.0, 1.0), slo_seed=1)
 
 
 def main() -> None:
-    arrivals = burst_arrivals(N, 20, 6.0)   # bursty, low mean rate
+    naive, _ = repro.run_spec(BASE.derive(mode="sequential"))
+    grid = repro.sweep(BASE, {"policy": [
+        repro.Option("passthrough (continuous)", scheduler="passthrough"),
+        repro.Option("window 2s", scheduler="window",
+                     scheduler_params={"window_s": 2.0}, trace=True),
+        repro.Option("paced 30/s burst 8", scheduler="paced",
+                     scheduler_params={"rate_per_s": 30, "burst": 8}),
+        repro.Option("deadline (EDF + shed)", scheduler="deadline"),
+        repro.Option("energy budget 10 mWh", scheduler="energy_budget",
+                     scheduler_params={"max_wh_per_request": 0.010}),
+    ]})
 
-    naive = ServeEngine(LLAMA8B, fmt="bfloat16",
-                        mode="sequential").run(requests(arrivals))
-    base = naive.mean_energy_per_request_wh
+    base = naive.mean_energy_wh
     print(f"{'policy':26s} {'Wh/request':>10s} {'p99 lat':>8s} "
           f"{'shed':>5s} {'vs naive':>9s}")
     print(f"{'unshaped naive sequential':26s} {base:10.5f} "
-          f"{naive.latency_percentiles()['p99']:7.1f}s {0:5d} "
-          f"{1.0:8.1f}x")
+          f"{naive.latency_p99_s:7.1f}s {0:5d} {1.0:8.1f}x")
+    for label, r in grid.results.items():
+        print(f"{label:26s} {r.mean_energy_wh:10.5f} "
+              f"{r.latency_p99_s:7.1f}s {r.n_shed:5d} "
+              f"{base / r.mean_energy_wh:8.1f}x")
 
-    rate = estimate_service_rate(LLAMA8B, prompt_len=400, new_tokens=80,
-                                 batch=32)
-    lat = estimate_request_latency(LLAMA8B, prompt_len=400, new_tokens=80,
-                                   batch=32)
-    window_trace = PowerTrace()
-    policies = [
-        ("passthrough (continuous)", make_scheduler("passthrough"), None),
-        ("window 2s", make_scheduler("window", window_s=2.0),
-         window_trace),
-        ("paced 30/s burst 8",
-         make_scheduler("paced", rate_per_s=30, burst=8), None),
-        ("deadline (EDF + shed)",
-         make_scheduler("deadline", service_rate_per_s=rate,
-                        est_latency_s=lat), None),
-        ("energy budget 10 mWh", None, None),   # built per engine below
-    ]
-    for label, sched, trace in policies:
-        eng = ServeEngine(LLAMA8B, fmt="bfloat16", mode="continuous",
-                          max_batch=64)
-        if sched is None:
-            sched = EnergyBudgetScheduler.for_engine(eng, 0.010)
-        reqs = assign_slos(requests(arrivals), seed=1)
-        rep = eng.run(reqs, scheduler=sched, trace=trace)
-        wh = rep.mean_energy_per_request_wh
-        print(f"{label:26s} {wh:10.5f} "
-              f"{rep.latency_percentiles()['p99']:7.1f}s "
-              f"{rep.n_shed:5d} {base / wh:8.1f}x")
-
-    total = window_trace.total_energy_j
-    print("\nwindow-shaped power-state timeline "
-          f"({len(window_trace.segments)} segments, "
-          f"{total:.0f} J total):")
-    for state, e in window_trace.energy_by_state().items():
-        t = window_trace.time_by_state()[state]
+    win = grid["window 2s"]
+    total = sum(win.energy_by_state_j.values())
+    print(f"\nwindow-shaped power-state breakdown "
+          f"({total:.0f} J total, trace covers "
+          f"{win.trace_coverage:.0%} of report energy):")
+    for state, e in win.energy_by_state_j.items():
+        t = win.time_by_state_s[state]
         print(f"  {state:8s} {e:8.0f} J  ({100 * e / total:5.1f}%)  "
               f"{t:7.1f} s")
     print("\nshaping turns unplanned idle (120 W) into planned gated "

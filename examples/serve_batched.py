@@ -1,68 +1,48 @@
 """End-to-end serving driver (the paper's kind of system): serve a small
 model with real batched requests through the continuous-batching engine
 — genuine JAX prefill/decode steps, token-level scheduling, paged-KV
-admission, and phase-aware energy accounting per request.
+admission, and phase-aware energy accounting per request — driven
+entirely by a declarative spec with ``execute=True``.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
 import time
 
-import jax
-import numpy as np
+import repro
 
-from repro.configs import get_config
-from repro.models import build_model
-from repro.serving import (ServeEngine, Request,
-                           uniform_random_arrivals)
-
-
-def make_requests(n, cfg, arrivals, seed=0):
-    rng = np.random.default_rng(seed)
-    reqs = []
-    for i in range(n):
-        plen = int(rng.integers(8, 24))
-        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
-        reqs.append(Request(req_id=i, prompt=prompt, prompt_len=plen,
-                            max_new_tokens=int(rng.integers(4, 12)),
-                            arrival_time=arrivals[i]))
-    return reqs
+BASE = repro.ExperimentSpec(
+    model="stablelm-1.6b", reduced=True, execute=True, buf_len=64,
+    fmt="float32", mode="continuous", max_batch=8, max_prefill_batch=4,
+    n_requests=24, prompt_range=(8, 24), output_range=(4, 12),
+    arrival="uniform", arrival_params={"low_s": 0.0, "high_s": 0.02})
 
 
 def main() -> None:
-    cfg = get_config("stablelm-1.6b").reduced()
-    model = build_model(cfg, fmt="float32")
-    params = model.init(jax.random.PRNGKey(0))
+    cfg = BASE.model_config()
     print(f"serving {cfg.name} ({cfg.param_count()/1e6:.1f}M params) "
           f"with REAL execution through the continuous batcher")
 
-    n = 24
     t0 = time.perf_counter()
-    eng = ServeEngine(cfg, mode="continuous", max_batch=8,
-                      max_prefill_batch=4, execute=True, model=model,
-                      params=params, buf_len=64)
-    rep = eng.run(make_requests(n, cfg, uniform_random_arrivals(
-        n, 0.0, 0.02)))
+    rep = BASE.run()
     wall = time.perf_counter() - t0
-    print(f"completed {rep.n} requests in {wall:.1f}s wall "
-          f"({rep.n_prefill_batches} prefill batches, "
-          f"{rep.n_decode_steps} decode steps, "
+    eng_rep = rep.report          # the underlying ServeReport
+    print(f"completed {rep.n_requests} requests in {wall:.1f}s wall "
+          f"({eng_rep.n_prefill_batches} prefill batches, "
+          f"{eng_rep.n_decode_steps} decode steps, "
           f"mean live batch {rep.mean_batch:.2f})")
-    for r in rep.requests[:3]:
+    for r in eng_rep.requests[:3]:
         print(f"  req {r.req_id}: prompt={r.prompt_len} -> "
               f"{r.generated}")
-    s = rep.summary()
     print("modeled serving metrics (H100 constants): "
-          f"{s['mean_energy_wh']*1e3:.3f} mWh/request, "
-          f"ttft={s['mean_ttft_s']*1e3:.1f} ms(model-time)")
+          f"{rep.mean_energy_wh*1e3:.3f} mWh/request, "
+          f"ttft={rep.mean_ttft_s*1e3:.1f} ms(model-time)")
 
     # same workload, sequential mode — the paper's Fig 3a contrast
-    eng2 = ServeEngine(cfg, mode="sequential", execute=True, model=model,
-                       params=params, buf_len=64)
-    rep2 = eng2.run(make_requests(n, cfg, [0.0] * n))
+    rep2 = BASE.derive(mode="sequential").run()
     print(f"sequential baseline: "
-          f"{rep2.summary()['mean_energy_wh']*1e3:.3f} mWh/request -> "
+          f"{rep2.mean_energy_wh*1e3:.3f} mWh/request -> "
           f"continuous batching is "
-          f"{rep2.summary()['mean_energy_wh']/s['mean_energy_wh']:.1f}x "
+          f"{rep2.mean_energy_wh/rep.mean_energy_wh:.1f}x "
           f"more energy-efficient on this workload")
 
 

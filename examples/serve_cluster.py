@@ -1,44 +1,36 @@
 """Fleet serving demo: route one bursty arrival stream across a
-4-replica LLaMA-3.1-8B cluster under each routing policy, and watch the
-energy-aware router consolidate load, power-gate idle replicas, and cut
-fleet Wh/request roughly in half vs round-robin.
+4-replica LLaMA-3.1-8B cluster under each routing policy — a one-axis
+declarative sweep — and watch the energy-aware router consolidate load,
+power-gate idle replicas, and cut fleet Wh/request roughly in half vs
+round-robin.
 
     PYTHONPATH=src python examples/serve_cluster.py
 """
-import numpy as np
-
-from repro.configs.paper_zoo import PAPER_MODELS
-from repro.serving import (Request, burst_arrivals, make_cluster,
-                           POLICIES)
-
-LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+import repro
+from repro.serving import POLICIES
 
 N_REQ = 120
 
-
-def build_requests(arrivals, seed: int = 0):
-    rng = np.random.default_rng(seed)
-    return [Request(req_id=i, prompt=None,
-                    prompt_len=int(rng.integers(200, 1200)),
-                    max_new_tokens=int(rng.integers(20, 120)),
-                    arrival_time=arrivals[i])
-            for i in range(N_REQ)]
+BASE = repro.ExperimentSpec(
+    model="llama-3.1-8b", mode="continuous", max_batch=32,
+    replicas=4, n_requests=N_REQ,
+    prompt_range=(200, 1200), output_range=(20, 120),
+    arrival="burst", arrival_params={"burst_size": 12,
+                                     "burst_gap_s": 4.0})
 
 
 def main() -> None:
-    arrivals = burst_arrivals(N_REQ, burst_size=12, burst_gap_s=4.0)
-    print(f"fleet: 4x {LLAMA8B.name} replicas, {N_REQ} requests in "
+    print(f"fleet: 4x {BASE.model} replicas, {N_REQ} requests in "
           f"bursts of 12 every 4 s\n")
     print(f"{'policy':14s} {'Wh/req':>8s} {'util':>5s} {'idle J':>8s} "
           f"{'gated J':>8s} {'p99 lat':>8s}  requests/replica")
-    for policy in POLICIES:
-        cluster = make_cluster(LLAMA8B, 4, policy=policy, max_batch=32)
-        rep = cluster.run(build_requests(arrivals))
-        s = rep.summary()
-        print(f"{policy:14s} {s['mean_energy_wh']:8.5f} "
-              f"{s['mean_utilization']:5.2f} {s['idle_energy_j']:8.0f} "
-              f"{s['gated_energy_j']:8.0f} {s['latency_p99_s']:7.2f}s  "
-              f"{rep.requests_per_replica}")
+    grid = repro.sweep(BASE, {"router": list(POLICIES)})
+    for label, r in grid.results.items():
+        policy = label.split("=", 1)[1]
+        print(f"{policy:14s} {r.mean_energy_wh:8.5f} "
+              f"{r.utilization:5.2f} {r.idle_energy_j:8.0f} "
+              f"{r.gated_energy_j:8.0f} {r.latency_p99_s:7.2f}s  "
+              f"{list(r.requests_per_replica)}")
     print("\nenergy-aware concentrates the burst on warm replicas "
           "(bigger decode batches) and gates the rest — the fleet-scale "
           "version of the paper's batching result.")

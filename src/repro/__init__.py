@@ -1,0 +1,35 @@
+"""repro — reproduction of "Understanding Efficiency: Quantization,
+Batching, and Serving Strategies in LLM Energy Use", grown into a
+serving-system energy laboratory.
+
+Public surface (the declarative experiment API)::
+
+    import repro
+
+    spec = repro.ExperimentSpec(model="llama-3.1-8b", fmt="bfloat16",
+                                arrival="burst",
+                                arrival_params={"burst_size": 20,
+                                                "burst_gap_s": 6.0})
+    grid = repro.sweep(spec, axes={"scheduler": [None, "window"]})
+
+Lower layers remain importable directly (``repro.serving``,
+``repro.core``, ``repro.models``, ...) — the old constructor path
+(``ServeEngine(...)``, ``ClusterEngine(...)``) is still supported.
+"""
+from repro.api import (ExperimentSpec, RunResult,  # noqa: F401
+                       result_from_report, ARRIVALS, PIPELINES, MODES,
+                       ENERGY_MODELS)
+from repro.configs.paper_zoo import PAPER_MODELS  # noqa: F401
+from repro.sweep import (sweep, run_spec, expand_grid, Option,  # noqa: F401
+                         Claim, ClaimResult, SweepResult, select,
+                         check_claims)
+
+__version__ = "0.3.0"
+
+__all__ = [
+    "__version__",
+    "ExperimentSpec", "RunResult", "result_from_report",
+    "ARRIVALS", "PIPELINES", "MODES", "ENERGY_MODELS", "PAPER_MODELS",
+    "sweep", "run_spec", "expand_grid", "Option",
+    "Claim", "ClaimResult", "SweepResult", "select", "check_claims",
+]

@@ -1,6 +1,7 @@
 from repro.serving.requests import Request, RequestStatus  # noqa: F401
 from repro.serving.arrival import (fixed_arrivals, uniform_random_arrivals,  # noqa: F401
-                                   poisson_arrivals, burst_arrivals)
+                                   poisson_arrivals, burst_arrivals,
+                                   paper_requests)
 from repro.serving.engine import ServeEngine, ServeReport  # noqa: F401
 from repro.serving.router import (Router, RoundRobinRouter,  # noqa: F401
                                   LeastLoadedRouter, ShortestWorkRouter,
@@ -15,6 +16,7 @@ from repro.serving.scheduler import (Scheduler, ScheduleResult,  # noqa: F401
                                      SCHEDULERS)
 from repro.serving.slo import (SLOTier, INTERACTIVE, STANDARD, BATCH,  # noqa: F401
                                TIERS, get_tier, assign_slos, attainment,
-                               slo_summary, estimate_request_latency,
+                               slo_summary, percentile_dict,
+                               estimate_request_latency,
                                estimate_service_rate)
 from repro.serving.trace import PowerTrace, Segment, STATES  # noqa: F401

@@ -4,10 +4,15 @@ Patterns evaluated in the paper:
 * random delays:  t_i = sum of U(k, l) gaps   (Fig 3a/3b)
 * fixed intervals: constant spacing (50/300/500 ms)  (Fig 3c)
 plus Poisson (the standard open-loop model) and burst for completeness.
+
+Also home of :func:`paper_requests`, the §2/§3.1 workload sampler
+(prompts 200–4000 log-uniform, outputs 10–300), so library users can
+sample the paper's request distribution without importing from
+``benchmarks/``.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -37,3 +42,37 @@ def poisson_arrivals(n: int, rate_per_s: float, seed: int = 0,
 def burst_arrivals(n: int, burst_size: int, burst_gap_s: float,
                    start: float = 0.0) -> List[float]:
     return [start + (i // burst_size) * burst_gap_s for i in range(n)]
+
+
+def paper_requests(n: int, arrivals: Sequence[float], seed: int = 0,
+                   prompt_range=None, output_range=None,
+                   vocab_size: Optional[int] = None) -> List:
+    """Serving requests sampled from the paper's §2/§3.1 workload
+    distribution (shared by the benchmarks, the declarative
+    :class:`~repro.api.ExperimentSpec` resolver, and library users).
+
+    ``vocab_size`` additionally materializes real prompt token ids (for
+    ``execute=True`` engines) without perturbing the sim-only length
+    sampling stream — sim and real runs of the same seed therefore see
+    identical request shapes.
+    """
+    from repro.serving.requests import Request
+    from repro.training.data import RequestDistribution
+    kw = {"seed": seed}
+    if prompt_range is not None:
+        kw["prompt_range"] = tuple(prompt_range)
+    if output_range is not None:
+        kw["output_range"] = tuple(output_range)
+    dist = RequestDistribution(**kw)
+    tok_rng = (np.random.default_rng(seed + 1)
+               if vocab_size is not None else None)
+    out = []
+    for i in range(n):
+        s = dist.sample()
+        prompt = (tok_rng.integers(0, vocab_size, s.prompt_len)
+                  .astype(np.int32) if tok_rng is not None else None)
+        out.append(Request(req_id=i, prompt=prompt,
+                           prompt_len=s.prompt_len,
+                           max_new_tokens=s.output_len,
+                           arrival_time=float(arrivals[i])))
+    return out

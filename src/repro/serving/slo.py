@@ -78,15 +78,26 @@ def completed(requests: Sequence[Request]) -> List[Request]:
     return [r for r in requests if r.t_done >= 0.0]
 
 
-def percentiles(requests: Sequence[Request], *, field: str = "latency",
-                qs: Sequence[float] = (50, 90, 99)) -> Dict[str, float]:
-    """``{"p50": ..., ...}`` over completed requests' ``field``
-    (latency/ttft); 0.0-valued and NaN-free when nothing completed.
-    Shared by :class:`~repro.serving.engine.ServeReport` and
-    :class:`~repro.serving.cluster.ClusterReport`."""
-    vals = [getattr(r, field) for r in completed(requests)]
+def percentile_dict(values: Sequence[float],
+                    qs: Sequence[float] = (50, 90, 99)
+                    ) -> Dict[str, float]:
+    """``{"p50": ..., ...}`` over raw values, 0.0-valued and NaN-free on
+    the empty sequence. The single percentile implementation shared by
+    :class:`~repro.serving.engine.ServeReport`,
+    :class:`~repro.serving.cluster.ClusterReport`, and
+    :class:`~repro.api.RunResult` — the empty-run guard lives here and
+    nowhere else."""
+    vals = list(values)
     return {f"p{int(q)}": (float(np.percentile(vals, q)) if vals
                            else 0.0) for q in qs}
+
+
+def percentiles(requests: Sequence[Request], *, field: str = "latency",
+                qs: Sequence[float] = (50, 90, 99)) -> Dict[str, float]:
+    """:func:`percentile_dict` over completed requests' ``field``
+    (latency/ttft); 0.0-valued and NaN-free when nothing completed."""
+    return percentile_dict([getattr(r, field)
+                            for r in completed(requests)], qs)
 
 
 def attainment(requests: Sequence[Request],

@@ -1,0 +1,293 @@
+"""The declarative experiment API: ExperimentSpec validation, JSON
+round-tripping, engine resolution, and RunResult field parity with the
+engine reports it subsumes."""
+import dataclasses
+import math
+
+import pytest
+
+import repro
+from repro import ExperimentSpec, RunResult
+from repro.api import result_from_report
+from repro.serving import PowerTrace
+from repro.serving.slo import percentile_dict
+
+SMALL = dict(model="qwen2.5-0.5b", n_requests=12)
+
+
+class TestSpecValidation:
+    def test_defaults_valid(self):
+        ExperimentSpec()
+
+    @pytest.mark.parametrize("bad", [
+        {"model": "gpt-17"},
+        {"fmt": "int3"},
+        {"device": "b300"},
+        {"mode": "batch"},
+        {"pipeline": "train"},
+        {"router": "magic"},
+        {"scheduler": "magic"},
+        {"arrival": "chaotic"},
+        {"energy_model": "spice"},
+        {"replicas": 0},
+        {"n_requests": -1},
+        {"max_batch": 0},
+        {"profile_seeds": 0},
+        {"prompt_range": (0, 100)},
+        {"prompt_range": (200, 100)},
+        {"output_range": (0, 10)},
+    ])
+    def test_unknown_axis_values_raise(self, bad):
+        with pytest.raises(ValueError):
+            ExperimentSpec(**bad)
+
+    def test_replica_overrides_validation(self):
+        with pytest.raises(ValueError):    # wrong count
+            ExperimentSpec(replicas=3,
+                           replica_overrides=({"fmt": "int8"},))
+        with pytest.raises(ValueError):    # unknown override field
+            ExperimentSpec(replicas=1,
+                           replica_overrides=({"vocab_size": 3},))
+        ExperimentSpec(replicas=2,
+                       replica_overrides=({"fmt": "int8"},
+                                          {"max_batch": 4}))
+
+    def test_frozen(self):
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            ExperimentSpec().model = "other"
+
+    def test_hashable_by_content(self):
+        a = ExperimentSpec(scheduler_params={"x": 1.0})
+        b = ExperimentSpec(scheduler_params={"x": 1.0})
+        assert hash(a) == hash(b) and len({a, b}) == 1
+        assert len({a, a.derive(seed=1)}) == 2
+
+    def test_explicit_arrivals_length_checked(self):
+        spec = ExperimentSpec(n_requests=3, arrival="explicit",
+                              arrival_params={"times": (0.0, 1.0)})
+        with pytest.raises(ValueError):
+            spec.arrivals()
+
+
+class TestSpecSerialization:
+    def _rich_spec(self):
+        return ExperimentSpec(
+            model="llama-3.1-8b", fmt="int8", device="tpu-v5e",
+            replicas=2, router="energy_aware",
+            replica_overrides=({"fmt": "bfloat16"}, {"fmt": "int8"}),
+            scheduler="window", scheduler_params={"window_s": 2.0},
+            arrival="burst",
+            arrival_params={"burst_size": 4, "burst_gap_s": 2.0},
+            prompt_range=(100, 200), output_range=(5, 10),
+            slo_tiers=(("gold", 2, 1.5), ("bulk", 0, math.inf)),
+            slo_weights=(0.5, 0.5), trace=True, seed=3)
+
+    def test_json_round_trip_equality(self):
+        spec = self._rich_spec()
+        back = ExperimentSpec.from_json(spec.to_json())
+        assert back == spec
+        assert back.spec_hash() == spec.spec_hash()
+
+    def test_round_trip_default_spec(self):
+        spec = ExperimentSpec()
+        assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+    def test_hash_sensitive_to_every_changed_axis(self):
+        spec = ExperimentSpec()
+        for change in [{"fmt": "float32"}, {"max_batch": 16},
+                       {"seed": 1}, {"arrival": "fixed",
+                                     "arrival_params":
+                                         {"interval_s": 0.1}}]:
+            assert spec.derive(**change).spec_hash() != spec.spec_hash()
+
+    def test_unknown_field_rejected(self):
+        with pytest.raises(ValueError):
+            ExperimentSpec.from_dict({"modle": "typo"})
+
+    def test_derive_dotted_params(self):
+        spec = ExperimentSpec(arrival="fixed",
+                              arrival_params={"interval_s": 0.1,
+                                              "start": 1.0})
+        d = spec.derive(**{"arrival_params.interval_s": 0.2})
+        assert d.arrival_params == {"interval_s": 0.2, "start": 1.0}
+        assert spec.arrival_params["interval_s"] == 0.1
+
+
+class TestRunResult:
+    def test_serve_field_parity(self):
+        spec = ExperimentSpec(**SMALL)
+        res = spec.run()
+        rep = res.report
+        assert res.kind == "serve"
+        assert res.n_requests == rep.n
+        assert res.total_energy_j == rep.total_energy_j
+        assert res.mean_energy_wh == rep.mean_energy_per_request_wh
+        assert res.mean_latency_s == rep.mean_latency_s
+        assert res.mean_ttft_s == rep.mean_ttft_s
+        assert res.latency_p99_s == rep.latency_percentiles()["p99"]
+        assert res.ttft_p50_s == rep.ttft_percentiles()["p50"]
+        assert res.slo_attainment == rep.slo_attainment
+        assert res.mean_batch == rep.mean_batch
+        assert res.utilization == rep.utilization
+        assert res.tokens_per_s == rep.tokens_per_s
+        assert res.idle_fraction == pytest.approx(
+            rep.idle_energy_j / rep.total_energy_j)
+
+    def test_cluster_field_parity(self):
+        spec = ExperimentSpec(replicas=2, router="least_loaded",
+                              arrival="fixed",
+                              arrival_params={"interval_s": 0.05},
+                              **SMALL)
+        res = spec.run()
+        rep = res.report
+        assert res.kind == "cluster"
+        assert res.router == "least_loaded"
+        assert res.replicas == 2
+        assert res.n_requests == rep.n == SMALL["n_requests"]
+        assert res.total_energy_j == rep.total_energy_j
+        assert res.gated_energy_j == rep.gated_energy_j
+        assert res.mean_energy_wh == rep.mean_energy_per_request_wh
+        assert res.latency_p90_s == rep.latency_percentiles()["p90"]
+        assert tuple(rep.requests_per_replica) \
+            == res.requests_per_replica
+
+    def test_result_json_round_trip(self):
+        res = ExperimentSpec(**SMALL).run()
+        back = RunResult.from_json(res.to_json())
+        assert back.report is None
+        assert back.to_json() == res.to_json()
+        assert back == dataclasses.replace(res, report=None)
+
+    def test_rerun_from_spec_json_is_byte_identical(self):
+        """Acceptance: a RunResult for any spec is byte-identical when
+        the spec is re-run from its own JSON serialization."""
+        spec = ExperimentSpec(arrival="burst",
+                              arrival_params={"burst_size": 4,
+                                              "burst_gap_s": 1.0},
+                              scheduler="window",
+                              scheduler_params={"window_s": 0.5},
+                              trace=True, **SMALL)
+        r1 = spec.run()
+        r2 = ExperimentSpec.from_json(spec.to_json()).run()
+        assert r1.to_json() == r2.to_json()
+
+    def test_trace_coverage_recorded(self):
+        res = ExperimentSpec(trace=True, **SMALL).run()
+        assert res.trace_coverage == pytest.approx(1.0)
+        assert set(res.energy_by_state_j) == {"prefill", "decode",
+                                              "idle", "gated"}
+        assert (sum(res.energy_by_state_j.values())
+                == pytest.approx(res.total_energy_j))
+
+    def test_metric_lookup(self):
+        res = ExperimentSpec(**SMALL).run()
+        assert res.metric("mean_energy_wh") == res.mean_energy_wh
+        with pytest.raises(AttributeError):
+            res.metric("nonexistent_metric")
+        with pytest.raises(ValueError):    # unset profile field
+            res.metric("prefill_energy_j")
+
+
+class TestProfilePipeline:
+    def test_profile_metrics(self):
+        spec = ExperimentSpec(pipeline="profile", model="qwen2.5-0.5b",
+                              fmt="float32", max_batch=4,
+                              prompt_range=(200, 400),
+                              output_range=(16, 16), profile_seeds=2)
+        res = spec.run()
+        assert res.kind == "profile"
+        assert res.prefill_energy_j > 0
+        assert res.decode_j_per_tok > 0
+        assert 0.0 <= res.padding_fraction < 1.0
+        assert res.computed_tokens >= res.effective_tokens
+        assert res.gen_j_per_out == pytest.approx(
+            (res.prefill_energy_j + res.decode_energy_j) / (4 * 16))
+
+    def test_pinned_prompt_has_no_padding(self):
+        res = ExperimentSpec(pipeline="profile", model="qwen2.5-0.5b",
+                             max_batch=2, prompt_range=(256, 256),
+                             output_range=(8, 8)).run()
+        assert res.padding_fraction == 0.0
+        assert res.effective_tokens == 2 * 256
+
+
+class TestSchedulerAndSloResolution:
+    def test_scheduler_axis_resolves(self):
+        spec = ExperimentSpec(scheduler="paced",
+                              scheduler_params={"rate_per_s": 50},
+                              **SMALL)
+        assert spec.run().n_requests == SMALL["n_requests"]
+
+    def test_deadline_auto_estimates(self):
+        sched = ExperimentSpec(scheduler="deadline",
+                               **SMALL).build_scheduler()
+        assert sched.rate > 0 and sched.est_latency_s > 0
+
+    def test_energy_budget_wired_to_spec(self):
+        spec = ExperimentSpec(
+            scheduler="energy_budget",
+            scheduler_params={"max_wh_per_request": 1e-6}, **SMALL)
+        sched = spec.build_scheduler()
+        assert sched.max_batch == spec.max_batch
+        res = spec.run()    # absurdly low cap: everything shed
+        assert res.n_shed == SMALL["n_requests"]
+        assert len(res.shed_arrival_times) == res.n_shed
+
+    def test_scheduler_predictor_matches_spec_energy_model(self):
+        """Admission pricing must bill with the same energy model the
+        engine accounts with (fused_dequant here, not the default)."""
+        from repro.core.energy import FusedDequantEnergyModel
+        spec = ExperimentSpec(
+            fmt="int8", energy_model="fused_dequant",
+            scheduler="energy_budget",
+            scheduler_params={"max_wh_per_request": 0.01}, **SMALL)
+        sched = spec.build_scheduler()
+        assert isinstance(sched.energy, FusedDequantEnergyModel)
+        assert isinstance(spec.build_engine().energy,
+                          FusedDequantEnergyModel)
+
+    def test_slo_assignment(self):
+        spec = ExperimentSpec(slo_tiers=(("fast", 1, 0.001),
+                                         ("slow", 0, math.inf)),
+                              slo_weights=(1.0, 1.0), **SMALL)
+        res = spec.run()
+        assert set(res.tier_attainment) == {"fast", "slow"}
+        assert res.tier_attainment["slow"] == 1.0
+        assert res.slo_attainment < 1.0
+
+
+class TestHelpers:
+    def test_percentile_dict_empty_guard(self):
+        out = percentile_dict([])
+        assert out == {"p50": 0.0, "p90": 0.0, "p99": 0.0}
+
+    def test_percentile_dict_values(self):
+        out = percentile_dict([1.0, 2.0, 3.0], qs=(50,))
+        assert out == {"p50": 2.0}
+
+    def test_paper_requests_importable_from_serving(self):
+        from repro.serving import paper_requests
+        reqs = paper_requests(5, [0.0] * 5, seed=1,
+                              prompt_range=(10, 20))
+        assert len(reqs) == 5
+        assert all(10 <= r.prompt_len <= 20 for r in reqs)
+        assert all(r.prompt is None for r in reqs)
+        tok = paper_requests(5, [0.0] * 5, seed=1, prompt_range=(10, 20),
+                             vocab_size=100)
+        # real token prompts, same length stream as the sim-only draw
+        assert [r.prompt_len for r in tok] \
+            == [r.prompt_len for r in reqs]
+        assert all(t.prompt.shape == (t.prompt_len,) for t in tok)
+
+    def test_result_from_report_with_trace(self):
+        spec = ExperimentSpec(**SMALL)
+        trace = PowerTrace()
+        rep = spec.build_engine().run(spec.requests(), trace=trace)
+        res = result_from_report(spec, rep, trace)
+        assert res.trace_coverage == pytest.approx(1.0)
+
+    def test_package_exports(self):
+        assert repro.__version__
+        for name in ("ExperimentSpec", "RunResult", "sweep", "Claim",
+                     "PAPER_MODELS", "Option", "run_spec"):
+            assert hasattr(repro, name), name

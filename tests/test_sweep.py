@@ -1,0 +1,220 @@
+"""Sweeps, claims, and memoization over the declarative API."""
+import json
+import os
+
+import pytest
+
+from repro import (Claim, ExperimentSpec, Option, RunResult, expand_grid,
+                   run_spec, select, sweep)
+
+SMALL = dict(model="qwen2.5-0.5b", n_requests=8)
+
+
+class TestGridExpansion:
+    def test_no_axes_single_point(self):
+        pts = expand_grid(ExperimentSpec(), None, tag="solo")
+        assert [lbl for lbl, _ in pts] == ["solo"]
+
+    def test_cartesian_counts(self):
+        pts = expand_grid(ExperimentSpec(), {
+            "fmt": ["bfloat16", "float32", "int8"],
+            "max_batch": [8, 16],
+        })
+        assert len(pts) == 6
+        labels = [lbl for lbl, _ in pts]
+        assert labels[0] == "fmt=bfloat16/max_batch=8"
+        assert len(set(labels)) == 6
+        specs = {s.spec_hash() for _, s in pts}
+        assert len(specs) == 6
+
+    def test_option_axis_sets_multiple_fields(self):
+        pts = expand_grid(ExperimentSpec(), {"arrival": [
+            Option("burst", arrival="burst",
+                   arrival_params={"burst_size": 2, "burst_gap_s": 1.0}),
+            Option("steady", arrival="fixed",
+                   arrival_params={"interval_s": 0.1}),
+        ]}, tag="t")
+        assert [lbl for lbl, _ in pts] == ["t/burst", "t/steady"]
+        assert pts[0][1].arrival == "burst"
+        assert pts[1][1].arrival_params == {"interval_s": 0.1}
+
+    def test_dotted_axis(self):
+        base = ExperimentSpec(arrival="fixed",
+                              arrival_params={"interval_s": 0.1})
+        pts = expand_grid(base,
+                          {"arrival_params.interval_s": [0.1, 0.2]})
+        assert [lbl for lbl, _ in pts] == ["interval_s=0.1",
+                                          "interval_s=0.2"]
+        assert pts[1][1].arrival_params["interval_s"] == 0.2
+
+    def test_label_collision_rejected(self):
+        with pytest.raises(ValueError):
+            expand_grid(ExperimentSpec(),
+                        {"x": [Option("same"), Option("same")]})
+
+    def test_invalid_grid_point_fails_before_running(self):
+        with pytest.raises(ValueError):
+            expand_grid(ExperimentSpec(), {"fmt": ["bfloat16", "int3"]})
+
+
+class TestMemoization:
+    def test_cache_hit_on_identical_spec(self, tmp_path):
+        spec = ExperimentSpec(**SMALL)
+        r1, hit1 = run_spec(spec, cache_dir=str(tmp_path))
+        r2, hit2 = run_spec(spec, cache_dir=str(tmp_path))
+        assert (hit1, hit2) == (False, True)
+        assert r2.report is None          # cached: no live report
+        assert r2.to_json() == r1.to_json()
+        files = os.listdir(tmp_path)
+        assert files == [spec.spec_hash() + ".json"]
+
+    def test_axis_change_misses(self, tmp_path):
+        r1, _ = run_spec(ExperimentSpec(**SMALL),
+                         cache_dir=str(tmp_path))
+        _, hit = run_spec(ExperimentSpec(**{**SMALL, "seed": 9}),
+                          cache_dir=str(tmp_path))
+        assert not hit
+
+    def test_corrupt_cache_entry_reruns(self, tmp_path):
+        spec = ExperimentSpec(**SMALL)
+        run_spec(spec, cache_dir=str(tmp_path))
+        path = tmp_path / (spec.spec_hash() + ".json")
+        path.write_text("{not json")
+        _, hit = run_spec(spec, cache_dir=str(tmp_path))
+        assert not hit
+
+    def test_spec_mismatch_in_cache_file_reruns(self, tmp_path):
+        spec = ExperimentSpec(**SMALL)
+        run_spec(spec, cache_dir=str(tmp_path))
+        path = tmp_path / (spec.spec_hash() + ".json")
+        blob = json.loads(path.read_text())
+        blob["spec"]["seed"] = 1234       # simulated hash collision
+        path.write_text(json.dumps(blob))
+        _, hit = run_spec(spec, cache_dir=str(tmp_path))
+        assert not hit
+
+    def test_stale_code_version_reruns(self, tmp_path):
+        spec = ExperimentSpec(**SMALL)
+        run_spec(spec, cache_dir=str(tmp_path))
+        path = tmp_path / (spec.spec_hash() + ".json")
+        blob = json.loads(path.read_text())
+        blob["version"] = "0.0.0-older-code"
+        path.write_text(json.dumps(blob))
+        _, hit = run_spec(spec, cache_dir=str(tmp_path))
+        assert not hit                     # stale results not served
+
+    def test_cache_disabled_writes_nothing(self, tmp_path):
+        run_spec(ExperimentSpec(**SMALL), cache=False,
+                 cache_dir=str(tmp_path))
+        assert not os.listdir(tmp_path)
+
+    def test_sweep_counts_hits(self, tmp_path):
+        spec = ExperimentSpec(**SMALL)
+        axes = {"max_batch": [4, 8]}
+        s1 = sweep(spec, axes, cache_dir=str(tmp_path))
+        s2 = sweep(spec, axes, cache_dir=str(tmp_path))
+        assert (s1.cache_misses, s1.cache_hits) == (2, 0)
+        assert (s2.cache_misses, s2.cache_hits) == (0, 2)
+
+
+def _fake(label_to_wh):
+    return {k: RunResult(spec_hash=k, mean_energy_wh=v,
+                         total_energy_j=v * 3600,
+                         tier_attainment={"gold": 0.5})
+            for k, v in label_to_wh.items()}
+
+
+class TestClaims:
+    def test_ratio_claim(self):
+        rs = _fake({"naive": 1.0, "shaped": 0.05})
+        c = Claim("x", ratio_of=("naive", "shaped"), threshold=10.0)
+        out = c.evaluate(rs)
+        assert out.passed and out.value == pytest.approx(20.0)
+
+    def test_glob_aggregation(self):
+        rs = _fake({"naive": 1.0, "shaped/a": 0.5, "shaped/b": 0.1})
+        best = Claim("x", ratio_of=("naive", "shaped/*"), agg_den="min",
+                     threshold=10.0)
+        assert best.evaluate(rs).value == pytest.approx(10.0)
+        worst = Claim("x", ratio_of=("naive", "shaped/*"), agg_den="max",
+                      threshold=10.0)
+        assert worst.evaluate(rs).value == pytest.approx(2.0)
+        assert not worst.evaluate(rs).passed
+
+    def test_select_unknown_label(self):
+        with pytest.raises(KeyError):
+            select(_fake({"a": 1.0}), "missing-*")
+
+    def test_range_op(self):
+        rs = _fake({"a": 0.12})
+        assert Claim("x", value_of="a", op="range",
+                     threshold=(0.04, 0.4)).evaluate(rs).passed
+        assert not Claim("x", value_of="a", op="range",
+                         threshold=(0.2, 0.4)).evaluate(rs).passed
+
+    def test_where_guard(self):
+        rs = _fake({"a": 1.0, "b": 0.1})
+        c = Claim("x", ratio_of=("a", "b"), threshold=5.0,
+                  where=lambda r: False)
+        assert not c.evaluate(rs).passed
+
+    def test_value_fn_and_dotted_metric(self):
+        rs = _fake({"a": 1.0})
+        c = Claim("x", value_fn=lambda r: r["a"].metric(
+            "tier_attainment.gold"), op=">", threshold=0.4)
+        assert c.evaluate(rs).passed
+
+    def test_exactly_one_source_required(self):
+        with pytest.raises(ValueError):
+            Claim("x")
+        with pytest.raises(ValueError):
+            Claim("x", ratio_of=("a", "b"), value_of="a")
+        with pytest.raises(ValueError):
+            Claim("x", value_of="a", op="~=")
+
+    def test_sweep_evaluates_claims(self, tmp_path):
+        res = sweep(ExperimentSpec(**SMALL), {"max_batch": [4, 8]},
+                    claims=[Claim("nonempty", value_of="max_batch=4",
+                                  metric="n_requests", op=">",
+                                  threshold=0.0)],
+                    cache_dir=str(tmp_path))
+        assert [c.name for c in res.claims] == ["nonempty"]
+        assert not res.failed_claims
+
+    def test_merge_rejects_duplicate_labels(self, tmp_path):
+        a = sweep(ExperimentSpec(**SMALL), None, tag="one",
+                  cache_dir=str(tmp_path))
+        with pytest.raises(ValueError):
+            a.merge(a)
+        b = sweep(ExperimentSpec(**SMALL), None, tag="two",
+                  cache_dir=str(tmp_path))
+        assert set(a.merge(b).results) == {"one", "two"}
+
+
+class TestBenchmarkIntegration:
+    def test_run_py_list(self, capsys):
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+        try:
+            from benchmarks.run import main
+            main(["--list"])
+        finally:
+            sys.path.pop(0)
+        out = capsys.readouterr().out
+        assert "claim/macro_reduction_ge_20x" in out
+        assert "scheduler" in out and "precision" in out
+
+    def test_row_records_carry_spec_hash(self, tmp_path):
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+        try:
+            from benchmarks.run import _row_record
+            from benchmarks.common import Row
+        finally:
+            sys.path.pop(0)
+        rec = _row_record("s", Row("fig/x", 1.0, "d", spec_hash="abc"))
+        assert rec["spec_hash"] == "abc"
+        rec2 = _row_record("s", Row("claim/x", 0.0,
+                                    "value=1.50 pass=True"))
+        assert rec2["pass"] is True and rec2["value"] == 1.5
+        assert rec2["spec_hash"] == ""
