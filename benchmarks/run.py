@@ -5,6 +5,7 @@
     fig 3a/3b/3c         -> benchmarks.serving
     fleet / routing      -> benchmarks.cluster
     §5 scheduling        -> benchmarks.scheduler
+    backends / DVFS      -> benchmarks.backend
     §6 macro estimate    -> benchmarks.macro
     roofline (ours, §g)  -> benchmarks.roofline_report
     CPU wall-time micro  -> benchmarks.microbench
@@ -57,14 +58,15 @@ def _row_record(suite: str, row) -> dict:
 
 
 def _benches():
-    from benchmarks import (batching, cluster, macro, microbench,
-                            precision, roofline_report, scheduler,
-                            serving)
+    from benchmarks import (backend, batching, cluster, macro,
+                            microbench, precision, roofline_report,
+                            scheduler, serving)
     return [("precision", precision),
             ("batching", batching),
             ("serving", serving),
             ("cluster", cluster),
             ("scheduler", scheduler),
+            ("backend", backend),
             ("macro", macro),
             ("roofline", roofline_report),
             ("microbench", microbench)]
@@ -96,6 +98,7 @@ def main(argv=None) -> None:
     if args.quick:
         os.environ.setdefault("REPRO_CLUSTER_NREQ", "80")
         os.environ.setdefault("REPRO_SCHED_NREQ", "80")
+        os.environ.setdefault("REPRO_BACKEND_NREQ", "48")
 
     if args.list:
         _list_suites()

@@ -18,18 +18,26 @@ Lower layers remain importable directly (``repro.serving``,
 """
 from repro.api import (ExperimentSpec, RunResult,  # noqa: F401
                        result_from_report, ARRIVALS, PIPELINES, MODES,
-                       ENERGY_MODELS)
+                       ENERGY_MODELS, BACKENDS)
 from repro.configs.paper_zoo import PAPER_MODELS  # noqa: F401
+from repro.serving.backend import (InferenceBackend, PhaseResult,  # noqa: F401
+                                   AnalyticBackend, ExecutedBackend,
+                                   ReplayBackend, RecordingBackend,
+                                   make_backend)
 from repro.sweep import (sweep, run_spec, expand_grid, Option,  # noqa: F401
                          Claim, ClaimResult, SweepResult, select,
                          check_claims)
 
-__version__ = "0.3.0"
+__version__ = "0.4.0"
 
 __all__ = [
     "__version__",
     "ExperimentSpec", "RunResult", "result_from_report",
-    "ARRIVALS", "PIPELINES", "MODES", "ENERGY_MODELS", "PAPER_MODELS",
+    "ARRIVALS", "PIPELINES", "MODES", "ENERGY_MODELS", "BACKENDS",
+    "PAPER_MODELS",
+    "InferenceBackend", "PhaseResult", "AnalyticBackend",
+    "ExecutedBackend", "ReplayBackend", "RecordingBackend",
+    "make_backend",
     "sweep", "run_spec", "expand_grid", "Option",
     "Claim", "ClaimResult", "SweepResult", "select", "check_claims",
 ]

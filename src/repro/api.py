@@ -43,6 +43,7 @@ from repro.core.profiler import PhaseProfiler
 from repro.serving.arrival import (burst_arrivals, fixed_arrivals,
                                    paper_requests, poisson_arrivals,
                                    uniform_random_arrivals)
+from repro.serving.backend import BACKENDS, ReplayBackend
 from repro.serving.cluster import ClusterEngine, ClusterReport
 from repro.serving.engine import ServeEngine, ServeReport
 from repro.serving.requests import Request
@@ -67,6 +68,12 @@ ARRIVALS: Dict[str, Tuple[str, ...]] = {
 PIPELINES = ("serve", "profile")
 MODES = ("continuous", "sequential")
 ENERGY_MODELS = ("phase", "fused_dequant")
+
+#: spec fields added after v0.3 serialize only when set off-default, so
+#: every pre-existing spec keeps its byte-identical JSON and content
+#: hash (cache keys / bench-row provenance stay comparable)
+_LATE_FIELD_DEFAULTS = {"backend": "analytic", "freq_scale": 1.0,
+                        "replay_path": None}
 
 #: spec fields a per-replica override mapping may set (heterogeneous fleets)
 REPLICA_OVERRIDE_FIELDS = ("fmt", "device", "max_batch", "n_chips")
@@ -107,6 +114,12 @@ class ExperimentSpec:
     device: str = "h100-sxm"           # DeviceSpec registry name
     n_chips: int = 1
     energy_model: str = "phase"        # "phase" | "fused_dequant"
+    # DVFS operating point: fraction of the nominal core clock (compute
+    # scales linearly, dynamic power ~f^3; HBM domain unchanged)
+    freq_scale: float = 1.0
+    # -- phase-execution backend ----------------------------------------
+    backend: str = "analytic"          # "analytic" | "executed" | "replay"
+    replay_path: Optional[str] = None  # recorded trace (backend="replay")
     # -- pipeline / engine ----------------------------------------------
     pipeline: str = "serve"            # "serve" | "profile"
     mode: str = "continuous"           # serving mode
@@ -177,6 +190,35 @@ class ExperimentSpec:
             raise ValueError(f"unknown energy_model "
                              f"{self.energy_model!r}; known: "
                              f"{ENERGY_MODELS}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"known: {BACKENDS}")
+        if not 0.1 <= self.freq_scale <= 1.5:
+            raise ValueError(
+                f"freq_scale {self.freq_scale} outside [0.1, 1.5]")
+        if self.replay_path is not None and self.backend != "replay":
+            raise ValueError(
+                "replay_path= is set but backend is "
+                f"{self.backend!r}; did you mean backend='replay'?")
+        if self.backend == "replay":
+            if self.replay_path is None:
+                raise ValueError("backend='replay' needs replay_path=")
+            if self.execute:
+                raise ValueError(
+                    "backend='replay' and execute=True conflict: replay "
+                    "has no model to execute")
+            if self.freq_scale != 1.0:
+                raise ValueError(
+                    "freq_scale has no effect on replayed traces (their "
+                    "costs are measurements, not model evaluations); "
+                    "record the trace at the target operating point "
+                    "instead")
+        if self.pipeline == "profile" \
+                and self.effective_backend() != "analytic":
+            raise ValueError(
+                "the profile pipeline supports analytic backends only; "
+                "use pipeline='serve' for "
+                f"backend={self.effective_backend()!r}")
         make_router(self.router)                   # raises on unknown policy
         if (self.scheduler is not None
                 and self.scheduler not in SCHEDULERS):
@@ -212,7 +254,11 @@ class ExperimentSpec:
 
     # -- serialization --------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
-        return _thaw(dataclasses.asdict(self))
+        d = _thaw(dataclasses.asdict(self))
+        for key, default in _LATE_FIELD_DEFAULTS.items():
+            if d.get(key) == default:
+                del d[key]
+        return d
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict(), sort_keys=True,
@@ -270,7 +316,17 @@ class ExperimentSpec:
         return cfg.reduced() if self.reduced else cfg
 
     def device_spec(self) -> DeviceSpec:
-        return get_device(self.device)
+        """The (possibly DVFS-scaled) device operating point every part
+        of the stack — engine billing, scheduler pricing, router
+        prediction — consults, so they never disagree."""
+        return get_device(self.device).with_freq_scale(self.freq_scale)
+
+    def effective_backend(self) -> str:
+        """The backend axis with the legacy ``execute=True`` alias
+        folded in."""
+        return "executed" if (self.execute
+                              or self.backend == "executed") \
+            else self.backend
 
     def arrivals(self) -> list:
         """Materialize the arrival time list for this spec."""
@@ -301,10 +357,11 @@ class ExperimentSpec:
     def requests(self) -> list:
         """Sample this spec's request list (workload x arrivals x SLOs)."""
         cfg = self.model_config()
+        materialize = self.effective_backend() == "executed"
         reqs = paper_requests(
             self.n_requests, self.arrivals(), seed=self.seed,
             prompt_range=self.prompt_range, output_range=self.output_range,
-            vocab_size=cfg.vocab_size if self.execute else None)
+            vocab_size=cfg.vocab_size if materialize else None)
         if self.slo_tiers is not None or self.slo_weights is not None:
             tiers = tuple(SLOTier(name, int(prio), float(dl))
                           for name, prio, dl in
@@ -364,19 +421,28 @@ class ExperimentSpec:
         emodel = self._energy_model_cls()
         cfg = self.model_config()
 
+        backend = self.effective_backend()
+        # parse + validate the trace once; ReplayBackend is stateless
+        # (nearest-sample lookup), so one instance serves every replica
+        replay = (ReplayBackend.from_json(self.replay_path)
+                  if backend == "replay" else None)
+
         def one(overrides: Mapping[str, Any]) -> ServeEngine:
             kw = dict(fmt=self.fmt, device=self.device_spec(),
                       n_chips=self.n_chips, max_batch=self.max_batch)
-            kw.update({k: (get_device(v) if k == "device" else v)
+            kw.update({k: (get_device(v).with_freq_scale(self.freq_scale)
+                           if k == "device" else v)
                        for k, v in overrides.items()})
             exec_kw = {}
-            if self.execute:
+            if backend == "executed":
                 import jax
                 from repro.models import build_model
                 model = build_model(cfg, fmt=kw["fmt"])
                 exec_kw = dict(execute=True, model=model,
                                params=model.init(jax.random.PRNGKey(0)),
                                buf_len=self.buf_len)
+            elif backend == "replay":
+                exec_kw = dict(backend=replay)
             return ServeEngine(cfg, mode=self.mode,
                                max_prefill_batch=self.max_prefill_batch,
                                energy_model_cls=emodel, **kw, **exec_kw)
@@ -670,5 +736,5 @@ def _run_profile(spec: ExperimentSpec) -> RunResult:
 
 #: re-exported so `repro.api` alone covers the common surface
 __all__ = ["ExperimentSpec", "RunResult", "result_from_report",
-           "ARRIVALS", "PIPELINES", "MODES", "ENERGY_MODELS",
+           "ARRIVALS", "PIPELINES", "MODES", "ENERGY_MODELS", "BACKENDS",
            "PAPER_MODELS", "Request", "ServeReport", "ClusterReport"]

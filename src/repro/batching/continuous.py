@@ -116,3 +116,51 @@ class ContinuousBatcher:
 
     def mean_live_batch(self) -> float:
         return float(self.n_live)
+
+
+# --------------------------------------------------------------------------
+# decode-cache slot management (single owner; the executed serving
+# backend imports these — see repro.serving.backend.ExecutedBackend)
+# --------------------------------------------------------------------------
+#: batch-axis position of each cache leaf (for slot insert/evict):
+#: attention K/V and SSM state stack layers on axis 0, so the request
+#: batch is axis 1; per-slot position counters are batch-major.
+CACHE_BATCH_AXIS = {"k": 1, "v": 1, "ssm_state": 1, "conv": 1,
+                    "shared_k": 1, "shared_v": 1, "enc_k": 1, "enc_v": 1,
+                    "slot_pos": 0, "pos": 0}
+
+
+def insert_cache_slot(cache: dict, pcache: dict, row: int,
+                      slot: int) -> dict:
+    """Copy batch row ``row`` of a prefill cache into decode-cache slot
+    ``slot``, returning the updated decode cache (functional update)."""
+    import jax.numpy as jnp
+    new = {}
+    for key, val in cache.items():
+        ax = CACHE_BATCH_AXIS.get(key, 0)
+        src = jnp.take(pcache[key], row, axis=ax)
+        if ax == 0:
+            new[key] = val.at[slot].set(src)
+        else:
+            new[key] = val.at[:, slot].set(src)
+    return new
+
+
+def evict_cache_slot(cache: dict, slot: int) -> dict:
+    """Zero decode-cache slot ``slot`` (freed request lane), returning
+    the updated cache. Live lanes are independent, so eviction never
+    changes their decode outputs — which is why the serving hot path
+    skips it (a full cache copy per completed request); it is exposed
+    for callers that want strict cache hygiene between runs or when
+    inspecting device state."""
+    import jax.numpy as jnp
+    new = {}
+    for key, val in cache.items():
+        ax = CACHE_BATCH_AXIS.get(key, 0)
+        zero = jnp.zeros_like(
+            jnp.take(val, slot, axis=ax))
+        if ax == 0:
+            new[key] = val.at[slot].set(zero)
+        else:
+            new[key] = val.at[:, slot].set(zero)
+    return new

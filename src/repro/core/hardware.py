@@ -25,6 +25,22 @@ pays a few us.
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerState:
+    """One first-class device power state on the serving timeline.
+
+    Busy phases (prefill/decode) draw regime-dependent power computed by
+    the energy model; the non-serving states here have a single nominal
+    wattage the engine/cluster charge for gaps.
+    """
+
+    name: str
+    power_w: float
+    serves: bool = False            # can phases execute in this state?
+    wake_latency_s: float = 0.0     # ramp back to a serving state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +74,15 @@ class DeviceSpec:
     # before the next phase can run — the cluster simulator charges it.
     gated_power: float = 40.0
     wake_latency_s: float = 0.25
+    # DVFS operating point: 1.0 is the nominal (boost) clock. Derived
+    # specs come from :meth:`with_freq_scale`; compute throughput scales
+    # linearly with core frequency while *dynamic* power (the draw above
+    # the static/idle floor) scales ~f^3 (P ∝ C·V²·f with V ∝ f). HBM
+    # runs on its own clock domain, so ``hbm_bw`` and memory-bound
+    # latency do not change — which is exactly why downclocking a
+    # memory-bound decode saves energy nearly for free.
+    freq_scale: float = 1.0
+    dvfs_exponent: float = 3.0
 
     def peak_flops(self, bits: float) -> float:
         """Matmul peak for a given operand width (compute side).
@@ -75,16 +100,59 @@ class DeviceSpec:
         return (self.launch_overhead_fused if stack == "fused"
                 else self.launch_overhead_eager)
 
+    def power_states(self) -> Dict[str, PowerState]:
+        """First-class power states of this device: the serving
+        ``active`` state (regime-dependent draw — the listed wattage is
+        the MXU ceiling) plus the non-serving ``idle`` and ``gated``
+        states the engine/cluster charge for gaps."""
+        return {
+            "active": PowerState("active", self.power_mxu, serves=True),
+            "idle": PowerState("idle", self.idle_power),
+            "gated": PowerState("gated", self.gated_power,
+                                wake_latency_s=self.wake_latency_s),
+        }
+
     def state_power(self, state: str) -> float:
         """Nominal power draw (W) for a non-busy power state on the
         serving timeline (:mod:`repro.serving.trace`). Busy states
         (prefill/decode) are regime-dependent and carry their own
         energy, so they have no single nominal wattage here."""
-        if state == "idle":
-            return self.idle_power
-        if state == "gated":
-            return self.gated_power
-        raise ValueError(f"no nominal power for state {state!r}")
+        st = self.power_states().get(state)
+        if st is None or st.serves:
+            raise ValueError(f"no nominal power for state {state!r}")
+        return st.power_w
+
+    def with_freq_scale(self, scale: float) -> "DeviceSpec":
+        """Derive the spec for a DVFS operating point at ``scale`` of
+        the nominal core clock.
+
+        Compute throughput scales linearly; busy power scales as
+        ``idle + (P - idle) * scale**dvfs_exponent`` (the static/leakage
+        floor — approximated by ``idle_power`` — does not clock down);
+        HBM bandwidth, host launch overhead, and the idle/gated states
+        live on other clock/voltage domains and are unchanged.
+        """
+        if self.freq_scale != 1.0:
+            raise ValueError(
+                f"{self.name!r} is already a scaled operating point; "
+                "derive from the nominal spec")
+        if scale == 1.0:
+            return self
+        if not 0.1 <= scale <= 1.5:
+            raise ValueError(f"freq_scale {scale} outside [0.1, 1.5]")
+
+        def dyn(p: float) -> float:
+            return (self.idle_power
+                    + (p - self.idle_power) * scale ** self.dvfs_exponent)
+
+        return dataclasses.replace(
+            self, name=f"{self.name}@f{scale:g}",
+            peak_flops_16=self.peak_flops_16 * scale,
+            peak_flops_32=self.peak_flops_32 * scale,
+            power_mxu=dyn(self.power_mxu),
+            power_scalar=dyn(self.power_scalar),
+            power_memory=dyn(self.power_memory),
+            freq_scale=scale)
 
 
 H100_SXM = DeviceSpec(

@@ -19,7 +19,6 @@ from repro.configs.base import ModelConfig
 from repro.core.energy import EnergyModel, EnergyReport, combine
 from repro.core.hardware import DeviceSpec, H100_SXM
 from repro.core.precision import PrecisionPolicy
-from repro.core import workload as W
 
 
 @dataclasses.dataclass
@@ -47,38 +46,47 @@ class GenerateProfile:
 
 
 class PhaseProfiler:
-    """Analytic phase-aware profiler for one (model, device, policy)."""
+    """Phase-aware profiler for one (model, device, policy).
+
+    Backend-agnostic: phase costs come from any backend exposing the
+    ``*_report`` surface (:class:`~repro.serving.backend.AnalyticBackend`
+    by default, built from the legacy kwargs for bit-identical
+    results)."""
 
     def __init__(self, cfg: ModelConfig, device: DeviceSpec = H100_SXM,
                  policy: Optional[PrecisionPolicy] = None,
                  energy_model_cls=EnergyModel, n_chips: int = 1,
-                 stack: str = "eager"):
+                 stack: str = "eager", backend=None):
         from repro.core.precision import make_policy
+        if backend is None:
+            from repro.serving.backend import AnalyticBackend
+            backend = AnalyticBackend(
+                cfg, device=device,
+                policy=policy or make_policy("bfloat16"),
+                n_chips=n_chips, energy_model_cls=energy_model_cls)
+        self.backend = backend
         self.cfg = cfg
-        self.device = device
-        self.policy = policy or make_policy("bfloat16")
-        self.model = energy_model_cls(device, self.policy)
+        self.device = getattr(backend, "device", device)
+        self.policy = getattr(backend, "policy",
+                              policy or make_policy("bfloat16"))
+        self.model = getattr(backend, "energy", None)
         self.n_chips = n_chips
         self.stack = stack
 
     def profile_prefill(self, batch: int, seq: int) -> EnergyReport:
-        w = W.prefill_workload(self.cfg, batch, seq, stack=self.stack)
-        return self.model.evaluate(w, self.n_chips)
+        return self.backend.prefill_report(batch, seq, stack=self.stack)
 
     def profile_decode(self, batch: int, prompt_len: int,
                        new_tokens: int) -> EnergyReport:
-        w = W.decode_workload(self.cfg, batch, prompt_len, new_tokens,
-                              stack=self.stack)
-        return self.model.evaluate(w, self.n_chips)
+        return self.backend.decode_report(batch, prompt_len, new_tokens,
+                                          stack=self.stack)
 
     def profile_decode_step(self, batch: int, cache_len: int) -> EnergyReport:
-        w = W.decode_step_workload(self.cfg, batch, cache_len,
-                                   stack=self.stack)
-        return self.model.evaluate(w, self.n_chips)
+        return self.backend.decode_step_report(batch, cache_len,
+                                               stack=self.stack)
 
     def profile_train_step(self, batch: int, seq: int) -> EnergyReport:
-        w = W.train_step_workload(self.cfg, batch, seq, stack=self.stack)
-        return self.model.evaluate(w, self.n_chips)
+        return self.backend.train_report(batch, seq, stack=self.stack)
 
     def profile_generate(self, batch: int, prompt_len: int,
                          new_tokens: int) -> GenerateProfile:

@@ -2,6 +2,11 @@ from repro.serving.requests import Request, RequestStatus  # noqa: F401
 from repro.serving.arrival import (fixed_arrivals, uniform_random_arrivals,  # noqa: F401
                                    poisson_arrivals, burst_arrivals,
                                    paper_requests)
+from repro.serving.backend import (InferenceBackend, PhaseResult,  # noqa: F401
+                                   PrefillBatch, DecodeBatch,
+                                   AnalyticBackend, ExecutedBackend,
+                                   ReplayBackend, RecordingBackend,
+                                   make_backend, BACKENDS)
 from repro.serving.engine import ServeEngine, ServeReport  # noqa: F401
 from repro.serving.router import (Router, RoundRobinRouter,  # noqa: F401
                                   LeastLoadedRouter, ShortestWorkRouter,

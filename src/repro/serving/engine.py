@@ -1,13 +1,21 @@
 """Serving engine: sequential (transformers-style) and continuous
-(TGI-style) modes with phase-aware energy accounting.
+(TGI-style) event loops over a pluggable
+:class:`~repro.serving.backend.InferenceBackend`.
 
-The engine is a discrete-event simulator whose clock advances by the
-analytic energy model's latency for each executed phase — exactly the
-quantity the paper measures per phase on H100 — while the *scheduling*
-(queueing, slot assignment, KV paging, eviction) is real. With
-``execute=True`` it additionally runs genuine JAX model steps (greedy
-decoding) through the same scheduler, which is how the integration tests
-pin scheduler semantics to real computation.
+The engine is a discrete-event simulator whose *scheduling* (queueing,
+slot assignment, KV paging, eviction) is real, while each phase's cost
+comes from the backend:
+
+* :class:`~repro.serving.backend.AnalyticBackend` — the paper's
+  phase-aware analytic energy model (the default; clock advances by the
+  model's latency, exactly the quantity the paper measures per phase on
+  H100);
+* :class:`~repro.serving.backend.ExecutedBackend` — additionally runs
+  genuine JAX model steps (greedy decoding) through the same scheduler
+  (the legacy ``execute=True`` path), which is how the integration
+  tests pin scheduler semantics to real computation;
+* :class:`~repro.serving.backend.ReplayBackend` — replays recorded
+  hardware phase measurements through the live scheduler.
 
 Energy accounting (paper §5 methodology):
 * every executed phase's energy is attributed equally across the
@@ -31,16 +39,13 @@ from repro.configs.base import ModelConfig
 from repro.core.energy import EnergyModel
 from repro.core.hardware import DeviceSpec, H100_SXM
 from repro.core.precision import PrecisionPolicy, make_policy
-from repro.core import workload as W
+from repro.serving.backend import (AnalyticBackend, DecodeBatch,
+                                   ExecutedBackend, InferenceBackend,
+                                   PrefillBatch)
 from repro.serving.requests import Request, RequestStatus
 from repro.serving.scheduler import Scheduler, apply_schedule
 from repro.serving import slo
 from repro.serving.trace import PowerTrace
-
-# batch-axis position of each cache leaf (for slot insertion)
-_CACHE_BATCH_AXIS = {"k": 1, "v": 1, "ssm_state": 1, "conv": 1,
-                     "shared_k": 1, "shared_v": 1, "enc_k": 1, "enc_v": 1,
-                     "slot_pos": 0, "pos": 0}
 
 
 @dataclasses.dataclass
@@ -110,7 +115,9 @@ class ServeReport:
 
     @property
     def tokens_per_s(self) -> float:
-        toks = sum(r.tokens_generated for r in self.requests)
+        # completed requests only, like every other aggregate — unserved
+        # rows would silently deflate throughput with zero-token entries
+        toks = sum(r.tokens_generated for r in self.completed)
         return toks / max(self.wall_time_s, 1e-12)
 
     def latency_percentiles(self, qs: Sequence[float] = (50, 90, 99)
@@ -175,6 +182,16 @@ class _StreamState:
 
 
 class ServeEngine:
+    """Backend-agnostic serving event loop.
+
+    Pass ``backend=`` to swap the phase-execution substrate; with no
+    backend the engine builds an
+    :class:`~repro.serving.backend.AnalyticBackend` from the legacy
+    kwargs (``fmt`` / ``device`` / ``n_chips`` / ``energy_model_cls``),
+    or an :class:`~repro.serving.backend.ExecutedBackend` when
+    ``execute=True`` — both bit-compatible with the pre-backend engine.
+    """
+
     def __init__(self, cfg: ModelConfig, *, fmt: str = "bfloat16",
                  device: DeviceSpec = H100_SXM, n_chips: int = 1,
                  mode: str = "continuous", max_batch: int = 32,
@@ -182,17 +199,58 @@ class ServeEngine:
                  kv_pages: int = 1 << 15, page_size: int = 128,
                  energy_model_cls=EnergyModel,
                  execute: bool = False, model=None, params=None,
-                 buf_len: int = 256):
+                 buf_len: int = 256,
+                 backend: Optional[InferenceBackend] = None):
         if mode not in ("continuous", "sequential"):
             raise ValueError(mode)
         self.cfg = cfg
         self.policy: PrecisionPolicy = make_policy(fmt)
-        self.device = device
         self.n_chips = n_chips
         self.mode = mode
         self.stack = "fused" if mode == "continuous" else "eager"
-        self.energy = energy_model_cls(device, self.policy)
         self.max_batch = max_batch
+        if (execute and backend is not None
+                and not isinstance(backend, ExecutedBackend)):
+            raise ValueError(
+                "execute=True conflicts with an explicit non-executed "
+                f"backend ({type(backend).__name__}); pass an "
+                "ExecutedBackend or drop execute=")
+        if backend is not None:
+            # a backend that owns its cost identity wins over the engine
+            # kwargs — refuse contradictions instead of silently billing
+            # with something other than what the caller named
+            bdev = getattr(backend, "device", None)
+            if (bdev is not None and device is not H100_SXM
+                    and bdev != device):
+                raise ValueError(
+                    f"device={device.name!r} conflicts with the "
+                    f"backend's device {bdev.name!r}; configure the "
+                    "backend instead")
+            bpol = getattr(backend, "policy", None)
+            if (bpol is not None and fmt != "bfloat16"
+                    and bpol.fmt != make_policy(fmt).fmt):
+                raise ValueError(
+                    f"fmt={fmt!r} conflicts with the backend's "
+                    f"precision policy ({bpol.fmt!r}); configure the "
+                    "backend instead")
+        self.execute = execute or isinstance(backend, ExecutedBackend)
+        if backend is None:
+            kw = dict(device=device, policy=self.policy, n_chips=n_chips,
+                      energy_model_cls=energy_model_cls)
+            if execute:
+                backend = ExecutedBackend(cfg, model, params,
+                                          max_batch=max_batch,
+                                          buf_len=buf_len, **kw)
+            else:
+                backend = AnalyticBackend(cfg, **kw)
+        self.backend = backend
+        # the device whose power states govern gaps/gating, and the
+        # analytic pricing model routers/schedulers predict with — an
+        # analytic-family backend owns both; other backends (replay)
+        # fall back to the engine kwargs so prediction stays possible
+        self.device = getattr(backend, "device", None) or device
+        self.energy = getattr(backend, "energy", None) or \
+            energy_model_cls(self.device, self.policy)
         self._batcher_kw = dict(
             kv_pages=kv_pages, page_size=page_size,
             max_prefill_batch=max_prefill_batch,
@@ -203,20 +261,6 @@ class ServeEngine:
         # run(trace=...) or by the cluster before stream_start()
         self._trace: Optional[PowerTrace] = None
         self._trace_replica: int = 0
-        self.execute = execute
-        self.model = model
-        self.params = params
-        self.buf_len = buf_len
-        if execute:
-            assert model is not None and params is not None
-            import jax
-            self._jit_decode = jax.jit(model.decode_step)
-            self._jit_prefill = jax.jit(
-                lambda p, b, l: model.prefill(p, b, buf_len=buf_len,
-                                              lengths=l))
-            self.cache = model.init_cache(max_batch, buf_len)
-            import jax.numpy as jnp
-            self.slot_tokens = jnp.zeros((max_batch, 1), jnp.int32)
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
@@ -247,20 +291,23 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def _run_sequential(self, reqs: List[Request]) -> ServeReport:
+        self.backend.start()
         now, busy_e, idle_e, busy_t = 0.0, 0.0, 0.0, 0.0
         idle_t = 0.0
         for r in reqs:
             if r.effective_arrival > now:
                 gap = r.effective_arrival - now
-                idle_e += self.device.idle_power * gap
+                res = self.backend.idle(gap, "idle")
+                idle_e += res.energy_j
                 idle_t += gap
                 self._record("idle", now, r.effective_arrival,
-                             self.device.idle_power * gap)
+                             res.energy_j)
                 now = r.effective_arrival
             r.t_prefill_start = now
-            pre = self.energy.evaluate(W.prefill_workload(
-                self.cfg, 1, r.prompt_len, stack=self.stack), self.n_chips)
-            now += pre.latency
+            pre = self.backend.prefill(PrefillBatch(
+                picks=[(None, r)], pad_len=r.prompt_len,
+                stack=self.stack))
+            now += pre.latency_s
             self._record("prefill", r.t_prefill_start, now,
                          pre.energy_j, 1.0)
             r.t_first_token = now
@@ -268,12 +315,11 @@ class ServeEngine:
             dec_steps = max(r.max_new_tokens - 1, 0)
             e = pre.energy_j
             if dec_steps:
-                dec = self.energy.evaluate(W.decode_workload(
-                    self.cfg, 1, r.prompt_len, dec_steps, stack=self.stack),
-                    self.n_chips)
-                self._record("decode", now, now + dec.latency,
+                dec = self.backend.decode_tail(r, dec_steps,
+                                               stack=self.stack)
+                self._record("decode", now, now + dec.latency_s,
                              dec.energy_j, 1.0)
-                now += dec.latency
+                now += dec.latency_s
                 e += dec.energy_j
                 r.tokens_generated += dec_steps
             busy_t += now - r.t_prefill_start
@@ -281,8 +327,7 @@ class ServeEngine:
             busy_e += e
             r.t_done = now
             r.status = RequestStatus.DONE
-            if self.execute:
-                self._execute_sequential(r)
+            self.backend.finish_request(r)
         return ServeReport(requests=reqs, total_energy_j=busy_e + idle_e,
                            busy_energy_j=busy_e, idle_energy_j=idle_e,
                            wall_time_s=now, busy_time_s=busy_t,
@@ -290,19 +335,6 @@ class ServeEngine:
                            mean_batch=1.0, n_prefill_batches=len(reqs),
                            n_decode_steps=sum(r.tokens_generated - 1
                                               for r in reqs))
-
-    def _execute_sequential(self, r: Request) -> None:
-        import jax.numpy as jnp
-        toks = jnp.asarray(r.prompt[None, :], jnp.int32)
-        logits, cache = self.model.prefill(
-            self.params, {"tokens": toks},
-            buf_len=r.prompt_len + r.max_new_tokens + 1)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        r.generated = [int(tok[0, 0])]
-        for _ in range(r.max_new_tokens - 1):
-            logits, cache = self.model.decode_step(self.params, tok, cache)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            r.generated.append(int(tok[0, 0]))
 
     # ------------------------------------------------------------------
     def _run_continuous(self, reqs: List[Request],
@@ -341,11 +373,7 @@ class ServeEngine:
         self.batcher = ContinuousBatcher(self.max_batch,
                                          **self._batcher_kw)
         self._stream = _StreamState(now=t0)
-        if self.execute:
-            import jax.numpy as jnp
-            self.cache = self.model.init_cache(self.max_batch,
-                                               self.buf_len)
-            self.slot_tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
+        self.backend.start()
 
     @property
     def stream_now(self) -> float:
@@ -389,58 +417,52 @@ class ServeEngine:
 
     def stream_step(self) -> float:
         """Execute one scheduler iteration (one prefill batch or one
-        decode step), advancing the stream clock. Returns the phase
-        latency (0.0 if there was nothing to do)."""
+        decode step) through the backend, advancing the stream clock.
+        Returns the phase latency (0.0 if there was nothing to do)."""
         s, b = self._stream, self.batcher
         picks = b.schedule_prefill()
         if picks:
             lens = [r.prompt_len for _, r in picks]
             pad = bucket_length(max(lens)) if b.bucket_prefill \
                 else max(lens)
-            rep = self.energy.evaluate(W.prefill_workload(
-                self.cfg, len(picks), pad, stack=self.stack),
-                self.n_chips)
-            self._record("prefill", s.now, s.now + rep.latency,
-                         rep.energy_j, float(len(picks)))
-            s.now += rep.latency
-            s.busy_t += rep.latency
-            s.busy_e += rep.energy_j
+            res = self.backend.prefill(PrefillBatch(
+                picks=picks, pad_len=pad, stack=self.stack))
+            self._record("prefill", s.now, s.now + res.latency_s,
+                         res.energy_j, float(len(picks)))
+            s.now += res.latency_s
+            s.busy_t += res.latency_s
+            s.busy_e += res.energy_j
             s.n_prefills += 1
             for _, r in picks:
                 r.status = RequestStatus.RUNNING
-                r.t_prefill_start = s.now - rep.latency
+                r.t_prefill_start = s.now - res.latency_s
                 r.t_first_token = s.now
                 r.tokens_generated = 1
-                r.energy_j += rep.energy_j / len(picks)
-            if self.execute:
-                self._execute_prefill(picks, pad)
+                r.energy_j += res.energy_j / len(picks)
             self._finish_ready(b, s.done, s.now)
-            return rep.latency
+            return res.latency_s
         live = b.live_slots()
         if live:
-            cache_lens = [b.slots[i].request.prompt_len
-                          + b.slots[i].request.tokens_generated
-                          for i in live]
-            rep = self.energy.evaluate(W.decode_step_workload(
-                self.cfg, len(live), int(np.mean(cache_lens)),
-                stack=self.stack), self.n_chips)
-            self._record("decode", s.now, s.now + rep.latency,
-                         rep.energy_j, float(len(live)))
-            s.now += rep.latency
-            s.busy_t += rep.latency
-            s.busy_e += rep.energy_j
-            s.decode_time += rep.latency
-            s.batch_time += rep.latency * len(live)
+            reqs = [b.slots[i].request for i in live]
+            res = self.backend.decode_step(DecodeBatch(
+                slots=live, requests=reqs,
+                cache_lens=[r.prompt_len + r.tokens_generated
+                            for r in reqs],
+                stack=self.stack))
+            self._record("decode", s.now, s.now + res.latency_s,
+                         res.energy_j, float(len(live)))
+            s.now += res.latency_s
+            s.busy_t += res.latency_s
+            s.busy_e += res.energy_j
+            s.decode_time += res.latency_s
+            s.batch_time += res.latency_s * len(live)
             s.n_decode += 1
             b.step_decode_bookkeeping()
-            for i in live:
-                r = b.slots[i].request
+            for r in reqs:
                 r.tokens_generated += 1
-                r.energy_j += rep.energy_j / len(live)
-            if self.execute:
-                self._execute_decode(live)
+                r.energy_j += res.energy_j / len(live)
             self._finish_ready(b, s.done, s.now)
-            return rep.latency
+            return res.latency_s
         return 0.0
 
     def stream_idle(self, until: float, gated: bool = False) -> None:
@@ -452,14 +474,14 @@ class ServeEngine:
         if gap <= 0:
             return
         state = "gated" if gated else "idle"
-        e = self.device.state_power(state) * gap
+        res = self.backend.idle(gap, state)
         if gated:
-            s.gated_e += e
+            s.gated_e += res.energy_j
             s.gated_t += gap
         else:
-            s.idle_e += e
+            s.idle_e += res.energy_j
             s.idle_t += gap
-        self._record(state, s.now, until, e)
+        self._record(state, s.now, until, res.energy_j)
         s.now = until
 
     def stream_report(self) -> ServeReport:
@@ -483,49 +505,5 @@ class ServeEngine:
                 r.t_done = now
                 r.status = RequestStatus.DONE
                 b.finish(i)
+                self.backend.release_slot(i)
                 done.append(r)
-
-    # -- real execution hooks (tests / examples) ------------------------
-    def _execute_prefill(self, picks, pad_len: int) -> None:
-        """Run the real prefill. Note: execution pads to the batch max
-        (multiple of 8), not to the energy-model's bucket — the bucket
-        models *computed* tokens for accounting and may exceed the
-        engine's KV buffer."""
-        import jax.numpy as jnp
-        exec_pad = max(r.prompt_len for _, r in picks)
-        exec_pad = min(((exec_pad + 7) // 8) * 8, self.buf_len)
-        toks = np.zeros((len(picks), exec_pad), np.int32)
-        lens = np.zeros((len(picks),), np.int32)
-        for j, (_, r) in enumerate(picks):
-            toks[j, :r.prompt_len] = r.prompt[:exec_pad]
-            lens[j] = r.prompt_len
-        logits, pcache = self._jit_prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, jnp.asarray(lens))
-        first = np.asarray(jnp.argmax(logits, -1))
-        for j, (slot, r) in enumerate(picks):
-            r.generated = [int(first[j])]
-            self._insert_slot(pcache, j, slot)
-            self.slot_tokens = self.slot_tokens.at[slot, 0].set(
-                int(first[j]))
-
-    def _insert_slot(self, pcache, row: int, slot: int) -> None:
-        import jax
-        new = {}
-        for key, val in self.cache.items():
-            ax = _CACHE_BATCH_AXIS.get(key, 0)
-            src = jax.numpy.take(pcache[key], row, axis=ax)
-            if ax == 0:
-                new[key] = val.at[slot].set(src)
-            else:
-                new[key] = val.at[:, slot].set(src)
-        self.cache = new
-
-    def _execute_decode(self, live: List[int]) -> None:
-        import jax.numpy as jnp
-        logits, self.cache = self._jit_decode(self.params,
-                                              self.slot_tokens, self.cache)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-        self.slot_tokens = nxt[:, None]
-        arr = np.asarray(nxt)
-        for i in live:
-            self.batcher.slots[i].request.generated.append(int(arr[i]))

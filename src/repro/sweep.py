@@ -258,7 +258,12 @@ def run_spec(spec: ExperimentSpec, *, cache: bool = True,
              ) -> Tuple[RunResult, bool]:
     """Run one spec with on-disk memoization; returns ``(result,
     was_cache_hit)``. The cache key is the spec's content hash, so any
-    axis change re-runs and identical specs are served from disk."""
+    axis change re-runs and identical specs are served from disk.
+    Replay-backend specs are never memoized: the hash sees only the
+    trace-file *path*, so a re-recorded trace would silently serve
+    stale results."""
+    if spec.backend == "replay":
+        cache = False
     cdir = cache_dir or DEFAULT_CACHE_DIR
     path = os.path.join(cdir, spec.spec_hash() + ".json")
     if cache:
