@@ -7,6 +7,7 @@
     §5 scheduling        -> benchmarks.scheduler
     backends / DVFS      -> benchmarks.backend
     §6 macro estimate    -> benchmarks.macro
+    simulator perf (ours)-> benchmarks.simperf
     roofline (ours, §g)  -> benchmarks.roofline_report
     CPU wall-time micro  -> benchmarks.microbench
 
@@ -27,6 +28,8 @@ CLI:
                   JSON record (one per row; claims carry pass/fail,
                   sweep rows carry their ExperimentSpec hash), so the
                   perf trajectory can be tracked across commits
+    --workers N   run cache-miss sweep grid points in an N-process
+                  pool (sets REPRO_SWEEP_WORKERS for every suite)
 """
 from __future__ import annotations
 
@@ -60,7 +63,7 @@ def _row_record(suite: str, row) -> dict:
 def _benches():
     from benchmarks import (backend, batching, cluster, macro,
                             microbench, precision, roofline_report,
-                            scheduler, serving)
+                            scheduler, serving, simperf)
     return [("precision", precision),
             ("batching", batching),
             ("serving", serving),
@@ -68,6 +71,7 @@ def _benches():
             ("scheduler", scheduler),
             ("backend", backend),
             ("macro", macro),
+            ("simperf", simperf),
             ("roofline", roofline_report),
             ("microbench", microbench)]
 
@@ -93,12 +97,22 @@ def main(argv=None) -> None:
                     help="cheapest/dry configuration for CI smoke")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all suite rows as JSON records to PATH")
+    ap.add_argument("--workers", type=int, default=None, metavar="N",
+                    help="run cache-miss sweep points in an N-process "
+                         "pool (default: REPRO_SWEEP_WORKERS or 1)")
     args = ap.parse_args(argv)
+
+    if args.workers is not None:
+        if args.workers < 1:
+            raise SystemExit("--workers must be >= 1")
+        os.environ["REPRO_SWEEP_WORKERS"] = str(args.workers)
 
     if args.quick:
         os.environ.setdefault("REPRO_CLUSTER_NREQ", "80")
         os.environ.setdefault("REPRO_SCHED_NREQ", "80")
         os.environ.setdefault("REPRO_BACKEND_NREQ", "48")
+        os.environ.setdefault("REPRO_SIMPERF_QUICK", "1")
+        os.environ.setdefault("REPRO_MACRO_FLEET_NREQ", "20000")
 
     if args.list:
         _list_suites()

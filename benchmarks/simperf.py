@@ -1,0 +1,121 @@
+"""Simulator performance suite: how fast is the simulator *itself*?
+
+The paper's system-level sweeps (and the ROADMAP's "heavy traffic from
+millions of users") need the discrete-event core to push millions of
+simulated tokens per host-second. This suite measures exactly that:
+
+* ``single_step`` vs ``macro_step`` wall time on a long-decode serving
+  workload (identical requests, identical simulated results — the
+  macro-stepped engine is bit-identical by construction, and the suite
+  re-asserts it);
+* simulated-tokens/sec and requests/sec of the macro-stepped engine at
+  10k / 100k / 1M-request scale (single-stepping the larger scales is
+  exactly the infeasibility this PR removes, so only the smallest scale
+  carries a baseline measurement).
+
+Claim-style guards (same ``claim/...`` row schema run.py exits on):
+``macro_speedup_ge_5x`` is the CI gate; the full (non-quick) run also
+checks the >=10x long-decode target and that the 1M-request scale
+actually completes. ``REPRO_SIMPERF_QUICK=1`` (set by ``--quick``)
+shrinks everything to CI-smoke size.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+from benchmarks.common import Row, save_results
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.serving.arrival import burst_arrivals, paper_requests
+from repro.serving.engine import ServeEngine
+
+CFG = PAPER_MODELS["llama-3.1-8b"]
+
+#: long-decode serving workload: deep bursts keep the decode batch full
+#: for hundreds of uninterrupted steps — the regime the paper's Fig 2
+#: batching result lives in, and the best case for event horizons
+LONG_DECODE = dict(prompt_range=(200, 2000), output_range=(256, 1024))
+#: chat-like workload for the scaling rows (the §2 distribution)
+CHAT = dict(prompt_range=(200, 4000), output_range=(10, 300))
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_SIMPERF_QUICK", "") == "1"
+
+
+def _requests(n: int, shape: dict, burst: int = 64,
+              gap_s: float = 30.0) -> list:
+    return paper_requests(n, burst_arrivals(n, burst, gap_s), seed=0,
+                          **shape)
+
+
+def _timed_run(n: int, shape: dict, *, macro: bool,
+               max_batch: int = 32) -> dict:
+    eng = ServeEngine(CFG, max_batch=max_batch, macro_step=macro)
+    reqs = _requests(n, shape)
+    t0 = time.perf_counter()
+    rep = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(r.tokens_generated for r in rep.requests)
+    return {"wall_s": dt, "tokens": toks, "n": n,
+            "toks_per_s": toks / dt, "req_per_s": n / dt,
+            "steps": rep.n_decode_steps,
+            "energy_j": rep.total_energy_j,
+            "wall_time_s": rep.wall_time_s}
+
+
+def _claim_row(name: str, value: float, passed: bool) -> Row:
+    return Row(name=f"claim/{name}", us_per_call=0.0,
+               derived=f"value={value:.2f} pass={passed}")
+
+
+def run() -> List[Row]:
+    quick = _quick()
+    rows: List[Row] = []
+    dump: List[dict] = []
+
+    # -- 1. single-step vs macro-step on the long-decode workload -------
+    n_base = 96 if quick else 256
+    single = _timed_run(n_base, LONG_DECODE, macro=False)
+    macro = _timed_run(n_base, LONG_DECODE, macro=True)
+    speedup = single["wall_s"] / macro["wall_s"]
+    parity = (single["energy_j"] == macro["energy_j"]
+              and single["wall_time_s"] == macro["wall_time_s"]
+              and single["steps"] == macro["steps"])
+    rows += [
+        Row("simperf/single_step_toks_per_s", single["wall_s"] * 1e6,
+            f"{single['toks_per_s']:.3g} sim-tok/s "
+            f"({single['steps']} steps)"),
+        Row("simperf/macro_step_toks_per_s", macro["wall_s"] * 1e6,
+            f"{macro['toks_per_s']:.3g} sim-tok/s "
+            f"({macro['steps']} steps)"),
+        Row("simperf/macro_speedup", 0.0,
+            f"{speedup:.1f}x wall-clock on long-decode"),
+    ]
+    dump += [{"scale": n_base, "mode": m, **r}
+             for m, r in (("single", single), ("macro", macro))]
+    # the CI gate (quick workload included) + the full-mode target
+    rows.append(_claim_row("macro_speedup_ge_5x", speedup,
+                           speedup >= 5.0))
+    if not quick:
+        rows.append(_claim_row("macro_speedup_ge_10x_long_decode",
+                               speedup, speedup >= 10.0))
+    rows.append(_claim_row("macro_bit_parity", float(parity), parity))
+
+    # -- 2. macro-stepped scaling: 10k / 100k / 1M requests --------------
+    scales = [10_000] if quick else [10_000, 100_000, 1_000_000]
+    for n in scales:
+        r = _timed_run(n, CHAT, macro=True, max_batch=64)
+        rows.append(Row(
+            f"simperf/scale_{n//1000}k", r["wall_s"] * 1e6,
+            f"{r['toks_per_s']:.3g} sim-tok/s "
+            f"{r['req_per_s']:.3g} req/s {r['wall_s']:.1f}s host"))
+        dump.append({"scale": n, "mode": "macro", **r})
+        if n == 1_000_000:
+            rows.append(_claim_row("sim_1m_requests_feasible",
+                                   r["wall_s"],
+                                   r["wall_s"] < 900.0))
+
+    save_results("simperf", [{"results": dump}])
+    return rows

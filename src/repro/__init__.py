@@ -21,23 +21,25 @@ from repro.api import (ExperimentSpec, RunResult,  # noqa: F401
                        ENERGY_MODELS, BACKENDS)
 from repro.configs.paper_zoo import PAPER_MODELS  # noqa: F401
 from repro.serving.backend import (InferenceBackend, PhaseResult,  # noqa: F401
-                                   AnalyticBackend, ExecutedBackend,
-                                   ReplayBackend, RecordingBackend,
-                                   make_backend)
+                                   DecodeRun, AnalyticBackend,
+                                   ExecutedBackend, ReplayBackend,
+                                   RecordingBackend, make_backend)
+from repro.serving.scheduler import HorizonStop  # noqa: F401
 from repro.sweep import (sweep, run_spec, expand_grid, Option,  # noqa: F401
                          Claim, ClaimResult, SweepResult, select,
-                         check_claims)
+                         check_claims, WORKERS_ENV)
 
-__version__ = "0.4.0"
+__version__ = "0.5.0"
 
 __all__ = [
     "__version__",
     "ExperimentSpec", "RunResult", "result_from_report",
     "ARRIVALS", "PIPELINES", "MODES", "ENERGY_MODELS", "BACKENDS",
     "PAPER_MODELS",
-    "InferenceBackend", "PhaseResult", "AnalyticBackend",
+    "InferenceBackend", "PhaseResult", "DecodeRun", "AnalyticBackend",
     "ExecutedBackend", "ReplayBackend", "RecordingBackend",
-    "make_backend",
+    "make_backend", "HorizonStop",
     "sweep", "run_spec", "expand_grid", "Option",
     "Claim", "ClaimResult", "SweepResult", "select", "check_claims",
+    "WORKERS_ENV",
 ]

@@ -19,6 +19,7 @@ results in §5 transfer.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import TYPE_CHECKING, List, Optional
 
@@ -39,30 +40,86 @@ class SlotState:
 
 
 class ContinuousBatcher:
+    """Slot/queue bookkeeping for the continuous engine.
+
+    Hot-path data structures are incremental so a million-request run
+    never rescans: live/free slot sets are maintained sorted on every
+    occupy/finish, and the waiting queue is an append-only list behind a
+    head pointer with tombstoned mid-queue picks (compacted once the
+    dead prefix dominates) — no ``pop(0)``/``pop(i)`` shifting.
+    """
+
     def __init__(self, max_batch: int, *, kv_pages: int = 1 << 14,
                  page_size: int = 128, max_prefill_batch: int = 8,
                  bucket_prefill: bool = True):
         self.slots = [SlotState() for _ in range(max_batch)]
-        self.waiting: List[Request] = []
+        self._waiting: List[Optional[Request]] = []
+        self._whead = 0             # first possibly-live queue index
+        self._n_waiting = 0         # live (non-tombstone) entries
+        self._waiting_tokens = 0    # prompt+output tokens queued
         self.kv = PagedKVAllocator(kv_pages, page_size)
         self.max_prefill_batch = max_prefill_batch
         self.bucket_prefill = bucket_prefill
+        self._free: List[int] = list(range(max_batch))   # sorted asc
+        self._live: List[int] = []                       # sorted asc
 
     # ------------------------------------------------------------------
+    @property
+    def waiting(self) -> List["Request"]:
+        """Queued requests in FIFO order (materialized view; hot paths
+        use :attr:`n_waiting` / :meth:`waiting_head` instead)."""
+        return [r for r in self._waiting[self._whead:] if r is not None]
+
+    @property
+    def n_waiting(self) -> int:
+        return self._n_waiting
+
+    @property
+    def waiting_tokens(self) -> int:
+        """Outstanding prompt + decode tokens of the queued requests
+        (maintained incrementally for the shortest-work router)."""
+        return self._waiting_tokens
+
+    def waiting_head(self) -> "Request":
+        self._skip_tombstones()
+        return self._waiting[self._whead]
+
+    def _skip_tombstones(self) -> None:
+        w, i = self._waiting, self._whead
+        while i < len(w) and w[i] is None:
+            i += 1
+        self._whead = i
+        if i > 512 and i * 2 > len(w):      # compact the dead prefix
+            del w[:i]
+            self._whead = 0
+
     def admit(self, req: "Request") -> None:
-        self.waiting.append(req)
+        self._waiting.append(req)
+        self._n_waiting += 1
+        self._waiting_tokens += req.prompt_len + req.max_new_tokens
 
     def free_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if not s.live]
+        return list(self._free)
 
     def live_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s.live]
+        return list(self._live)
 
     @property
     def n_live(self) -> int:
-        return sum(1 for s in self.slots if s.live)
+        return len(self._live)
 
     # ------------------------------------------------------------------
+    def _take(self, i: int, req: "Request") -> int:
+        """Consume waiting entry ``i`` into the lowest free slot."""
+        self._waiting[i] = None
+        self._n_waiting -= 1
+        self._waiting_tokens -= req.prompt_len + req.max_new_tokens
+        slot = self._free.pop(0)
+        self.kv.allocate(req.req_id, req.prompt_len)
+        self.slots[slot].request = req
+        bisect.insort(self._live, slot)
+        return slot
+
     def schedule_prefill(self) -> List[tuple]:
         """Pick (slot, request) pairs to prefill this iteration.
 
@@ -74,19 +131,21 @@ class ContinuousBatcher:
         """
         from repro.batching.static import bucket_length
         picks = []
-        free = self.free_slots()
-        if not (self.waiting and free):
+        if not (self._n_waiting and self._free):
             return picks
-        head = self.waiting[0]
+        head = self.waiting_head()
         if not self.kv.can_allocate(head.prompt_len
                                     + head.max_new_tokens):
             return picks        # head-of-line blocking on memory (TGI)
         head_bucket = bucket_length(head.prompt_len) \
             if self.bucket_prefill else None
-        i = 0
-        while (i < len(self.waiting) and free
+        i = self._whead
+        while (i < len(self._waiting) and self._free
                and len(picks) < self.max_prefill_batch):
-            req = self.waiting[i]
+            req = self._waiting[i]
+            if req is None:
+                i += 1
+                continue
             if (head_bucket is not None and picks
                     and bucket_length(req.prompt_len) != head_bucket):
                 i += 1
@@ -94,28 +153,34 @@ class ContinuousBatcher:
             if not self.kv.can_allocate(req.prompt_len
                                         + req.max_new_tokens):
                 break
-            self.waiting.pop(i)
-            slot = free.pop(0)
-            self.kv.allocate(req.req_id, req.prompt_len)
-            self.slots[slot].request = req
+            slot = self._take(i, req)
             picks.append((slot, req))
+        self._skip_tombstones()
         return picks
 
     def step_decode_bookkeeping(self) -> List[int]:
         """Extend KV for every live slot by one token; returns live slots."""
         live = self.live_slots()
-        for i in live:
-            self.kv.extend(self.slots[i].request.req_id, 1)
+        slots = self.slots
+        self.kv.extend_many([slots[i].request.req_id for i in live], 1)
         return live
+
+    def bulk_decode_bookkeeping(self, k: int) -> None:
+        """Extend KV for every live slot by ``k`` tokens at once — the
+        macro-step form of ``k`` ``step_decode_bookkeeping`` calls
+        (identical page counts; feasibility is pre-checked by the
+        engine via :meth:`PagedKVAllocator.max_uniform_extend`)."""
+        slots = self.slots
+        self.kv.extend_many([slots[i].request.req_id
+                             for i in self._live], k)
 
     def finish(self, slot: int) -> "Request":
         req = self.slots[slot].request
         self.kv.release(req.req_id)
         self.slots[slot].request = None
+        self._live.remove(slot)
+        bisect.insort(self._free, slot)
         return req
-
-    def mean_live_batch(self) -> float:
-        return float(self.n_live)
 
 
 # --------------------------------------------------------------------------

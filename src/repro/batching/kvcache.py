@@ -64,14 +64,69 @@ class PagedKVAllocator:
         t.n_tokens = new_total
         return t
 
+    def extend_many(self, seq_ids: List[int], k: int) -> None:
+        """Extend every sequence in ``seq_ids`` by ``k`` tokens — the
+        macro-step form of per-step :meth:`extend` calls (identical
+        page pops, one pass)."""
+        free, tables, ps = self.free, self.tables, self.page_size
+        for sid in seq_ids:
+            t = tables[sid]
+            new_total = t.n_tokens + k
+            need = (new_total + ps - 1) // ps - len(t.pages)
+            if need > 0:
+                if need > len(free):
+                    raise MemoryError("out of KV pages")
+                for _ in range(need):
+                    t.pages.append(free.pop())
+            t.n_tokens = new_total
+
     def release(self, seq_id: int) -> None:
         t = self.tables.pop(seq_id)
         self.free.extend(reversed(t.pages))
 
     # ------------------------------------------------------------------
     @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    @property
     def used_pages(self) -> int:
         return self.n_pages - len(self.free)
+
+    def max_uniform_extend(self, seq_ids: List[int], k: int) -> int:
+        """Largest ``j <= k`` such that extending every sequence in
+        ``seq_ids`` by ``j`` tokens fits the free pool.
+
+        This is the KV-page-exhaustion bound of a decode event horizon:
+        within ``j`` steps no ``extend`` can raise ``MemoryError``, and
+        the first infeasible step (if any) is ``j + 1``. Page demand is
+        monotone in ``j``, so a quick full-``k`` check falls back to
+        binary search only when the pool actually binds.
+        """
+        if k <= 0 or not seq_ids:
+            return max(k, 0)
+        free = len(self.free)
+        ps = self.page_size
+        # O(1) sufficiency check: k new tokens cross at most
+        # k // page_size + 1 page boundaries per sequence
+        if len(seq_ids) * (k // ps + 1) <= free:
+            return k
+        toks = [self.tables[s].n_tokens for s in seq_ids]
+        held = sum(len(self.tables[s].pages) for s in seq_ids)
+
+        def need(j: int) -> int:
+            return sum((t + j + ps - 1) // ps for t in toks) - held
+
+        if need(k) <= free:
+            return k
+        lo, hi = 0, k               # need(lo) <= free < need(hi)
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if need(mid) <= free:
+                lo = mid
+            else:
+                hi = mid
+        return lo
 
     def utilization(self) -> float:
         """Fraction of *allocated* slots actually holding tokens —

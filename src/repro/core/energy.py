@@ -34,6 +34,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
+import numpy as np
+
 from repro.core.hardware import DeviceSpec
 from repro.core.precision import PrecisionPolicy, INT8, NF4
 
@@ -161,6 +163,42 @@ class EnergyModel:
             t_collective=t_collective, t_busy=t_busy, t_idle=t_idle,
             latency=t_busy + t_idle,
             energy_j=energy_per_chip * n_chips, bound=bound)
+
+
+    # -- vectorized entry (serving macro-steps) --------------------------
+    def evaluate_steps(self, w: PhaseWorkload, flops, act_bytes,
+                       n_chips: int = 1):
+        """Evaluate a run of same-shaped phases whose only varying
+        inputs are per-step ``flops`` / ``act_bytes`` arrays (see
+        :func:`repro.core.workload.decode_step_arrays`).
+
+        Returns ``(latency_s, energy_j, bound0)`` arrays plus the first
+        step's regime tag. Bit-identical to calling :meth:`evaluate`
+        once per step: the elementwise float64 operations below are the
+        scalar code's operations in the scalar code's order (IEEE-754
+        doubles either way), which the macro-stepping parity tests pin.
+        """
+        if w.collective_bytes:
+            raise ValueError("evaluate_steps assumes no collective "
+                             "traffic (decode-step workloads)")
+        d, p = self.device, self.policy
+        flops = np.asarray(flops, dtype=np.float64)
+        act_bytes = np.asarray(act_bytes, dtype=np.float64)
+        t_compute = flops / (d.peak_flops(p.weight_bits) * n_chips)
+        bytes_moved = (self.weight_traffic_bytes(w.weight_bytes_16)
+                       + act_bytes)
+        t_memory = bytes_moved / (d.hbm_bw * n_chips)
+        launches = w.n_kernel_launches + self.extra_launches(w.n_matmuls)
+        t_idle = launches * d.launch_overhead(w.stack)
+        t_busy = np.maximum(t_compute, t_memory)    # t_collective == 0
+        compute_bound = t_compute >= t_memory
+        p_busy = np.where(compute_bound,
+                          d.compute_power(p.weight_bits), d.power_memory)
+        energy = (p_busy * t_busy + d.idle_power * t_idle) * n_chips
+        latency = t_busy + t_idle
+        bound0 = _dominant(float(t_compute[0]), float(t_memory[0]),
+                           0.0, t_idle)
+        return latency, energy, bound0
 
 
 class FusedDequantEnergyModel(EnergyModel):

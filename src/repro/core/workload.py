@@ -16,6 +16,10 @@ Conventions
 """
 from __future__ import annotations
 
+import functools
+
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.core.energy import PhaseWorkload
 
@@ -175,6 +179,81 @@ def decode_step_workload(cfg: ModelConfig, batch: int, cache_len: int,
                          weight_bytes_16=weight_bytes, act_bytes=act_bytes,
                          n_matmuls=n_matmuls, n_kernel_launches=launches,
                          stack=stack)
+
+
+@functools.lru_cache(maxsize=512)
+def _decode_step_consts(cfg: ModelConfig, batch: int, stack: str,
+                        kv_bytes_per_elem: float):
+    """Step-invariant pieces of :func:`decode_step_workload` for one
+    (config, batch, stack) point — memoized so a macro-stepping run
+    derives them once instead of once per event horizon."""
+    L = _total_layers(cfg)
+    flops0 = batch * _layer_matmul_flops(cfg) * cfg.num_layers
+    attn_coef = (2 * 2 * batch * cfg.num_heads * cfg.head_dim
+                 * _attn_layer_count(cfg)) if cfg.has_attention else 0
+    lm_head = 2 * batch * cfg.d_model * cfg.vocab_size
+    weight_bytes = 2.0 * cfg.param_count(active_only=True)
+    kvb = _kv_bytes_per_token_layer(cfg, kv_bytes_per_elem)
+    if cfg.family in ("ssm", "hybrid"):
+        state2 = 2.0 * (batch * cfg.num_layers
+                        * (cfg.ssm_nheads * cfg.ssm_headdim
+                           * cfg.ssm_state) * 4)
+    else:
+        state2 = 0.0
+    attn_L = _attn_layer_count(cfg)
+    act_const = batch * cfg.d_model * _ACT_BYTES * 8 * L
+    n_matmuls = _MATMULS_PER_LAYER[cfg.family] * L
+    launches = _LAUNCHES_PER_LAYER[stack] * L + 4
+    return (flops0, attn_coef, lm_head, weight_bytes, kvb, state2,
+            attn_L, act_const, n_matmuls, launches)
+
+
+def decode_step_arrays(cfg: ModelConfig, batch: int, cache_lens,
+                       stack: str = "eager",
+                       kv_bytes_per_elem: float = 2.0):
+    """Vectorized :func:`decode_step_workload`: per-step ``flops`` /
+    ``act_bytes`` arrays for a run of decode steps whose cache lengths
+    are ``cache_lens`` (one entry per step, same batch throughout).
+
+    Returns ``(template, flops, act_bytes)`` where ``template`` carries
+    every step-invariant field (weight traffic, matmul/launch counts,
+    stack) plus the first step's varying terms. The arrays are
+    **bit-identical** to evaluating :func:`decode_step_workload` once
+    per step: every float multiply/add below mirrors the scalar code's
+    operation order, and all integer-valued intermediates stay exact in
+    float64 (well under 2**53) — the macro-stepping parity tests pin
+    this elementwise.
+    """
+    lens = np.asarray(cache_lens, dtype=np.int64)
+    (flops0, attn_coef, lm_head, weight_bytes, kvb, state2, attn_L,
+     act_const, n_matmuls, launches) = _decode_step_consts(
+        cfg, batch, stack, kv_bytes_per_elem)
+    if cfg.sliding_window is not None:
+        kv_eff = np.minimum(lens, cfg.sliding_window)
+    else:
+        kv_eff = lens
+    # flops: (batch * layer_flops * num_layers) + attn(kv_eff) + lm_head,
+    # added in the scalar order (layer_flops is float for hybrid, so the
+    # fold order matters there)
+    flops = np.full(len(lens), flops0, dtype=np.float64)
+    if attn_coef:
+        flops = flops + (attn_coef * kv_eff).astype(np.float64)
+    flops = flops + float(lm_head)
+    # act_bytes: cache traffic (the kv_eff-dependent term) + activations
+    if cfg.family == "ssm":
+        cache_bytes = np.full(len(lens), state2)
+    elif cfg.family == "hybrid":
+        kv_bytes = ((batch * kv_eff).astype(np.float64) * kvb * attn_L)
+        cache_bytes = state2 + kv_bytes
+    else:
+        cache_bytes = ((batch * kv_eff).astype(np.float64) * kvb * attn_L)
+    act_bytes = cache_bytes + float(act_const)
+    template = PhaseWorkload(phase="decode", flops=float(flops[0]),
+                             weight_bytes_16=weight_bytes,
+                             act_bytes=float(act_bytes[0]),
+                             n_matmuls=n_matmuls,
+                             n_kernel_launches=launches, stack=stack)
+    return template, flops, act_bytes
 
 
 def decode_workload(cfg: ModelConfig, batch: int, prompt_len: int,

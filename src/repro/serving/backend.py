@@ -56,7 +56,8 @@ import abc
 import dataclasses
 import json
 import math
-from typing import Any, Dict, List, Mapping, Optional, Tuple
+from typing import (TYPE_CHECKING, Any, Dict, List, Mapping, Optional,
+                    Tuple)
 
 import numpy as np
 
@@ -65,6 +66,9 @@ from repro.core import workload as W
 from repro.core.energy import EnergyModel, EnergyReport
 from repro.core.hardware import DeviceSpec, H100_SXM
 from repro.core.precision import PrecisionPolicy, make_policy
+
+if TYPE_CHECKING:   # event-horizon boundaries (duck-typed at runtime)
+    from repro.serving.scheduler import HorizonStop
 
 REPLAY_SCHEMA = "repro-replay/v1"
 BACKENDS = ("analytic", "executed", "replay")
@@ -124,6 +128,32 @@ class DecodeBatch:
         return len(self.slots)
 
 
+@dataclasses.dataclass
+class DecodeRun:
+    """Result of a fused run of decode steps over a frozen live batch
+    (the engine's event-horizon macro-step).
+
+    Per-step latencies/energies are kept so the engine can reproduce
+    the single-step accumulation order exactly — ``t_end`` is
+    ``t_start`` folded with the latencies in sequence, the same float
+    additions the per-step loop would have performed.
+    """
+
+    latencies_s: np.ndarray     # (n_steps,)
+    energies_j: np.ndarray      # (n_steps,)
+    t_end: float
+    tokens_per_step: int        # == batch size (one token per live slot)
+    bound: Optional[str] = None
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.latencies_s)
+
+    @property
+    def tokens(self) -> int:
+        return self.n_steps * self.tokens_per_step
+
+
 # ---------------------------------------------------------------------------
 # protocol
 # ---------------------------------------------------------------------------
@@ -150,6 +180,48 @@ class InferenceBackend(abc.ABC):
     def decode_step(self, batch: DecodeBatch) -> PhaseResult:
         """Execute ONE decode step for all live slots."""
 
+    def decode_run(self, batch: DecodeBatch, max_steps: int, *,
+                   t_start: float = 0.0,
+                   stop: Optional["HorizonStop"] = None) -> DecodeRun:
+        """Execute up to ``max_steps`` decode steps for a frozen live
+        batch — the engine's event-horizon macro-step.
+
+        ``batch.cache_lens`` describes the FIRST step; each later step
+        sees every cache one token longer. When ``stop`` is given, the
+        run ends after the first step whose end time (``t_start``
+        folded with the per-step latencies) hits the boundary.
+
+        The default implementation loops :meth:`decode_step` once per
+        step, so backends that only implement single steps — including
+        ones with real per-step side effects — keep working unchanged;
+        cost-only backends may override with a fused path (see
+        :meth:`AnalyticBackend.decode_run`). Either way results are
+        bit-identical to the single-step loop.
+        """
+        if max_steps < 1:
+            raise ValueError("decode_run needs max_steps >= 1")
+        lats: List[float] = []
+        ens: List[float] = []
+        now = t_start
+        bound = None
+        cur = batch
+        for j in range(max_steps):
+            if j:
+                cur = dataclasses.replace(
+                    batch, cache_lens=[c + j for c in batch.cache_lens])
+            res = self.decode_step(cur)
+            lats.append(res.latency_s)
+            ens.append(res.energy_j)
+            if bound is None:
+                bound = res.bound
+            now += res.latency_s
+            if stop is not None and stop.hit(now):
+                break
+        return DecodeRun(latencies_s=np.asarray(lats, dtype=np.float64),
+                         energies_j=np.asarray(ens, dtype=np.float64),
+                         t_end=float(now), tokens_per_step=batch.n,
+                         bound=bound)
+
     @abc.abstractmethod
     def decode_tail(self, request: Any, n_steps: int,
                     stack: str = "eager") -> PhaseResult:
@@ -167,6 +239,22 @@ class InferenceBackend(abc.ABC):
 
     def finish_request(self, request: Any) -> None:
         """Sequential-mode hook after a request's phases were costed."""
+
+
+_ARANGE = np.arange(1024, dtype=np.float64)
+_ARANGE.flags.writeable = False
+
+
+def _arange_f64(k: int) -> np.ndarray:
+    """Read-only ``0..k-1`` float64 view (grown on demand) — saves an
+    allocation per decode macro-step. The backing buffer is marked
+    non-writeable so an accidental in-place op raises instead of
+    corrupting every later macro-step."""
+    global _ARANGE
+    if k > len(_ARANGE):
+        _ARANGE = np.arange(max(k, 2 * len(_ARANGE)), dtype=np.float64)
+        _ARANGE.flags.writeable = False
+    return _ARANGE[:k]
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +324,38 @@ class AnalyticBackend(InferenceBackend):
                            energy_j=rep.energy_j, tokens=batch.n,
                            batch=float(batch.n), bound=rep.bound)
 
+    def decode_run(self, batch: DecodeBatch, max_steps: int, *,
+                   t_start: float = 0.0,
+                   stop: Optional["HorizonStop"] = None) -> DecodeRun:
+        """Fused macro-step: cost all ``max_steps`` in one vectorized
+        energy-model evaluation instead of ``max_steps`` Python
+        iterations. Bit-identical to the :meth:`decode_step` loop —
+        per-step mean cache lengths, workload terms, and the
+        ``t_start`` latency fold replicate the scalar arithmetic
+        exactly (pinned by the macro-stepping parity tests)."""
+        if max_steps < 1:
+            raise ValueError("decode_run needs max_steps >= 1")
+        n = batch.n
+        # per-step int(np.mean(cache_lens)): every cache grows by one
+        # token per step, so the (exact-integer) sum grows by n; the
+        # float division below is the same division np.mean performs
+        s0 = sum(batch.cache_lens)
+        sums = (np.float64(s0)
+                + np.float64(n) * _arange_f64(max_steps))
+        ctx = (sums / np.float64(n)).astype(np.int64)
+        template, flops, act = W.decode_step_arrays(
+            self.cfg, n, ctx, stack=batch.stack)
+        lat, en, bound = self.energy.evaluate_steps(
+            template, flops, act, self.n_chips)
+        buf = np.empty(max_steps + 1)
+        buf[0] = t_start
+        buf[1:] = lat
+        nows = np.add.accumulate(buf)[1:]   # strict left fold
+        j = max_steps if stop is None else stop.n_steps(nows)
+        return DecodeRun(latencies_s=lat[:j], energies_j=en[:j],
+                         t_end=float(nows[j - 1]), tokens_per_step=n,
+                         bound=bound)
+
     def decode_tail(self, request: Any, n_steps: int,
                     stack: str = "eager") -> PhaseResult:
         rep = self.decode_report(1, request.prompt_len, n_steps,
@@ -295,6 +415,15 @@ class ExecutedBackend(AnalyticBackend):
         res = super().decode_step(batch)
         self._execute_decode(batch)
         return res
+
+    def decode_run(self, batch: DecodeBatch, max_steps: int, *,
+                   t_start: float = 0.0,
+                   stop: Optional["HorizonStop"] = None) -> DecodeRun:
+        # real execution is inherently stepwise: use the protocol's
+        # decode_step fallback (each step runs the model; the analytic
+        # clock it returns is identical to the fused path's)
+        return InferenceBackend.decode_run(self, batch, max_steps,
+                                           t_start=t_start, stop=stop)
 
     def release_slot(self, slot: int) -> None:
         # zeroing just the feed token keeps freed lanes deterministic;
@@ -607,6 +736,13 @@ def _conformance(backend: InferenceBackend, reqs) -> None:
     _finite_result(backend.decode_step(
         DecodeBatch(slots=[0], requests=[r],
                     cache_lens=[r.prompt_len + 1])), "decode_step")
+    run = backend.decode_run(
+        DecodeBatch(slots=[0], requests=[r],
+                    cache_lens=[r.prompt_len + 2]), 4, t_start=1.0)
+    _check(isinstance(run, DecodeRun) and run.n_steps == 4,
+           f"decode_run must return a 4-step DecodeRun, got {run}")
+    _check(np.isfinite(run.t_end) and run.t_end >= 1.0,
+           f"decode_run t_end must fold from t_start, got {run.t_end}")
     _finite_result(backend.decode_tail(r, 4), "decode_tail")
     for state in ("idle", "gated"):
         res = backend.idle(0.5, state)
@@ -640,6 +776,20 @@ def selfcheck(verbose: bool = True) -> int:
            and rep_default.wall_time_s == rep_explicit.wall_time_s,
            "explicit AnalyticBackend diverges from the default engine")
     log(f"analytic ok ({rep_default.total_energy_j:.1f} J)")
+
+    # 1b. macro-step fusion: the vectorized decode_run must equal the
+    # protocol's stepwise fallback bit for bit
+    rs = reqs()[:2]
+    batch = DecodeBatch(slots=[0, 1], requests=rs,
+                        cache_lens=[r.prompt_len + 1 for r in rs])
+    fused = analytic.decode_run(batch, 16, t_start=0.25)
+    stepped = InferenceBackend.decode_run(analytic, batch, 16,
+                                          t_start=0.25)
+    _check(bool((fused.latencies_s == stepped.latencies_s).all()
+                and (fused.energies_j == stepped.energies_j).all()
+                and fused.t_end == stepped.t_end),
+           "vectorized decode_run diverges from the stepwise fallback")
+    log(f"decode_run ok (16 fused steps, t_end {fused.t_end:.4f}s)")
 
     # 2. replay: record the analytic run, replay it, compare
     rec = RecordingBackend(AnalyticBackend(cfg))

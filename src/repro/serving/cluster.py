@@ -33,7 +33,8 @@ import numpy as np
 from repro.serving.engine import ServeEngine, ServeReport
 from repro.serving.requests import Request
 from repro.serving.router import Router, make_router
-from repro.serving.scheduler import Scheduler, apply_schedule
+from repro.serving.scheduler import (HorizonStop, Scheduler,
+                                     apply_schedule)
 from repro.serving import slo
 from repro.serving.trace import PowerTrace
 
@@ -203,7 +204,13 @@ class ClusterEngine:
             # scheduling
             if nxt is not None and (t_arr is None
                                     or nxt.stream_now < t_arr - 1e-12):
-                nxt.stream_step()
+                # per-replica decode horizons are clipped to the shared
+                # arrival clock: a macro-step may run many decode steps
+                # at once but never past the point where this loop
+                # would have stopped stepping the replica
+                nxt.stream_step(
+                    stop=None if t_arr is None
+                    else HorizonStop(t_arr, mode="clock"))
                 continue
             if t_arr is None:
                 break

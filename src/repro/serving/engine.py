@@ -43,9 +43,40 @@ from repro.serving.backend import (AnalyticBackend, DecodeBatch,
                                    ExecutedBackend, InferenceBackend,
                                    PrefillBatch)
 from repro.serving.requests import Request, RequestStatus
-from repro.serving.scheduler import Scheduler, apply_schedule
+from repro.serving.scheduler import (HorizonStop, Scheduler,
+                                     apply_schedule)
 from repro.serving import slo
 from repro.serving.trace import PowerTrace
+
+
+def _fold(init: float, values: np.ndarray) -> float:
+    """Strict left fold ``((init + v0) + v1) + ...`` — the same float
+    additions a per-step ``+=`` loop performs, so macro-step
+    accumulators stay bit-identical to single-stepping. Vectorized via
+    the (sequential) ``np.add.accumulate`` once the run is long enough
+    to amortize the array setup."""
+    k = len(values)
+    if k == 0:
+        return init
+    if k < 64:
+        out = init
+        for v in values:
+            out += v
+        return float(out)
+    buf = np.empty(k + 1)
+    buf[0] = init
+    buf[1:] = values
+    return float(np.add.accumulate(buf)[-1])
+
+
+def _fold_many(inits: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Row-wise :func:`_fold`: every row starts from its own ``inits``
+    entry and folds the same ``values`` sequence (per-request energy
+    attribution across one macro-step)."""
+    buf = np.empty((len(inits), len(values) + 1))
+    buf[:, 0] = inits
+    buf[:, 1:] = values
+    return np.add.accumulate(buf, axis=1)[:, -1]
 
 
 @dataclasses.dataclass
@@ -200,9 +231,14 @@ class ServeEngine:
                  energy_model_cls=EnergyModel,
                  execute: bool = False, model=None, params=None,
                  buf_len: int = 256,
-                 backend: Optional[InferenceBackend] = None):
+                 backend: Optional[InferenceBackend] = None,
+                 macro_step: bool = True):
         if mode not in ("continuous", "sequential"):
             raise ValueError(mode)
+        # event-horizon macro-stepping (bit-identical to single-step;
+        # macro_step=False forces the per-token loop — parity tests and
+        # the simperf baseline use it)
+        self.macro_step = macro_step
         self.cfg = cfg
         self.policy: PrecisionPolicy = make_policy(fmt)
         self.n_chips = n_chips
@@ -340,17 +376,23 @@ class ServeEngine:
     def _run_continuous(self, reqs: List[Request],
                         plans_gaps: bool = False) -> ServeReport:
         self.stream_start()
-        pending = list(reqs)
-        while len(self._stream.done) < len(reqs):
-            while (pending and pending[0].effective_arrival
-                    <= self._stream.now + 1e-12):
-                self.stream_submit(pending.pop(0))
+        s = self._stream
+        n, head = len(reqs), 0          # head pointer, no pop(0) shifts
+        while len(s.done) < n:
+            while (head < n and reqs[head].effective_arrival
+                    <= s.now + 1e-12):
+                self.stream_submit(reqs[head])
+                head += 1
             if self.stream_can_step():
-                self.stream_step()
+                # the next (shaped) release bounds the decode horizon
+                stop = (HorizonStop(reqs[head].effective_arrival,
+                                    mode="admit")
+                        if head < n else None)
+                self.stream_step(stop=stop)
                 continue
-            if pending:
-                t_next = pending[0].effective_arrival
-                gap = t_next - self._stream.now
+            if head < n:
+                t_next = reqs[head].effective_arrival
+                gap = t_next - s.now
                 wake = self.device.wake_latency_s
                 if plans_gaps and gap > wake:
                     # the scheduler planned this gap, so the device can
@@ -359,7 +401,7 @@ class ServeEngine:
                     self.stream_idle(t_next - wake, gated=True)
                 self.stream_idle(t_next)
             else:   # waiting queue blocked on memory with nothing live
-                if self.batcher.waiting:
+                if self.batcher.n_waiting:
                     raise RuntimeError("deadlock: waiting requests cannot "
                                        "be scheduled (KV pool too small)")
                 break
@@ -382,13 +424,13 @@ class ServeEngine:
     @property
     def stream_load(self) -> int:
         """Requests on this replica that are not finished."""
-        return self.batcher.n_live + len(self.batcher.waiting)
+        return self.batcher.n_live + self.batcher.n_waiting
 
     def stream_outstanding_work(self) -> float:
         """Outstanding token work: un-prefilled prompt tokens plus
         remaining decode tokens of queued + running requests."""
         b = self.batcher
-        work = sum(r.prompt_len + r.max_new_tokens for r in b.waiting)
+        work = b.waiting_tokens
         work += sum(b.slots[i].request.max_new_tokens
                     - b.slots[i].request.tokens_generated
                     for i in b.live_slots())
@@ -402,10 +444,10 @@ class ServeEngine:
         """True if the scheduler can make progress right now (a prefill
         batch is admissible, or live slots can take a decode step)."""
         b = self.batcher
-        if b.live_slots():
+        if b.n_live:
             return True
-        if b.waiting and b.free_slots():
-            head = b.waiting[0]
+        if b.n_waiting and b.n_live < self.max_batch:
+            head = b.waiting_head()
             return b.kv.can_allocate(head.prompt_len
                                      + head.max_new_tokens)
         return False
@@ -413,12 +455,16 @@ class ServeEngine:
     def stream_stuck(self) -> bool:
         """Waiting requests exist but can never be scheduled (KV pool
         too small and nothing live to release pages)."""
-        return bool(self.batcher.waiting) and not self.stream_can_step()
+        return bool(self.batcher.n_waiting) and not self.stream_can_step()
 
-    def stream_step(self) -> float:
-        """Execute one scheduler iteration (one prefill batch or one
-        decode step) through the backend, advancing the stream clock.
-        Returns the phase latency (0.0 if there was nothing to do)."""
+    def stream_step(self, stop: Optional[HorizonStop] = None) -> float:
+        """Execute one scheduler iteration through the backend,
+        advancing the stream clock: one prefill batch, or — when the
+        live batch is frozen for several decode steps — one fused
+        decode macro-step covering every step up to the next event
+        (completion, KV-page exhaustion, or the ``stop`` boundary: the
+        next shaped release / cluster sync point). Returns the phase
+        latency (0.0 if there was nothing to do)."""
         s, b = self._stream, self.batcher
         picks = b.schedule_prefill()
         if picks:
@@ -444,6 +490,11 @@ class ServeEngine:
         live = b.live_slots()
         if live:
             reqs = [b.slots[i].request for i in live]
+            k, completes = (self._decode_horizon(reqs)
+                            if self.macro_step else (1, True))
+            if k > 1:
+                return self._decode_macro(live, reqs, k, completes,
+                                          stop)
             res = self.backend.decode_step(DecodeBatch(
                 slots=live, requests=reqs,
                 cache_lens=[r.prompt_len + r.tokens_generated
@@ -464,6 +515,67 @@ class ServeEngine:
             self._finish_ready(b, s.done, s.now)
             return res.latency_s
         return 0.0
+
+    # -- event-horizon macro-stepping ----------------------------------
+    def _decode_horizon(self, reqs: List[Request]
+                        ) -> "tuple[int, bool]":
+        """``(steps, completes)`` until the next scheduler-visible
+        event: the earliest request completion, clipped to KV-page
+        feasibility. Within the horizon the live batch composition
+        cannot change — arrivals only land at ``stop`` boundaries,
+        waiting requests stay blocked (free slots and KV pages only
+        shrink during decode), and no request finishes before the
+        min-remaining one. ``completes`` says whether requests finish
+        at the horizon's last step (False when KV pages clipped it)."""
+        k = min(r.max_new_tokens - r.tokens_generated for r in reqs)
+        if k <= 1:
+            return 1, True
+        k_kv = self.batcher.kv.max_uniform_extend(
+            [r.req_id for r in reqs], k)
+        if k_kv >= k:
+            return k, True
+        # k_kv == 0: even one fused step would exhaust the pool — take
+        # the single-step path so it fails exactly like the old loop
+        return max(k_kv, 1), False
+
+    def _decode_macro(self, live: List[int], reqs: List[Request],
+                      k: int, completes: bool,
+                      stop: Optional[HorizonStop]) -> float:
+        """Execute up to ``k`` decode steps as one fused backend call,
+        reproducing the single-step loop's accumulation order exactly
+        (see :func:`_fold`)."""
+        s, b = self._stream, self.batcher
+        n = len(live)
+        run = self.backend.decode_run(
+            DecodeBatch(slots=live, requests=reqs,
+                        cache_lens=[r.prompt_len + r.tokens_generated
+                                    for r in reqs],
+                        stack=self.stack),
+            k, t_start=s.now, stop=stop)
+        j = run.n_steps
+        if self._trace is not None:
+            # one coalesced decode segment per macro-step
+            self._trace.record_run(self._trace_replica, "decode", s.now,
+                                   run.latencies_s, run.energies_j,
+                                   float(n))
+        t0 = s.now
+        s.now = run.t_end
+        s.busy_t = _fold(s.busy_t, run.latencies_s)
+        s.busy_e = _fold(s.busy_e, run.energies_j)
+        s.decode_time = _fold(s.decode_time, run.latencies_s)
+        s.batch_time = _fold(s.batch_time, run.latencies_s * float(n))
+        s.n_decode += j
+        b.bulk_decode_bookkeeping(j)
+        shares = run.energies_j / float(n)
+        new_e = _fold_many(np.array([r.energy_j for r in reqs]), shares)
+        for i, r in enumerate(reqs):
+            r.tokens_generated += j
+            r.energy_j = float(new_e[i])
+        if completes and j == k:
+            # requests only finish at the completion horizon's last
+            # step — a stop- or KV-clipped run has nothing to collect
+            self._finish_ready(b, s.done, s.now)
+        return float(run.t_end - t0)
 
     def stream_idle(self, until: float, gated: bool = False) -> None:
         """Advance the stream clock to ``until``, accruing idle power —

@@ -22,6 +22,13 @@ nothing, exactly like passthrough. Shaping composes with routing: the
 cluster applies the scheduler to the shared arrival stream before the
 router sees it.
 
+Shaped release times are also the simulator's **event horizon
+boundaries** (:class:`HorizonStop`): between two releases the live
+decode batch is frozen, so the engine fuses every step up to the next
+release into one macro-step backend call — shaping doesn't just save
+simulated energy, it makes the simulation itself run orders of
+magnitude faster at fleet scale.
+
 Policies
 --------
 ``passthrough``    release = arrival (the unshaped baseline; no gating)
@@ -45,6 +52,8 @@ import heapq
 import math
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
 
+import numpy as np
+
 from repro.core import workload as W
 from repro.core.energy import EnergyModel
 from repro.core.hardware import DeviceSpec, H100_SXM
@@ -53,6 +62,57 @@ from repro.serving.requests import Request, RequestStatus
 
 if TYPE_CHECKING:   # keep engine import runtime-light
     from repro.serving.engine import ServeEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class HorizonStop:
+    """An absolute-time event boundary that ends a decode macro-step.
+
+    Shaped release times are exactly these boundaries: between two
+    releases (and in the absence of completions or KV-page exhaustion)
+    the live batch composition is frozen, so the engine may fuse every
+    decode step up to the boundary into one
+    :meth:`~repro.serving.backend.InferenceBackend.decode_run` call.
+    The two modes reproduce the exact float comparisons of the
+    pre-macro event loops, so fused runs execute bit-identical step
+    counts:
+
+    * ``admit`` — :class:`~repro.serving.engine.ServeEngine`'s arrival
+      rule: a release at ``t_stop`` is admitted once
+      ``t_stop <= now + eps``, so decoding stops after the first step
+      whose end time satisfies that;
+    * ``clock`` — :class:`~repro.serving.cluster.ClusterEngine`'s
+      co-simulation rule: a replica keeps stepping while
+      ``now < t_stop - eps``.
+
+    Either way the in-flight step always completes (the single-step
+    loops only re-checked arrivals between steps).
+    """
+
+    t_stop: float
+    mode: str = "admit"
+    eps: float = 1e-12
+
+    def __post_init__(self):
+        if self.mode not in ("admit", "clock"):
+            raise ValueError(f"unknown horizon-stop mode {self.mode!r}")
+
+    def hit(self, now: float) -> bool:
+        """Whether the boundary has been reached at clock ``now``."""
+        if self.mode == "admit":
+            return self.t_stop <= now + self.eps
+        return not (now < self.t_stop - self.eps)
+
+    def n_steps(self, step_end_times) -> int:
+        """Steps to execute given per-step end times: everything before
+        the first boundary hit, plus the step that crosses it."""
+        t = np.asarray(step_end_times, dtype=np.float64)
+        if self.mode == "admit":
+            hits = self.t_stop <= t + self.eps
+        else:
+            hits = t >= self.t_stop - self.eps
+        idx = np.flatnonzero(hits)
+        return int(idx[0]) + 1 if len(idx) else len(t)
 
 
 @dataclasses.dataclass

@@ -90,6 +90,25 @@ class PowerTrace:
         self.segments.append(seg)
         self._last[replica] = seg
 
+    def record_run(self, replica: int, state: str, t0: float,
+                   latencies, energies, batch: float = 0.0) -> None:
+        """Record one engine macro-step (a fused run of same-state
+        accruals, e.g. all decode steps inside one event horizon).
+
+        The run coalesces into a single segment through the ordinary
+        merge rule, but the per-accrual arithmetic — sequential energy
+        adds, the duration-weighted batch fold, per-step time
+        boundaries — is preserved exactly, so a traced macro-stepped
+        run exports byte-identical segments to its single-stepped
+        twin (including skipping zero-duration accruals, which the
+        engine's per-step recorder drops)."""
+        now = t0
+        for lat, e in zip(latencies, energies):
+            t1 = now + lat
+            if t1 > now:
+                self.record(replica, state, now, t1, e, batch)
+            now = t1
+
     # ------------------------------------------------------------------
     @property
     def n_replicas(self) -> int:

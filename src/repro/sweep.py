@@ -27,6 +27,7 @@ import fnmatch
 import itertools
 import json
 import os
+import tempfile
 from typing import (Any, Callable, Dict, Iterable, List, Mapping,
                     Optional, Sequence, Tuple, Union)
 
@@ -34,6 +35,10 @@ from repro.api import ExperimentSpec, RunResult
 
 #: default on-disk memoization directory (overridable per sweep call)
 DEFAULT_CACHE_DIR = os.path.join("experiments", "bench", "speccache")
+
+#: environment default for ``sweep(workers=...)`` — how
+#: ``benchmarks/run.py --workers N`` reaches every suite's sweeps
+WORKERS_ENV = "REPRO_SWEEP_WORKERS"
 
 
 @dataclasses.dataclass(frozen=True, init=False)
@@ -253,55 +258,149 @@ def _cache_load(path: str, spec: ExperimentSpec) -> Optional[RunResult]:
     return RunResult.from_dict(blob["result"])
 
 
+def _cache_path(spec: ExperimentSpec, cache_dir: Optional[str]) -> str:
+    return os.path.join(cache_dir or DEFAULT_CACHE_DIR,
+                        spec.spec_hash() + ".json")
+
+
+def _cache_enabled(spec: ExperimentSpec, cache: bool) -> bool:
+    """Replay-backend specs are never memoized: the hash sees only the
+    trace-file *path*, so a re-recorded trace would silently serve
+    stale results."""
+    return cache and spec.backend != "replay"
+
+
+def _cache_try(spec: ExperimentSpec, cache: bool,
+               cache_dir: Optional[str]) -> Optional[RunResult]:
+    """The one cache-probe policy shared by :func:`run_spec` and the
+    parallel sweep pre-scan, so the two paths cannot drift."""
+    if not _cache_enabled(spec, cache):
+        return None
+    return _cache_load(_cache_path(spec, cache_dir), spec)
+
+
+def _atomic_write_json(blob: Mapping, path: str) -> None:
+    """Write-to-temp + ``os.replace``: a cache entry is either absent
+    or complete, never truncated — an interrupted (or parallel) sweep
+    cannot leave half-written JSON for the corrupt-cache path to eat on
+    every later run."""
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(blob, f, indent=1)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def run_spec(spec: ExperimentSpec, *, cache: bool = True,
              cache_dir: Optional[str] = None
              ) -> Tuple[RunResult, bool]:
     """Run one spec with on-disk memoization; returns ``(result,
     was_cache_hit)``. The cache key is the spec's content hash, so any
     axis change re-runs and identical specs are served from disk.
-    Replay-backend specs are never memoized: the hash sees only the
-    trace-file *path*, so a re-recorded trace would silently serve
-    stale results."""
-    if spec.backend == "replay":
-        cache = False
-    cdir = cache_dir or DEFAULT_CACHE_DIR
-    path = os.path.join(cdir, spec.spec_hash() + ".json")
+    Cache writes are atomic (temp file + ``os.replace``), so parallel
+    workers and interrupted sweeps never corrupt an entry.
+    Replay-backend specs are never memoized (see
+    :func:`_cache_enabled`)."""
+    cache = _cache_enabled(spec, cache)
+    path = _cache_path(spec, cache_dir)
     if cache:
         hit = _cache_load(path, spec)
         if hit is not None:
             return hit, True
     result = spec.run()
     if cache:
-        os.makedirs(cdir, exist_ok=True)
-        with open(path, "w") as f:
-            json.dump({"version": _code_version(),
-                       "spec": spec.to_dict(),
-                       "result": result.to_dict()}, f, indent=1)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        _atomic_write_json({"version": _code_version(),
+                            "spec": spec.to_dict(),
+                            "result": result.to_dict()}, path)
     return result, False
+
+
+def _resolve_workers(workers: Optional[int]) -> int:
+    if workers is None:
+        workers = int(os.environ.get(WORKERS_ENV, "1") or 1)
+    return max(int(workers), 1)
+
+
+def _sweep_worker(payload) -> Tuple[Dict, bool]:
+    """Run one grid point in a pool process. Specs travel as dicts and
+    results come back as dicts (JSON-faithful either way), so nothing
+    engine-side needs to pickle."""
+    spec_dict, cache, cache_dir = payload
+    result, hit = run_spec(ExperimentSpec.from_dict(spec_dict),
+                           cache=cache, cache_dir=cache_dir)
+    return result.to_dict(), hit
 
 
 def sweep(base: ExperimentSpec,
           axes: Optional[Mapping[str, Sequence[Any]]] = None, *,
           tag: str = "", claims: Iterable[Claim] = (),
           cache: bool = True, cache_dir: Optional[str] = None,
-          progress: Optional[Callable[[str, RunResult], None]] = None
-          ) -> SweepResult:
+          progress: Optional[Callable[[str, RunResult], None]] = None,
+          workers: Optional[int] = None) -> SweepResult:
     """Expand ``axes`` over ``base``, run every grid point (memoized),
-    evaluate ``claims``, and return the labelled results."""
+    evaluate ``claims``, and return the labelled results.
+
+    ``workers > 1`` runs the cache-miss points in a process pool
+    (cache hits are still served in-process; memoization stays
+    spec-hash keyed and atomic, so concurrent writers are safe).
+    Results are returned in the deterministic grid-label order either
+    way. Defaults to the ``REPRO_SWEEP_WORKERS`` environment variable
+    (how ``benchmarks/run.py --workers`` reaches every suite), else 1.
+    """
+    points = expand_grid(base, axes, tag=tag)
+    workers = _resolve_workers(workers)
+    runs: List[Optional[Tuple[RunResult, bool]]] = [None] * len(points)
+    if workers > 1 and len(points) > 1:
+        # serve hits locally; only misses pay for a pool slot
+        misses = []
+        for idx, (_, spec) in enumerate(points):
+            hit = _cache_try(spec, cache, cache_dir)
+            if hit is not None:
+                runs[idx] = (hit, True)
+            else:
+                misses.append(idx)
+        if misses:
+            import multiprocessing
+            from concurrent.futures import ProcessPoolExecutor
+            # spawn, not fork: the parent has imported JAX (repro's
+            # import chain), whose internal threadpools make forked
+            # children deadlock-prone; spawned workers pay a ~1.5s
+            # interpreter+import startup once per pool slot instead
+            with ProcessPoolExecutor(
+                    max_workers=min(workers, len(misses)),
+                    mp_context=multiprocessing.get_context(
+                        "spawn")) as pool:
+                futs = [pool.submit(
+                    _sweep_worker,
+                    (points[i][1].to_dict(), cache, cache_dir))
+                    for i in misses]
+                for idx, fut in zip(misses, futs):
+                    blob, was_hit = fut.result()
+                    runs[idx] = (RunResult.from_dict(blob), was_hit)
+    else:
+        runs = [run_spec(spec, cache=cache, cache_dir=cache_dir)
+                for _, spec in points]
     out: Dict[str, RunResult] = {}
-    hits = misses = 0
-    for label, spec in expand_grid(base, axes, tag=tag):
-        result, was_hit = run_spec(spec, cache=cache,
-                                   cache_dir=cache_dir)
-        hits, misses = hits + was_hit, misses + (not was_hit)
+    hits = misses_n = 0
+    for (label, _), (result, was_hit) in zip(points, runs):
+        hits, misses_n = hits + was_hit, misses_n + (not was_hit)
         out[label] = result
         if progress is not None:
             progress(label, result)
-    res = SweepResult(results=out, cache_hits=hits, cache_misses=misses)
+    res = SweepResult(results=out, cache_hits=hits,
+                      cache_misses=misses_n)
     res.check(claims)
     return res
 
 
 __all__ = ["sweep", "run_spec", "expand_grid", "Option", "Claim",
            "ClaimResult", "SweepResult", "select", "check_claims",
-           "DEFAULT_CACHE_DIR"]
+           "DEFAULT_CACHE_DIR", "WORKERS_ENV"]

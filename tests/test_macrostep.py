@@ -1,0 +1,422 @@
+"""Event-horizon macro-stepping parity: the fused decode path must be
+*bit-identical* to single-stepping — reports, request lifecycles, KV
+accounting, traces, clusters — across seeded random workload mixes, and
+``decode_run`` must fall back correctly for backends that only
+implement ``decode_step``."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_archs
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.core import workload as W
+from repro.core.energy import EnergyModel, FusedDequantEnergyModel
+from repro.core.hardware import H100_SXM, TPU_V5E
+from repro.core.precision import make_policy
+from repro.batching.kvcache import PagedKVAllocator
+from repro.serving.backend import (AnalyticBackend, DecodeBatch,
+                                   InferenceBackend)
+from repro.serving.cluster import ClusterEngine
+from repro.serving.engine import ServeEngine
+from repro.serving.requests import Request
+from repro.serving.router import make_router
+from repro.serving.scheduler import HorizonStop, make_scheduler
+from repro.serving.trace import PowerTrace
+from repro.serving.arrival import (burst_arrivals, paper_requests,
+                                   poisson_arrivals)
+
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+
+
+def _mix(seed, n=40, arrival="poisson", **shape):
+    shape.setdefault("prompt_range", (150, 3000))
+    shape.setdefault("output_range", (5, 200))
+    if arrival == "poisson":
+        arr = poisson_arrivals(n, 6.0, seed=seed)
+    elif arrival == "burst":
+        arr = burst_arrivals(n, max(n // 4, 1), 4.0)
+    else:
+        arr = [0.0] * n
+    return paper_requests(n, arr, seed=seed, **shape)
+
+
+def _fields(rep):
+    """Every scalar the report exposes plus the full per-request
+    lifecycle — compared with ``==`` (no tolerance)."""
+    return (rep.total_energy_j, rep.busy_energy_j, rep.idle_energy_j,
+            rep.gated_energy_j, rep.wall_time_s, rep.busy_time_s,
+            rep.idle_time_s, rep.gated_time_s, rep.mean_batch,
+            rep.n_prefill_batches, rep.n_decode_steps,
+            tuple((r.req_id, r.status, r.t_prefill_start,
+                   r.t_first_token, r.t_done, r.tokens_generated,
+                   r.energy_j) for r in rep.requests))
+
+
+def _pair(seed, *, n=40, arrival="poisson", engine_kw=None, run_kw=None,
+          shape=None):
+    engine_kw = dict(engine_kw or {})
+    run_kw_f = dict(run_kw or {})
+    shape = dict(shape or {})
+    out = []
+    for macro in (False, True):
+        eng = ServeEngine(LLAMA8B, macro_step=macro,
+                          **{"max_batch": 16, **engine_kw})
+        out.append(eng.run(_mix(seed, n=n, arrival=arrival, **shape),
+                           **run_kw_f))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# engine parity
+# ---------------------------------------------------------------------------
+class TestEngineParity:
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("arrival", ["poisson", "burst",
+                                         "all_at_once"])
+    def test_random_mix_bit_identical(self, seed, arrival):
+        single, macro = _pair(seed, arrival=arrival)
+        assert _fields(single) == _fields(macro)
+        assert single.summary() == macro.summary()
+
+    @pytest.mark.parametrize("max_batch", [1, 4, 64])
+    def test_batch_extremes(self, max_batch):
+        single, macro = _pair(2, engine_kw={"max_batch": max_batch})
+        assert _fields(single) == _fields(macro)
+
+    def test_long_decode_deep_batch(self):
+        single, macro = _pair(
+            0, n=48, arrival="burst", engine_kw={"max_batch": 32},
+            shape={"output_range": (128, 512)})
+        assert _fields(single) == _fields(macro)
+        assert macro.n_decode_steps > 1000      # real macro territory
+
+    @pytest.mark.parametrize("policy,kw", [
+        ("paced", {"rate_per_s": 4.0, "burst": 4}),
+        ("window", {"window_s": 1.0}),
+        ("deadline", {"service_rate_per_s": 6.0}),
+    ])
+    def test_shaped_releases_are_horizon_boundaries(self, policy, kw):
+        """Shaping (incl. planned-gap power gating) stays bit-exact:
+        releases bound the decode horizons."""
+        reports = []
+        for macro in (False, True):
+            eng = ServeEngine(LLAMA8B, max_batch=16, macro_step=macro)
+            reports.append(eng.run(_mix(5, arrival="burst"),
+                                   scheduler=make_scheduler(policy, **kw)))
+        assert _fields(reports[0]) == _fields(reports[1])
+
+    def test_trace_segments_identical_and_coalesced(self):
+        traces = []
+        for macro in (False, True):
+            tr = PowerTrace()
+            ServeEngine(LLAMA8B, max_batch=16, macro_step=macro).run(
+                _mix(1, arrival="burst"), trace=tr)
+            traces.append(tr)
+        a, b = traces
+        assert a.as_dict() == b.as_dict()
+        # the macro recorder merged per-step accruals, it didn't split
+        assert [s.n_events for s in a.segments] \
+            == [s.n_events for s in b.segments]
+
+    def test_record_run_skips_zero_duration_accruals(self):
+        """The macro recorder must drop zero-latency accruals exactly
+        like the engine's per-step ``_record`` guard does (a replayed
+        hardware trace may legally contain duplicate timestamps)."""
+        a, b = PowerTrace(), PowerTrace()
+        lats, ens = [0.5, 0.0, 0.25], [5.0, 1.0, 2.5]
+        a.record_run(0, "decode", 1.0, lats, ens, 4.0)
+        now = 1.0
+        for lat, e in zip(lats, ens):
+            t1 = now + lat
+            if t1 > now:            # engine._record's guard
+                b.record(0, "decode", now, t1, e, 4.0)
+            now = t1
+        assert a.as_dict() == b.as_dict()
+        assert a.segments[0].n_events == 2
+
+    def test_sequential_mode_unaffected(self):
+        single, macro = _pair(3, engine_kw={"mode": "sequential"})
+        assert _fields(single) == _fields(macro)
+
+    def test_small_kv_pool_blocks_head_of_line(self):
+        """A pool sized to the live set's worst case (so decode can
+        never fault) but far below the queue's demand forces constant
+        head-of-line blocking on memory — still bit-identical. Worst
+        case per request: ceil(2400/64) = 38 pages; 4 slots x 38 = 152
+        <= 160."""
+        kw = {"max_batch": 4, "kv_pages": 160, "page_size": 64}
+        single, macro = _pair(4, n=24, arrival="all_at_once",
+                              engine_kw=kw,
+                              shape={"prompt_range": (600, 2000),
+                                     "output_range": (100, 400)})
+        assert _fields(single) == _fields(macro)
+
+    def test_kv_exhaustion_raises_identically(self):
+        """When the pool genuinely over-commits, both paths raise
+        MemoryError (the macro path routes the failing step through the
+        single-step code)."""
+        reqs = [Request(req_id=i, prompt=None, prompt_len=60,
+                        max_new_tokens=900, arrival_time=0.0)
+                for i in range(4)]
+        errs = []
+        for macro in (False, True):
+            eng = ServeEngine(LLAMA8B, max_batch=4, kv_pages=16,
+                              page_size=64, macro_step=macro)
+            with pytest.raises(MemoryError):
+                eng.run([dataclasses.replace(r) for r in reqs])
+            errs.append(True)
+        assert errs == [True, True]
+
+
+# ---------------------------------------------------------------------------
+# cluster parity
+# ---------------------------------------------------------------------------
+class TestClusterParity:
+    @pytest.mark.parametrize("policy", ["round_robin", "least_loaded",
+                                        "shortest_work", "energy_aware"])
+    def test_heterogeneous_fleet_bit_identical(self, policy):
+        def fleet(macro):
+            engines = [ServeEngine(LLAMA8B, max_batch=mb, fmt=fmt,
+                                   macro_step=macro)
+                       for mb, fmt in [(8, "bfloat16"), (16, "bfloat16"),
+                                       (8, "int8")]]
+            return ClusterEngine(engines, make_router(policy))
+        a = fleet(False).run(_mix(7, n=60, arrival="burst"))
+        b = fleet(True).run(_mix(7, n=60, arrival="burst"))
+        assert a.wall_time_s == b.wall_time_s
+        for ra, rb in zip(a.replica_reports, b.replica_reports):
+            assert _fields(ra) == _fields(rb)
+        assert a.summary() == b.summary()
+
+
+# ---------------------------------------------------------------------------
+# decode_run protocol
+# ---------------------------------------------------------------------------
+class _StepOnlyBackend(InferenceBackend):
+    """A backend implementing ONLY the per-step protocol surface —
+    the decode_run regression target (no override)."""
+
+    name = "step-only"
+
+    def __init__(self):
+        self.inner = AnalyticBackend(LLAMA8B)
+        self.step_calls = 0
+
+    def prefill(self, batch):
+        return self.inner.prefill(batch)
+
+    def decode_step(self, batch):
+        self.step_calls += 1
+        return self.inner.decode_step(batch)
+
+    def decode_tail(self, request, n_steps, stack="eager"):
+        return self.inner.decode_tail(request, n_steps, stack=stack)
+
+    def idle(self, dt, state="idle"):
+        return self.inner.idle(dt, state)
+
+
+class TestDecodeRun:
+    def _batch(self, n=4, ctx=300):
+        reqs = [Request(req_id=i, prompt=None, prompt_len=ctx,
+                        max_new_tokens=64, arrival_time=0.0)
+                for i in range(n)]
+        return DecodeBatch(slots=list(range(n)), requests=reqs,
+                           cache_lens=[ctx + 1 + i for i in range(n)],
+                           stack="fused")
+
+    def test_analytic_matches_stepwise_exactly(self):
+        backend = AnalyticBackend(LLAMA8B)
+        batch = self._batch()
+        run = backend.decode_run(batch, 50, t_start=1.5)
+        now = 1.5
+        for j in range(50):
+            res = backend.decode_step(dataclasses.replace(
+                batch, cache_lens=[c + j for c in batch.cache_lens]))
+            assert run.latencies_s[j] == res.latency_s
+            assert run.energies_j[j] == res.energy_j
+            now += res.latency_s
+        assert run.t_end == now
+        assert run.n_steps == 50 and run.tokens == 50 * 4
+
+    def test_fallback_for_step_only_backends(self):
+        """Backends without a decode_run override must work through
+        the default decode_step loop — and the engine must produce the
+        same report either way."""
+        reports = []
+        for macro in (False, True):
+            backend = _StepOnlyBackend()
+            eng = ServeEngine(LLAMA8B, max_batch=8, macro_step=macro,
+                              backend=backend)
+            reports.append(eng.run(_mix(9, n=16)))
+            assert backend.step_calls == reports[-1].n_decode_steps
+        assert _fields(reports[0]) == _fields(reports[1])
+
+    def test_fallback_respects_stop_rule(self):
+        backend = _StepOnlyBackend()
+        batch = self._batch()
+        free = backend.inner.decode_run(batch, 40, t_start=0.0)
+        t_stop = float(np.add.accumulate(free.latencies_s)[9])
+        run = backend.decode_run(batch, 40, t_start=0.0,
+                                 stop=HorizonStop(t_stop, mode="admit"))
+        assert run.n_steps == 10
+        assert backend.step_calls == 10     # stopped executing, too
+        vec = backend.inner.decode_run(batch, 40, t_start=0.0,
+                                       stop=HorizonStop(t_stop,
+                                                        mode="admit"))
+        assert vec.n_steps == 10
+        assert vec.t_end == run.t_end
+
+    def test_stop_modes(self):
+        ends = [1.0, 2.0, 3.0, 4.0]
+        # admit: boundary <= now + eps
+        assert HorizonStop(2.5, mode="admit").n_steps(ends) == 3
+        assert HorizonStop(2.0, mode="admit").n_steps(ends) == 2
+        assert HorizonStop(99.0, mode="admit").n_steps(ends) == 4
+        # clock: stop once now >= boundary - eps
+        assert HorizonStop(2.5, mode="clock").n_steps(ends) == 3
+        assert HorizonStop(0.5, mode="clock").n_steps(ends) == 1
+        with pytest.raises(ValueError, match="mode"):
+            HorizonStop(1.0, mode="bogus")
+
+    def test_decode_run_validates_max_steps(self):
+        backend = AnalyticBackend(LLAMA8B)
+        with pytest.raises(ValueError, match="max_steps"):
+            backend.decode_run(self._batch(), 0)
+        with pytest.raises(ValueError, match="max_steps"):
+            InferenceBackend.decode_run(backend, self._batch(), 0)
+
+
+# ---------------------------------------------------------------------------
+# executed backend through the macro engine
+# ---------------------------------------------------------------------------
+class TestExecutedMacro:
+    def test_real_execution_is_stepwise_and_identical(self):
+        import jax
+        from repro.models import build_model
+        cfg = get_config("stablelm-1.6b").reduced()
+        model = build_model(cfg, fmt="float32")
+        params = model.init(jax.random.PRNGKey(0))
+
+        def prompts():
+            r = np.random.default_rng(3)
+            return [Request(req_id=i,
+                            prompt=r.integers(0, cfg.vocab_size, 8)
+                            .astype(np.int32),
+                            prompt_len=8, max_new_tokens=6,
+                            arrival_time=0.0)
+                    for i in range(4)]
+
+        reports = []
+        for macro in (False, True):
+            eng = ServeEngine(cfg, fmt="float32", max_batch=4,
+                              max_prefill_batch=2, execute=True,
+                              model=model, params=params, buf_len=32,
+                              macro_step=macro)
+            reports.append(eng.run(prompts()))
+        a, b = reports
+        assert _fields(a) == _fields(b)
+        assert [r.generated for r in a.requests] \
+            == [r.generated for r in b.requests]
+        assert all(len(r.generated) == r.max_new_tokens
+                   for r in b.requests)
+
+
+# ---------------------------------------------------------------------------
+# vectorized cost kernel vs scalar evaluation
+# ---------------------------------------------------------------------------
+class TestVectorizedCosts:
+    ARCHS = sorted(set(list_archs()) | {"llama-3.1-8b", "qwen2.5-7b"})
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    @pytest.mark.parametrize("fmt", ["bfloat16", "int8"])
+    def test_arrays_match_scalar_elementwise(self, arch, fmt):
+        cfg = PAPER_MODELS.get(arch) or get_config(arch)
+        model = EnergyModel(H100_SXM, make_policy(fmt))
+        ctxs = np.array([17, 100, 1000, 4095, 4096, 5000, 131072])
+        for batch, stack in [(1, "eager"), (13, "fused")]:
+            template, flops, act = W.decode_step_arrays(
+                cfg, batch, ctxs, stack=stack)
+            lat, en, _ = model.evaluate_steps(template, flops, act)
+            for i, ctx in enumerate(ctxs):
+                w = W.decode_step_workload(cfg, batch, int(ctx),
+                                           stack=stack)
+                assert float(flops[i]) == float(w.flops)
+                assert float(act[i]) == float(w.act_bytes)
+                rep = model.evaluate(w)
+                assert float(lat[i]) == rep.latency
+                assert float(en[i]) == rep.energy_j
+
+    @pytest.mark.parametrize("model_cls,fmt,device", [
+        (EnergyModel, "nf4", H100_SXM),
+        (FusedDequantEnergyModel, "int8", TPU_V5E),
+        (EnergyModel, "float32", TPU_V5E),
+    ])
+    def test_quant_and_device_variants(self, model_cls, fmt, device):
+        cfg = LLAMA8B
+        model = model_cls(device, make_policy(fmt))
+        ctxs = np.arange(900, 964)
+        template, flops, act = W.decode_step_arrays(cfg, 9, ctxs,
+                                                    stack="fused")
+        lat, en, _ = model.evaluate_steps(template, flops, act,
+                                          n_chips=2)
+        for i, ctx in enumerate(ctxs):
+            rep = model.evaluate(W.decode_step_workload(
+                cfg, 9, int(ctx), stack="fused"), 2)
+            assert float(lat[i]) == rep.latency
+            assert float(en[i]) == rep.energy_j
+
+    def test_evaluate_steps_rejects_collectives(self):
+        model = EnergyModel(H100_SXM, make_policy("bfloat16"))
+        w = dataclasses.replace(
+            W.decode_step_workload(LLAMA8B, 2, 100),
+            collective_bytes=1e6)
+        with pytest.raises(ValueError, match="collective"):
+            model.evaluate_steps(w, np.ones(2), np.ones(2))
+
+
+# ---------------------------------------------------------------------------
+# KV horizon bound
+# ---------------------------------------------------------------------------
+class TestKvHorizonBound:
+    def _brute(self, alloc, ids, k):
+        for j in range(k, -1, -1):
+            need = sum(
+                alloc.pages_needed(alloc.tables[s].n_tokens + j)
+                - len(alloc.tables[s].pages) for s in ids)
+            if need <= len(alloc.free):
+                return j
+        return 0
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_matches_brute_force(self, seed):
+        rng = np.random.default_rng(seed)
+        alloc = PagedKVAllocator(int(rng.integers(8, 64)), page_size=8)
+        ids = []
+        for sid in range(int(rng.integers(1, 6))):
+            n = int(rng.integers(1, 80))
+            if alloc.can_allocate(n):
+                alloc.allocate(sid, n)
+                ids.append(sid)
+        if not ids:
+            return
+        for k in (1, 3, 17, 256):
+            assert alloc.max_uniform_extend(ids, k) \
+                == self._brute(alloc, ids, k)
+
+    def test_bulk_extend_matches_stepwise_counts(self):
+        a = PagedKVAllocator(64, page_size=8)
+        b = PagedKVAllocator(64, page_size=8)
+        for sid, n in [(0, 5), (1, 13), (2, 8)]:
+            a.allocate(sid, n)
+            b.allocate(sid, n)
+        for _ in range(21):
+            a.extend_many([0, 1, 2], 1)
+        b.extend_many([0, 1, 2], 21)
+        for sid in (0, 1, 2):
+            assert a.tables[sid].n_tokens == b.tables[sid].n_tokens
+            assert len(a.tables[sid].pages) == len(b.tables[sid].pages)
+        assert len(a.free) == len(b.free)
+        a.check_invariants()
+        b.check_invariants()

@@ -124,6 +124,79 @@ def _fake(label_to_wh):
             for k, v in label_to_wh.items()}
 
 
+class TestParallelSweep:
+    AXES = {"max_batch": [4, 8, 16]}
+
+    def test_workers_match_serial_byte_for_byte(self, tmp_path):
+        serial = sweep(ExperimentSpec(**SMALL), self.AXES, tag="p",
+                       cache=False, workers=1)
+        par = sweep(ExperimentSpec(**SMALL), self.AXES, tag="p",
+                    cache_dir=str(tmp_path), workers=3)
+        assert list(par.results) == list(serial.results)  # label order
+        for label in serial.results:
+            assert par[label].to_json() == serial[label].to_json()
+        assert par.cache_misses == 3
+
+    def test_cache_hits_served_in_process(self, tmp_path):
+        sweep(ExperimentSpec(**SMALL), self.AXES, tag="p",
+              cache_dir=str(tmp_path), workers=2)
+        again = sweep(ExperimentSpec(**SMALL), self.AXES, tag="p",
+                      cache_dir=str(tmp_path), workers=2)
+        assert again.cache_hits == 3 and again.cache_misses == 0
+
+    def test_workers_env_default(self, tmp_path, monkeypatch):
+        from repro.sweep import WORKERS_ENV, _resolve_workers
+        monkeypatch.setenv(WORKERS_ENV, "4")
+        assert _resolve_workers(None) == 4
+        monkeypatch.delenv(WORKERS_ENV)
+        assert _resolve_workers(None) == 1
+        assert _resolve_workers(0) == 1
+
+    def test_worker_failure_propagates(self, tmp_path):
+        # unknown replay path fails inside the pool, not silently
+        bad = ExperimentSpec(**SMALL, backend="replay",
+                             replay_path=str(tmp_path / "missing.json"))
+        with pytest.raises(Exception):
+            sweep(bad, {"max_batch": [4, 8]}, cache_dir=str(tmp_path),
+                  workers=2)
+
+
+class TestAtomicCacheWrites:
+    def test_cache_file_is_complete_json(self, tmp_path):
+        spec = ExperimentSpec(**SMALL)
+        run_spec(spec, cache_dir=str(tmp_path))
+        entries = [p for p in os.listdir(tmp_path)
+                   if p.endswith(".json")]
+        assert entries == [spec.spec_hash() + ".json"]
+        with open(tmp_path / entries[0]) as f:
+            blob = json.load(f)          # parses => not truncated
+        assert blob["spec"] == spec.to_dict()
+        # no temp files left behind
+        assert not [p for p in os.listdir(tmp_path)
+                    if p.endswith(".tmp")]
+
+    def test_interrupted_write_leaves_no_entry(self, tmp_path,
+                                               monkeypatch):
+        import importlib
+        sw = importlib.import_module("repro.sweep")
+        spec = ExperimentSpec(**SMALL)
+
+        def boom(blob, f, **kw):
+            f.write('{"version": "x", "spec"')   # simulate a crash
+            raise KeyboardInterrupt
+
+        monkeypatch.setattr(sw.json, "dump", boom)
+        with pytest.raises(KeyboardInterrupt):
+            run_spec(spec, cache_dir=str(tmp_path))
+        monkeypatch.undo()
+        # nothing half-written: next run is a clean miss, then a hit
+        assert os.listdir(tmp_path) == []
+        _, hit = run_spec(spec, cache_dir=str(tmp_path))
+        assert not hit
+        _, hit = run_spec(spec, cache_dir=str(tmp_path))
+        assert hit
+
+
 class TestClaims:
     def test_ratio_claim(self):
         rs = _fake({"naive": 1.0, "shaped": 0.05})
