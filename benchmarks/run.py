@@ -3,6 +3,7 @@
     fig 1a/1b + fig 4/5  -> benchmarks.precision
     fig 2a/2b + fig 6/7  -> benchmarks.batching
     fig 3a/3b/3c         -> benchmarks.serving
+    batch formation      -> benchmarks.formation
     fleet / routing      -> benchmarks.cluster
     §5 scheduling        -> benchmarks.scheduler
     backends / DVFS      -> benchmarks.backend
@@ -61,12 +62,13 @@ def _row_record(suite: str, row) -> dict:
 
 
 def _benches():
-    from benchmarks import (backend, batching, cluster, macro,
+    from benchmarks import (backend, batching, cluster, formation, macro,
                             microbench, precision, roofline_report,
                             scheduler, serving, simperf)
     return [("precision", precision),
             ("batching", batching),
             ("serving", serving),
+            ("formation", formation),
             ("cluster", cluster),
             ("scheduler", scheduler),
             ("backend", backend),
@@ -109,6 +111,7 @@ def main(argv=None) -> None:
 
     if args.quick:
         os.environ.setdefault("REPRO_CLUSTER_NREQ", "80")
+        os.environ.setdefault("REPRO_FORMATION_NREQ", "96")
         os.environ.setdefault("REPRO_SCHED_NREQ", "80")
         os.environ.setdefault("REPRO_BACKEND_NREQ", "48")
         os.environ.setdefault("REPRO_SIMPERF_QUICK", "1")

@@ -1,0 +1,61 @@
+"""Batch-formation demo: serve one loaded Poisson stream under each
+batch policy — slot-count FIFO, token-budget admission, length-sorted
+windows, chunked prefill — then disaggregate prefill from decode on a
+2-replica fleet with explicit KV-handoff billing.
+
+Prefill is compute-bound, so every padded token is wasted energy:
+length-aware formation cuts padding by multiples and moves the whole
+configuration down the Wh/request x p99 frontier.
+
+    PYTHONPATH=src python examples/batch_formation.py
+"""
+import repro
+
+N_REQ = 120
+
+BASE = repro.ExperimentSpec(
+    model="llama-3.1-8b", mode="continuous", max_batch=16,
+    n_requests=N_REQ, prompt_range=(200, 4000), output_range=(10, 300),
+    arrival="poisson", arrival_params={"rate_per_s": 8.0})
+
+POLICIES = [
+    ("slot_count", {"bucket_prefill": True}),
+    ("token_budget", {"token_budget": 24000}),
+    ("length_sorted", {}),
+    ("chunked_prefill", {"chunk_tokens": 512}),
+]
+
+
+def main() -> None:
+    print(f"{BASE.model}, {N_REQ} requests at 8 req/s, prompts "
+          f"{BASE.prompt_range[0]}-{BASE.prompt_range[1]} tokens\n")
+    print(f"{'policy':16s} {'Wh/req':>8s} {'p99 lat':>8s} "
+          f"{'ttft p99':>9s} {'padding':>8s} {'chunks':>7s}")
+    for name, params in POLICIES:
+        r = BASE.derive(batch_policy=name, policy_params=params).run()
+        print(f"{name:16s} {r.mean_energy_wh:8.5f} "
+              f"{r.latency_p99_s:7.2f}s {r.ttft_p99_s:8.2f}s "
+              f"{r.prefill_padding_fraction:8.3f} "
+              f"{r.prefill_chunks:7d}")
+
+    print("\n2-replica fleet: mixed vs disaggregated prefill/decode")
+    fleet = BASE.derive(replicas=2)
+    for label, spec in [("mixed", fleet),
+                        ("disaggregated", fleet.derive(disaggregate=1))]:
+        r = spec.run()
+        hand = (f"  handoffs={r.n_handoffs} "
+                f"(+{r.handoff_energy_j:.1f} J interconnect)"
+                if r.n_handoffs else "")
+        print(f"{label:16s} {r.mean_energy_wh:8.5f} "
+              f"{r.latency_p99_s:7.2f}s{hand}")
+
+    print("\nlength_sorted admits minimal-padding windows of similar-"
+          "length prompts; chunked prefill removes padding entirely and "
+          "never stalls a live decode behind a long prompt. The "
+          "disaggregated pool keeps the decode replica batched and "
+          "warm — the handoff energy (KV bytes x pJ/byte) is billed "
+          "per request.")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,11 @@ Lower layers remain importable directly (``repro.serving``,
 """
 from repro.api import (ExperimentSpec, RunResult,  # noqa: F401
                        result_from_report, ARRIVALS, PIPELINES, MODES,
-                       ENERGY_MODELS, BACKENDS)
+                       ENERGY_MODELS, BACKENDS, BATCH_POLICIES)
+from repro.batching.policy import (BatchPolicy, SlotCountPolicy,  # noqa: F401
+                                   TokenBudgetPolicy, LengthSortedPolicy,
+                                   ChunkedPrefillPolicy,
+                                   make_batch_policy)
 from repro.configs.paper_zoo import PAPER_MODELS  # noqa: F401
 from repro.serving.backend import (InferenceBackend, PhaseResult,  # noqa: F401
                                    DecodeRun, AnalyticBackend,
@@ -29,13 +33,15 @@ from repro.sweep import (sweep, run_spec, expand_grid, Option,  # noqa: F401
                          Claim, ClaimResult, SweepResult, select,
                          check_claims, WORKERS_ENV)
 
-__version__ = "0.5.0"
+__version__ = "0.6.0"
 
 __all__ = [
     "__version__",
     "ExperimentSpec", "RunResult", "result_from_report",
     "ARRIVALS", "PIPELINES", "MODES", "ENERGY_MODELS", "BACKENDS",
-    "PAPER_MODELS",
+    "BATCH_POLICIES", "PAPER_MODELS",
+    "BatchPolicy", "SlotCountPolicy", "TokenBudgetPolicy",
+    "LengthSortedPolicy", "ChunkedPrefillPolicy", "make_batch_policy",
     "InferenceBackend", "PhaseResult", "DecodeRun", "AnalyticBackend",
     "ExecutedBackend", "ReplayBackend", "RecordingBackend",
     "make_backend", "HorizonStop",

@@ -34,6 +34,8 @@ from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.batching.policy import (BATCH_POLICIES, BatchPolicy,
+                                   make_batch_policy)
 from repro.configs.base import ModelConfig, get_config, list_archs
 from repro.configs.paper_zoo import PAPER_MODELS
 from repro.core.energy import EnergyModel, FusedDequantEnergyModel, combine
@@ -73,7 +75,8 @@ ENERGY_MODELS = ("phase", "fused_dequant")
 #: every pre-existing spec keeps its byte-identical JSON and content
 #: hash (cache keys / bench-row provenance stay comparable)
 _LATE_FIELD_DEFAULTS = {"backend": "analytic", "freq_scale": 1.0,
-                        "replay_path": None}
+                        "replay_path": None, "batch_policy": "slot_count",
+                        "policy_params": {}, "disaggregate": 0}
 
 #: spec fields a per-replica override mapping may set (heterogeneous fleets)
 REPLICA_OVERRIDE_FIELDS = ("fmt", "device", "max_batch", "n_chips")
@@ -125,11 +128,19 @@ class ExperimentSpec:
     mode: str = "continuous"           # serving mode
     max_batch: int = 32                # batch limit; profile batch size
     max_prefill_batch: int = 8
+    # -- batch formation (repro.batching.policy) ------------------------
+    batch_policy: str = "slot_count"   # BATCH_POLICIES registry name
+    policy_params: Mapping[str, Any] = dataclasses.field(
+        default_factory=dict)
     stack: Optional[str] = None        # profile-stack override
     # -- fleet (replicas > 1 resolves to a ClusterEngine) ---------------
     replicas: int = 1
     router: str = "round_robin"
     replica_overrides: Tuple = ()      # per-replica field overrides
+    # disaggregated serving: first N replicas form the prefill pool,
+    # the rest decode; finished prefills hand their KV cache across
+    # the interconnect (latency + pJ/byte billed per request)
+    disaggregate: int = 0
     # -- scheduling -----------------------------------------------------
     scheduler: Optional[str] = None
     scheduler_params: Mapping[str, Any] = dataclasses.field(
@@ -162,6 +173,7 @@ class ExperimentSpec:
         set_(self, "scheduler_params",
              _freeze(dict(self.scheduler_params)))
         set_(self, "arrival_params", _freeze(dict(self.arrival_params)))
+        set_(self, "policy_params", _freeze(dict(self.policy_params)))
         set_(self, "replica_overrides",
              _freeze(tuple(dict(o) for o in self.replica_overrides)))
         set_(self, "prompt_range", tuple(self.prompt_range))
@@ -233,6 +245,46 @@ class ExperimentSpec:
             raise ValueError("n_requests must be >= 0")
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if self.batch_policy not in BATCH_POLICIES:
+            raise ValueError(
+                f"unknown batch_policy {self.batch_policy!r}; known: "
+                f"{list(BATCH_POLICIES)}")
+        reserved = {"max_batch", "max_prefill_batch"} & set(
+            self.policy_params)
+        if reserved:
+            raise ValueError(
+                f"policy_params may not set {sorted(reserved)}; use the "
+                "spec fields max_batch= / max_prefill_batch=")
+        if self.batch_policy != "slot_count":
+            if self.mode != "continuous":
+                raise ValueError(
+                    f"batch_policy={self.batch_policy!r} requires "
+                    "mode='continuous' (sequential serving forms no "
+                    "batches)")
+            if self.pipeline != "serve":
+                raise ValueError(
+                    f"batch_policy={self.batch_policy!r} requires "
+                    "pipeline='serve' (the profile pipeline pads one "
+                    "static batch)")
+        if self.batch_policy != "slot_count" or self.policy_params:
+            self.build_batch_policy()  # surfaces bad params early
+        if self.disaggregate < 0:
+            raise ValueError("disaggregate must be >= 0 (the prefill "
+                             "pool size)")
+        if self.disaggregate:
+            if self.replicas < 2:
+                raise ValueError(
+                    "disaggregate needs replicas >= 2 (one pool each "
+                    f"for prefill and decode, got replicas="
+                    f"{self.replicas})")
+            if self.disaggregate >= self.replicas:
+                raise ValueError(
+                    f"disaggregate={self.disaggregate} leaves no decode "
+                    f"replicas out of replicas={self.replicas}")
+            if self.mode != "continuous" or self.pipeline != "serve":
+                raise ValueError(
+                    "disaggregate requires pipeline='serve' and "
+                    "mode='continuous'")
         for name in ("prompt_range", "output_range"):
             lo, hi = getattr(self, name)
             if lo < 1 or hi < lo:
@@ -415,6 +467,20 @@ class ExperimentSpec:
                 energy_model=self.build_energy_model(), **params)
         return make_scheduler(self.scheduler, **params)
 
+    def build_batch_policy(self,
+                           max_batch: Optional[int] = None
+                           ) -> BatchPolicy:
+        """Construct a fresh batch-formation policy for one replica.
+
+        Policies are stateful, so every engine replica gets its own
+        instance (``max_batch=`` lets a replica override carry its own
+        batch limit)."""
+        return make_batch_policy(
+            self.batch_policy,
+            max_batch=self.max_batch if max_batch is None else max_batch,
+            max_prefill_batch=self.max_prefill_batch,
+            **dict(self.policy_params))
+
     def build_engine(self):
         """Resolve the engine axes into a :class:`ServeEngine` (one
         replica) or :class:`ClusterEngine` (fleet)."""
@@ -427,12 +493,14 @@ class ExperimentSpec:
         replay = (ReplayBackend.from_json(self.replay_path)
                   if backend == "replay" else None)
 
-        def one(overrides: Mapping[str, Any]) -> ServeEngine:
+        def one(overrides: Mapping[str, Any],
+                pool: str = "mixed") -> ServeEngine:
             kw = dict(fmt=self.fmt, device=self.device_spec(),
                       n_chips=self.n_chips, max_batch=self.max_batch)
             kw.update({k: (get_device(v).with_freq_scale(self.freq_scale)
                            if k == "device" else v)
                        for k, v in overrides.items()})
+            pol = self.build_batch_policy(max_batch=kw.pop("max_batch"))
             exec_kw = {}
             if backend == "executed":
                 import jax
@@ -443,15 +511,18 @@ class ExperimentSpec:
                                buf_len=self.buf_len)
             elif backend == "replay":
                 exec_kw = dict(backend=replay)
-            return ServeEngine(cfg, mode=self.mode,
-                               max_prefill_batch=self.max_prefill_batch,
-                               energy_model_cls=emodel, **kw, **exec_kw)
+            return ServeEngine(cfg, mode=self.mode, batch_policy=pol,
+                               pool=pool, energy_model_cls=emodel,
+                               **kw, **exec_kw)
 
         if self.replicas == 1 and not self.replica_overrides:
             return one({})
         overrides = (self.replica_overrides
                      or ({},) * self.replicas)
-        fleet = [one(o) for o in overrides]
+        pools = (["prefill"] * self.disaggregate
+                 + ["decode"] * (self.replicas - self.disaggregate)
+                 if self.disaggregate else ["mixed"] * self.replicas)
+        fleet = [one(o, pool=p) for o, p in zip(overrides, pools)]
         return ClusterEngine(fleet, make_router(self.router))
 
     # ------------------------------------------------------------------
@@ -465,6 +536,13 @@ class ExperimentSpec:
 # ---------------------------------------------------------------------------
 # RunResult
 # ---------------------------------------------------------------------------
+#: result fields added with the batch-formation axes; serialized only
+#: when set so every pre-existing record (golden-parity files, sweep
+#: caches) keeps its byte-identical JSON
+_FORMATION_RESULT_FIELDS = ("prefill_padding_fraction", "prefill_chunks",
+                            "handoff_energy_j", "n_handoffs")
+
+
 @dataclasses.dataclass
 class RunResult:
     """One flat record per executed spec — the unified schema subsuming
@@ -540,6 +618,13 @@ class RunResult:
     pre_j_per_out: Optional[float] = None
     dec_j_per_out: Optional[float] = None
     gen_j_per_out: Optional[float] = None
+    # -- batch formation (set when the spec names a formation axis;
+    #    omitted from to_dict when None so pre-existing records keep
+    #    their byte-identical JSON) ---------------------------------------
+    prefill_padding_fraction: Optional[float] = None
+    prefill_chunks: Optional[int] = None
+    handoff_energy_j: Optional[float] = None
+    n_handoffs: Optional[int] = None
     # -- non-serialized engine report (fresh runs only) -----------------
     report: Optional[Any] = dataclasses.field(
         default=None, compare=False, repr=False)
@@ -562,6 +647,9 @@ class RunResult:
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d.pop("report")
+        for key in _FORMATION_RESULT_FIELDS:
+            if d[key] is None:
+                del d[key]
         return _thaw(d)
 
     def to_json(self) -> str:
@@ -611,6 +699,10 @@ def result_from_report(spec: ExperimentSpec, report,
     admitted = (float(np.mean([r.met_deadline for r in served]))
                 if served else 1.0)
     total = max(report.total_energy_j, 1e-12)
+    # formation telemetry is recorded only when the spec asks for a
+    # non-default formation axis, keeping default records byte-stable
+    formation = (spec.batch_policy != "slot_count"
+                 or bool(spec.policy_params) or spec.disaggregate > 0)
     kw: Dict[str, Any] = {}
     if cluster:
         reps: Sequence[ServeReport] = report.replica_reports
@@ -626,6 +718,15 @@ def result_from_report(spec: ExperimentSpec, report,
                 np.mean([r.energy_j for r in report.requests]))
             / 3600.0 if report.requests else 0.0,
         )
+        if formation:
+            comp = sum(r.prefill_computed_tokens for r in reps)
+            eff = sum(r.prefill_effective_tokens for r in reps)
+            kw.update(
+                prefill_padding_fraction=(0.0 if comp == 0
+                                          else 1.0 - eff / comp),
+                prefill_chunks=sum(r.prefill_chunks for r in reps),
+                handoff_energy_j=report.handoff_energy_j,
+                n_handoffs=report.n_handoffs)
     else:
         kw = dict(
             kind="serve", replicas=1,
@@ -634,6 +735,11 @@ def result_from_report(spec: ExperimentSpec, report,
             tokens_per_s=report.tokens_per_s,
             mean_attributed_wh=report.mean_attributed_energy_wh,
         )
+        if formation:
+            kw.update(
+                prefill_padding_fraction=report.prefill_padding_fraction,
+                prefill_chunks=report.prefill_chunks,
+                handoff_energy_j=0.0, n_handoffs=0)
     mean_lat = (float(np.mean([r.latency for r in report.completed]))
                 if report.completed else 0.0)
     mean_ttft = (float(np.mean([r.ttft for r in report.completed]))
@@ -737,4 +843,5 @@ def _run_profile(spec: ExperimentSpec) -> RunResult:
 #: re-exported so `repro.api` alone covers the common surface
 __all__ = ["ExperimentSpec", "RunResult", "result_from_report",
            "ARRIVALS", "PIPELINES", "MODES", "ENERGY_MODELS", "BACKENDS",
-           "PAPER_MODELS", "Request", "ServeReport", "ClusterReport"]
+           "BATCH_POLICIES", "PAPER_MODELS", "Request", "ServeReport",
+           "ClusterReport"]

@@ -7,15 +7,19 @@ boundaries after their prefill and leave the moment they finish
 
 Scheduling policy per engine iteration:
   1. admit arrivals into the waiting queue,
-  2. if waiting requests exist, free slots exist, and KV pages fit:
-     run a (possibly batched, bucketed) PREFILL for up to
-     ``max_prefill_batch`` requests,
-  3. else if any slot is live: run ONE DECODE step for all live slots,
+  2. ask the :class:`~repro.batching.policy.BatchPolicy` for a prefill
+     plan (admission happens inside the policy; the default
+     :class:`~repro.batching.policy.SlotCountPolicy` reproduces the
+     historical bucketed slot-count behavior bit for bit),
+  3. else if any slot is prefill-complete ("ready"): run a DECODE step
+     for the ready slots,
   4. else: idle until the next arrival.
 
-This is deliberately the same policy TGI's router implements (waiting
-queue + running batch, prefill preemption), so the arrival-shaping
-results in §5 transfer.
+The batcher itself is policy-free bookkeeping: queue, slots, paged KV,
+and the live/ready/partial slot sets that chunked prefill and
+disaggregated handoff need.  The base shape is deliberately the same
+policy TGI's router implements (waiting queue + running batch, prefill
+preemption), so the arrival-shaping results in §5 transfer.
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ from typing import TYPE_CHECKING, List, Optional
 from repro.batching.kvcache import PagedKVAllocator
 
 if TYPE_CHECKING:   # avoid a batching <-> serving import cycle
+    from repro.batching.policy import BatchPolicy
     from repro.serving.requests import Request
 
 
@@ -49,19 +54,42 @@ class ContinuousBatcher:
     dead prefix dominates) — no ``pop(0)``/``pop(i)`` shifting.
     """
 
-    def __init__(self, max_batch: int, *, kv_pages: int = 1 << 14,
-                 page_size: int = 128, max_prefill_batch: int = 8,
-                 bucket_prefill: bool = True):
+    def __init__(self, max_batch: Optional[int] = None, *,
+                 kv_pages: int = 1 << 14, page_size: int = 128,
+                 max_prefill_batch: Optional[int] = None,
+                 bucket_prefill: Optional[bool] = None,
+                 policy: Optional["BatchPolicy"] = None):
+        from repro.batching.policy import SlotCountPolicy
+        if policy is None:
+            policy = SlotCountPolicy(
+                max_batch=32 if max_batch is None else max_batch,
+                max_prefill_batch=(8 if max_prefill_batch is None
+                                   else max_prefill_batch),
+                bucket_prefill=(True if bucket_prefill is None
+                                else bucket_prefill))
+        elif max_prefill_batch is not None or bucket_prefill is not None:
+            raise ValueError(
+                "max_prefill_batch=/bucket_prefill= conflict with "
+                "policy=; configure the policy instead")
+        elif max_batch is not None and max_batch != policy.max_batch:
+            raise ValueError(
+                f"max_batch={max_batch} conflicts with "
+                f"policy.max_batch={policy.max_batch}")
+        self.policy = policy
+        max_batch = policy.max_batch
         self.slots = [SlotState() for _ in range(max_batch)]
         self._waiting: List[Optional[Request]] = []
         self._whead = 0             # first possibly-live queue index
         self._n_waiting = 0         # live (non-tombstone) entries
         self._waiting_tokens = 0    # prompt+output tokens queued
         self.kv = PagedKVAllocator(kv_pages, page_size)
-        self.max_prefill_batch = max_prefill_batch
-        self.bucket_prefill = bucket_prefill
+        self.max_prefill_batch = policy.max_prefill_batch
+        self.bucket_prefill = policy.bucket_prefill
         self._free: List[int] = list(range(max_batch))   # sorted asc
         self._live: List[int] = []                       # sorted asc
+        self._ready: List[int] = []     # live, prefill complete (sorted)
+        self._partial: List[int] = []   # live, mid-chunked-prefill
+        self._live_tokens = 0           # committed prompt+output tokens
 
     # ------------------------------------------------------------------
     @property
@@ -104,9 +132,36 @@ class ContinuousBatcher:
     def live_slots(self) -> List[int]:
         return list(self._live)
 
+    def decode_ready_slots(self) -> List[int]:
+        """Live slots whose prefill is complete — the decode batch."""
+        return list(self._ready)
+
+    def partial_slots(self) -> List[int]:
+        """Live slots mid-chunked-prefill (KV allocated, prompt tokens
+        still outstanding)."""
+        return list(self._partial)
+
     @property
     def n_live(self) -> int:
         return len(self._live)
+
+    @property
+    def n_ready(self) -> int:
+        return len(self._ready)
+
+    @property
+    def n_partial(self) -> int:
+        return len(self._partial)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_committed_tokens(self) -> int:
+        """Committed prompt + max-output tokens of every live slot —
+        what :class:`~repro.batching.policy.TokenBudgetPolicy` caps."""
+        return self._live_tokens
 
     # ------------------------------------------------------------------
     def _take(self, i: int, req: "Request") -> int:
@@ -118,67 +173,89 @@ class ContinuousBatcher:
         self.kv.allocate(req.req_id, req.prompt_len)
         self.slots[slot].request = req
         bisect.insort(self._live, slot)
+        if req.prefilled_tokens >= req.prompt_len:
+            bisect.insort(self._ready, slot)    # adopted handoff
+        else:
+            bisect.insort(self._partial, slot)
+        self._live_tokens += req.prompt_len + req.max_new_tokens
         return slot
 
     def schedule_prefill(self) -> List[tuple]:
-        """Pick (slot, request) pairs to prefill this iteration.
+        """Legacy direct-batcher entry point: admit via the attached
+        policy and mark each pick's prefill complete immediately (a
+        direct caller treats the prefill as instantaneous bookkeeping;
+        the engine instead drives ``policy.schedule_prefill`` so chunked
+        plans and backend phases happen in between).
 
-        Beyond-paper optimization (EXPERIMENTS.md §Perf): after taking
-        the FIFO head, subsequent picks are restricted to requests in
-        the head's *length bucket*, so one prefill batch pads to the
-        bucket instead of to the global max — the paper's §4 padding
-        waste, addressed at the scheduler level ("bucketing", §9).
+        With the default :class:`~repro.batching.policy.SlotCountPolicy`
+        this is the historical bucket-grouped FIFO behavior, verbatim.
         """
-        from repro.batching.static import bucket_length
-        picks = []
-        if not (self._n_waiting and self._free):
-            return picks
-        head = self.waiting_head()
-        if not self.kv.can_allocate(head.prompt_len
-                                    + head.max_new_tokens):
-            return picks        # head-of-line blocking on memory (TGI)
-        head_bucket = bucket_length(head.prompt_len) \
-            if self.bucket_prefill else None
-        i = self._whead
-        while (i < len(self._waiting) and self._free
-               and len(picks) < self.max_prefill_batch):
-            req = self._waiting[i]
-            if req is None:
-                i += 1
-                continue
-            if (head_bucket is not None and picks
-                    and bucket_length(req.prompt_len) != head_bucket):
-                i += 1
-                continue
-            if not self.kv.can_allocate(req.prompt_len
-                                        + req.max_new_tokens):
-                break
-            slot = self._take(i, req)
-            picks.append((slot, req))
-        self._skip_tombstones()
+        picks = self.policy.admit_now(self, 0.0)
+        for slot, _ in picks:
+            self.complete_prefill(slot)
         return picks
 
+    def complete_prefill(self, slot: int) -> None:
+        """Mark ``slot``'s prompt fully prefilled: it joins the decode
+        batch at the next step."""
+        req = self.slots[slot].request
+        req.prefilled_tokens = req.prompt_len
+        if slot in self._partial:
+            self._partial.remove(slot)
+            bisect.insort(self._ready, slot)
+
+    def note_chunk(self, slot: int, n_tokens: int) -> bool:
+        """Account ``n_tokens`` of chunked prefill on ``slot``; returns
+        True when the prompt is now fully prefilled (and moves the slot
+        into the decode batch)."""
+        req = self.slots[slot].request
+        req.prefilled_tokens += n_tokens
+        if req.prefilled_tokens >= req.prompt_len:
+            self.complete_prefill(slot)
+            return True
+        return False
+
     def step_decode_bookkeeping(self) -> List[int]:
-        """Extend KV for every live slot by one token; returns live slots."""
-        live = self.live_slots()
+        """Extend KV for every decode-ready slot by one token; returns
+        the ready slots."""
+        ready = self.decode_ready_slots()
         slots = self.slots
-        self.kv.extend_many([slots[i].request.req_id for i in live], 1)
-        return live
+        self.kv.extend_many([slots[i].request.req_id for i in ready], 1)
+        return ready
 
     def bulk_decode_bookkeeping(self, k: int) -> None:
-        """Extend KV for every live slot by ``k`` tokens at once — the
-        macro-step form of ``k`` ``step_decode_bookkeeping`` calls
+        """Extend KV for every decode-ready slot by ``k`` tokens at once
+        — the macro-step form of ``k`` ``step_decode_bookkeeping`` calls
         (identical page counts; feasibility is pre-checked by the
         engine via :meth:`PagedKVAllocator.max_uniform_extend`)."""
         slots = self.slots
         self.kv.extend_many([slots[i].request.req_id
-                             for i in self._live], k)
+                             for i in self._ready], k)
+
+    def outstanding_tokens(self) -> int:
+        """Tokens of work not yet performed anywhere: queued prompt and
+        output tokens plus, for live slots, un-prefilled chunk
+        remainders and un-generated outputs.  The single accounting
+        method every policy/router sees; conserved against
+        ``prefilled_tokens + tokens_generated`` of admitted requests."""
+        out = self._waiting_tokens
+        slots = self.slots
+        for i in self._live:
+            r = slots[i].request
+            out += ((r.prompt_len - r.prefilled_tokens)
+                    + (r.max_new_tokens - r.tokens_generated))
+        return out
 
     def finish(self, slot: int) -> "Request":
         req = self.slots[slot].request
         self.kv.release(req.req_id)
         self.slots[slot].request = None
         self._live.remove(slot)
+        if slot in self._ready:
+            self._ready.remove(slot)
+        else:
+            self._partial.remove(slot)
+        self._live_tokens -= req.prompt_len + req.max_new_tokens
         bisect.insort(self._free, slot)
         return req
 

@@ -83,6 +83,13 @@ class DeviceSpec:
     # memory-bound decode saves energy nearly for free.
     freq_scale: float = 1.0
     dvfs_exponent: float = 3.0
+    # Interconnect energy (pJ/byte) for moving state between chips —
+    # what a disaggregated cluster pays to hand a prefilled KV cache
+    # from a prefill replica to a decode replica. End-to-end NVLink-
+    # class transfers land around O(10) pJ/bit including SerDes and
+    # switch hops; TPU ICI is roughly half that. Handoff latency uses
+    # ``link_bw`` (sender-side single link, the conservative bound).
+    link_pj_per_byte: float = 80.0
 
     def peak_flops(self, bits: float) -> float:
         """Matmul peak for a given operand width (compute side).
@@ -172,6 +179,7 @@ H100_SXM = DeviceSpec(
     hbm_capacity=80e9,
     gated_power=45.0,           # deep low-power state, well under 120 W idle
     wake_latency_s=0.25,        # clock/power ramp back to serving state
+    link_pj_per_byte=80.0,      # NVLink end-to-end (~10 pJ/bit)
 )
 
 TPU_V5E = DeviceSpec(
@@ -190,6 +198,7 @@ TPU_V5E = DeviceSpec(
     hbm_capacity=16e9,
     gated_power=15.0,
     wake_latency_s=0.1,
+    link_pj_per_byte=40.0,      # ICI, shorter reach than NVLink
 )
 
 DEVICES = {d.name: d for d in (H100_SXM, TPU_V5E)}

@@ -139,6 +139,67 @@ def prefill_workload(cfg: ModelConfig, batch: int, seq: int,
                          stack=stack)
 
 
+def prefill_chunk_workload(cfg: ModelConfig, batch: int, chunk_len: int,
+                           ctx_len: int,
+                           stack: str = "eager") -> PhaseWorkload:
+    """One chunked-prefill continuation: ``chunk_len`` new prompt
+    tokens per sequence attending to ``ctx_len`` tokens already in the
+    KV cache (Sarathi-style chunked prefill).
+
+    At ``ctx_len == 0`` this is term-for-term
+    :func:`prefill_workload` over ``chunk_len`` tokens — the causal
+    average kv length ``(eff(ctx) + eff(ctx + chunk)) / 2`` reduces to
+    ``eff(chunk)/2`` — so splitting a prompt conserves attention FLOPs
+    and KV-write traffic.  What chunking genuinely adds is re-reading
+    the full weights once per chunk and re-reading the cached prefix's
+    KV, which is exactly the energy overhead the formation benchmark
+    measures.
+    """
+    tokens = batch * chunk_len
+    L = _total_layers(cfg)
+    flops = tokens * (_layer_matmul_flops(cfg) * cfg.num_layers
+                      + (_dense_layer_matmul_flops(cfg) * cfg.enc_layers
+                         if cfg.enc_layers else 0.0))
+    if cfg.has_attention:
+        kv_avg = (_effective_kv(cfg, ctx_len)
+                  + _effective_kv(cfg, ctx_len + chunk_len)) / 2
+        flops += _attn_score_flops(cfg, tokens, kv_avg) \
+            * _attn_layer_count(cfg)
+    flops += 2 * tokens * cfg.d_model * cfg.vocab_size  # LM head
+    weight_bytes = 2.0 * cfg.param_count(active_only=False)
+    act_bytes = tokens * cfg.d_model * _ACT_BYTES * 8 * L
+    if cfg.has_attention:
+        act_bytes += tokens * _kv_bytes_per_token_layer(cfg) \
+            * _attn_layer_count(cfg)             # KV write
+        act_bytes += batch * _effective_kv(cfg, ctx_len) \
+            * _kv_bytes_per_token_layer(cfg) \
+            * _attn_layer_count(cfg)             # cached-prefix KV read
+    n_matmuls = _MATMULS_PER_LAYER[cfg.family] * L
+    launches = _LAUNCHES_PER_LAYER[stack] * L + 4
+    return PhaseWorkload(phase="prefill", flops=flops,
+                         weight_bytes_16=weight_bytes, act_bytes=act_bytes,
+                         n_matmuls=n_matmuls, n_kernel_launches=launches,
+                         stack=stack)
+
+
+def kv_cache_bytes(cfg: ModelConfig, tokens: int,
+                   bytes_per_elem: float = 2.0) -> float:
+    """Bytes of per-request cache state after ``tokens`` of context:
+    attention KV (window-clipped) plus recurrent SSM state for
+    ssm/hybrid families.  This is the payload a disaggregated cluster
+    moves over the interconnect when a prefill replica hands a request
+    to a decode replica."""
+    total = 0.0
+    if cfg.has_attention:
+        total += _effective_kv(cfg, tokens) \
+            * _kv_bytes_per_token_layer(cfg, bytes_per_elem) \
+            * _attn_layer_count(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        total += cfg.num_layers * (cfg.ssm_nheads * cfg.ssm_headdim
+                                   * cfg.ssm_state) * 4
+    return total
+
+
 def decode_step_workload(cfg: ModelConfig, batch: int, cache_len: int,
                          stack: str = "eager",
                          kv_bytes_per_elem: float = 2.0) -> PhaseWorkload:

@@ -99,11 +99,19 @@ class PrefillBatch:
 
     ``picks`` are ``(slot, request)`` pairs; slot is ``None`` in
     sequential mode (no decode-slot machinery). ``pad_len`` is the
-    padded/bucketed sequence length the batch computes."""
+    padded/bucketed sequence length the batch computes.
+
+    Chunked prefill (``chunk_len > 0``): the batch covers
+    ``chunk_len`` prompt tokens of a single request, attending to the
+    ``chunk_start`` tokens already in its KV cache.  Chunks are exact,
+    so ``pad_len == chunk_len``; replay backends therefore price them
+    through the ordinary padded-token scaling with no schema change."""
 
     picks: List[Tuple[Optional[int], Any]]
     pad_len: int
     stack: str = "fused"
+    chunk_start: int = 0
+    chunk_len: int = 0
 
     @property
     def n(self) -> int:
@@ -311,8 +319,19 @@ class AnalyticBackend(InferenceBackend):
 
     # -- protocol -------------------------------------------------------
     def prefill(self, batch: PrefillBatch) -> PhaseResult:
-        rep = self.prefill_report(batch.n, batch.pad_len,
-                                  stack=batch.stack)
+        if batch.chunk_len:
+            # partial prefill: chunk_len new prompt tokens attending to
+            # the chunk_start tokens already cached (weights re-read per
+            # chunk — the real cost of chunking)
+            rep = self.energy.evaluate(
+                W.prefill_chunk_workload(self.cfg, batch.n,
+                                         batch.chunk_len,
+                                         batch.chunk_start,
+                                         stack=batch.stack),
+                self.n_chips)
+        else:
+            rep = self.prefill_report(batch.n, batch.pad_len,
+                                      stack=batch.stack)
         return PhaseResult(phase="prefill", latency_s=rep.latency,
                            energy_j=rep.energy_j, tokens=batch.n,
                            batch=float(batch.n), bound=rep.bound)
@@ -408,7 +427,15 @@ class ExecutedBackend(AnalyticBackend):
     def prefill(self, batch: PrefillBatch) -> PhaseResult:
         res = super().prefill(batch)
         if any(slot is not None for slot, _ in batch.picks):
-            self._execute_prefill(batch.picks)
+            if batch.chunk_len:
+                # chunk costing is analytic (above); the genuine model
+                # prefill runs once, on the final chunk, over the full
+                # prompt — same computed tokens, same greedy outputs
+                _, r = batch.picks[0]
+                if batch.chunk_start + batch.chunk_len >= r.prompt_len:
+                    self._execute_prefill(batch.picks)
+            else:
+                self._execute_prefill(batch.picks)
         return res
 
     def decode_step(self, batch: DecodeBatch) -> PhaseResult:

@@ -49,11 +49,18 @@ class ClusterReport:
     # requests an admission-control scheduler rejected fleet-wide (never
     # routed; excluded from per-replica reports and every mean_*)
     shed: List[Request] = dataclasses.field(default_factory=list)
+    # disaggregated serving: interconnect energy spent moving prefilled
+    # KV caches from prefill to decode replicas (KV bytes x the device's
+    # link_pj_per_byte), and how many requests were handed off. Part of
+    # the fleet energy bill — disaggregation is not free.
+    handoff_energy_j: float = 0.0
+    n_handoffs: int = 0
 
     # -- fleet energy ---------------------------------------------------
     @property
     def total_energy_j(self) -> float:
-        return sum(r.total_energy_j for r in self.replica_reports)
+        return (sum(r.total_energy_j for r in self.replica_reports)
+                + self.handoff_energy_j)
 
     @property
     def busy_energy_j(self) -> float:
@@ -132,6 +139,8 @@ class ClusterReport:
             "busy_energy_j": self.busy_energy_j,
             "idle_energy_j": self.idle_energy_j,
             "gated_energy_j": self.gated_energy_j,
+            "handoff_energy_j": self.handoff_energy_j,
+            "n_handoffs": self.n_handoffs,
             "wall_time_s": self.wall_time_s,
             "mean_utilization": float(
                 np.mean(self.utilization_per_replica)),
@@ -161,6 +170,21 @@ class ClusterEngine:
         self.replicas = replicas
         self.router = router if router is not None else \
             make_router(policy)
+        # disaggregated prefill/decode fleets: every replica must name a
+        # pool, and both pools must exist — arrivals route among the
+        # prefill pool, prefilled KV caches hand off to the decode pool
+        self.prefillers = [r for r in replicas if r.pool == "prefill"]
+        self.decoders = [r for r in replicas if r.pool == "decode"]
+        self.disaggregated = bool(self.prefillers or self.decoders)
+        if self.disaggregated:
+            if any(r.pool == "mixed" for r in replicas):
+                raise ValueError(
+                    "cannot mix pool='mixed' replicas with a "
+                    "disaggregated prefill/decode fleet")
+            if not self.prefillers or not self.decoders:
+                raise ValueError(
+                    "a disaggregated fleet needs at least one "
+                    "pool='prefill' and one pool='decode' replica")
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
@@ -178,6 +202,8 @@ class ClusterEngine:
             eng._trace = trace
             eng._trace_replica = i
         try:
+            if self.disaggregated:
+                return self._run_disaggregated(reqs, shed, gate)
             return self._run(reqs, shed, gate)
         finally:
             for eng in self.replicas:
@@ -248,12 +274,154 @@ class ClusterEngine:
                              policy=self.router.name,
                              wall_time_s=t_end, shed=shed)
 
+    # -- disaggregated prefill/decode fleets ---------------------------
+    def _run_disaggregated(self, reqs: List[Request],
+                           shed: List[Request],
+                           gate: bool) -> ClusterReport:
+        """Co-simulate a prefill pool and a decode pool.
+
+        Arrivals route among the prefill replicas; the moment a prompt
+        is fully prefilled, its KV cache travels to a decode replica —
+        arriving ``kv_bytes / link_bw`` later and costing
+        ``kv_bytes * link_pj_per_byte`` of interconnect energy (billed
+        to the request and the fleet) — where the router places it and
+        decode runs to completion without ever competing with a
+        prefill for the device.
+
+        Stepping is conservative like :meth:`_run`: prefill replicas
+        are bounded by the next shared arrival; decode replicas are
+        additionally bounded by the earliest in-flight handoff and by
+        the earliest busy prefill clock (a busy prefiller may still
+        emit an earlier handoff).  An event is delivered only once no
+        replica may step under its bound, so no replica ever runs past
+        an event that would have changed its queue.
+
+        Request ownership: the decode replica's report owns each
+        request (prefill replicas empty their ``requests`` list and
+        report ``n_relayed`` instead), so fleet aggregates count every
+        request exactly once.
+        """
+        import heapq
+
+        from repro.core.workload import kv_cache_bytes
+
+        for eng in self.replicas:
+            eng.stream_start()
+        pending = list(reqs)
+        head = 0
+        inf = float("inf")
+        gated = {id(eng): False for eng in self.replicas}
+        events: List[tuple] = []    # (t_ready, seq, request) heap
+        seq = 0
+        hand_e = 0.0
+        n_hand = 0
+
+        def drain(eng: ServeEngine) -> None:
+            nonlocal seq, hand_e, n_hand
+            for r in eng.stream_take_handoffs():
+                nbytes = kv_cache_bytes(
+                    eng.cfg, r.prompt_len + r.tokens_generated)
+                e = nbytes * eng.device.link_pj_per_byte * 1e-12
+                r.energy_j += e
+                hand_e += e
+                n_hand += 1
+                heapq.heappush(events, (
+                    eng.stream_now + nbytes / eng.device.link_bw,
+                    seq, r))
+                seq += 1
+
+        def wake(eng: ServeEngine) -> None:
+            if gated[id(eng)]:
+                eng.stream_idle(eng.stream_now
+                                + eng.device.wake_latency_s)
+                gated[id(eng)] = False
+
+        def advance_idle(t: float) -> None:
+            for eng in self.replicas:
+                if eng.stream_now < t and not eng.stream_can_step():
+                    eng.stream_idle(t, gated=gate)
+                    if gate:
+                        gated[id(eng)] = True
+
+        while True:
+            t_arr = (pending[head].effective_arrival
+                     if head < len(pending) else inf)
+            t_hand = events[0][0] if events else inf
+            pf_busy = min((e.stream_now for e in self.prefillers
+                           if e.stream_can_step()), default=inf)
+            dec_bound = min(t_hand, t_arr, pf_busy)
+            cands = [(e, t_arr, True) for e in self.prefillers
+                     if e.stream_can_step()
+                     and e.stream_now < t_arr - 1e-12]
+            cands += [(e, dec_bound, False) for e in self.decoders
+                      if e.stream_can_step()
+                      and e.stream_now < dec_bound - 1e-12]
+            if cands:
+                eng, bound, is_prefiller = min(
+                    cands, key=lambda c: c[0].stream_now)
+                eng.stream_step(stop=None if bound == inf
+                                else HorizonStop(bound, mode="clock"))
+                if is_prefiller:
+                    drain(eng)
+                continue
+            if t_hand <= t_arr:
+                if not events:
+                    break               # both infinite: fully drained
+                t, _, req = heapq.heappop(events)
+                advance_idle(t)
+                i = self.router.select(req, self.decoders, t)
+                wake(self.decoders[i])
+                self.decoders[i].stream_submit(req)
+                continue
+            req = pending[head]
+            head += 1
+            advance_idle(t_arr)
+            i = self.router.select(req, self.prefillers, t_arr)
+            wake(self.prefillers[i])
+            self.prefillers[i].stream_submit(req)
+        stuck = [i for i, eng in enumerate(self.replicas)
+                 if eng.stream_stuck()]
+        if stuck:
+            raise RuntimeError(
+                f"deadlock: replicas {stuck} hold waiting requests that "
+                "can never be scheduled (KV pool too small)")
+        t_end = max(eng.stream_now for eng in self.replicas)
+        for eng in self.replicas:
+            eng.stream_idle(t_end, gated=gate)
+        reports = [eng.stream_report() for eng in self.replicas]
+        for eng, rep in zip(self.replicas, reports):
+            if eng.pool == "prefill":
+                rep.requests = []       # decode replicas own them
+        return ClusterReport(replica_reports=reports,
+                             policy=self.router.name,
+                             wall_time_s=t_end, shed=shed,
+                             handoff_energy_j=hand_e,
+                             n_handoffs=n_hand)
+
 
 def make_cluster(cfg, n_replicas: int, *, policy: str = "round_robin",
                  fmt: str = "bfloat16", max_batch: int = 32,
                  **engine_kw) -> ClusterEngine:
-    """Homogeneous-fleet convenience constructor."""
-    replicas = [ServeEngine(cfg, fmt=fmt, mode="continuous",
-                            max_batch=max_batch, **engine_kw)
-                for _ in range(n_replicas)]
+    """Homogeneous-fleet convenience constructor.
+
+    Builds a fresh :class:`~repro.batching.policy.SlotCountPolicy` per
+    replica (policies are stateful, so one instance must not be shared
+    across engines); pass formation axes through
+    :class:`~repro.api.ExperimentSpec` for non-default policies."""
+    from repro.batching.policy import SlotCountPolicy
+    if n_replicas > 1 and "batch_policy" in engine_kw:
+        raise ValueError(
+            "batch_policy= would be shared across replicas; build the "
+            "replica list explicitly or use ExperimentSpec(batch_policy=)")
+    mpb = engine_kw.pop("max_prefill_batch", 8)
+    bucket = engine_kw.pop("bucket_prefill", True)
+    replicas = []
+    for _ in range(n_replicas):
+        kw = dict(engine_kw)
+        if "batch_policy" not in kw:
+            kw["batch_policy"] = SlotCountPolicy(
+                max_batch=max_batch, max_prefill_batch=mpb,
+                bucket_prefill=bucket)
+        replicas.append(ServeEngine(cfg, fmt=fmt, mode="continuous",
+                                    **kw))
     return ClusterEngine(replicas, make_router(policy))

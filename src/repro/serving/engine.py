@@ -29,12 +29,13 @@ Energy accounting (paper §5 methodology):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.batching.continuous import ContinuousBatcher
-from repro.batching.static import bucket_length
+from repro.batching.policy import BatchPolicy, SlotCountPolicy
 from repro.configs.base import ModelConfig
 from repro.core.energy import EnergyModel
 from repro.core.hardware import DeviceSpec, H100_SXM
@@ -99,6 +100,24 @@ class ServeReport:
     # excluded from every mean_* aggregate, charged against SLO
     # attainment)
     shed: List[Request] = dataclasses.field(default_factory=list)
+    # batch-formation telemetry (BatchPolicy instrumentation): padded
+    # tokens actually computed during prefill vs the prompt tokens that
+    # needed computing, chunked-prefill phase count, and — for a
+    # disaggregated prefill replica — requests relayed to a decode pool
+    # (relayed requests are not in ``requests``; the decode replica owns
+    # them end to end)
+    prefill_computed_tokens: int = 0
+    prefill_effective_tokens: int = 0
+    prefill_chunks: int = 0
+    n_relayed: int = 0
+
+    @property
+    def prefill_padding_fraction(self) -> float:
+        """Fraction of computed prefill tokens that were padding."""
+        if self.prefill_computed_tokens == 0:
+            return 0.0
+        return 1.0 - (self.prefill_effective_tokens
+                      / self.prefill_computed_tokens)
 
     @property
     def n(self) -> int:
@@ -210,6 +229,14 @@ class _StreamState:
     n_decode: int = 0
     submitted: List[Request] = dataclasses.field(default_factory=list)
     done: List[Request] = dataclasses.field(default_factory=list)
+    # batch-formation telemetry
+    prefill_computed: int = 0      # padded prefill tokens computed
+    prefill_effective: int = 0     # prompt tokens that needed computing
+    prefill_chunks: int = 0
+    n_relayed: int = 0
+    # disaggregated serving: prefill-complete requests awaiting pickup
+    # by the cluster loop (stream_take_handoffs drains this)
+    handoffs: List[Request] = dataclasses.field(default_factory=list)
 
 
 class ServeEngine:
@@ -221,12 +248,28 @@ class ServeEngine:
     kwargs (``fmt`` / ``device`` / ``n_chips`` / ``energy_model_cls``),
     or an :class:`~repro.serving.backend.ExecutedBackend` when
     ``execute=True`` — both bit-compatible with the pre-backend engine.
+
+    Batch formation is owned by a
+    :class:`~repro.batching.policy.BatchPolicy` (``batch_policy=``).
+    The legacy ``max_batch=`` / ``max_prefill_batch=`` /
+    ``bucket_prefill=`` kwargs are deprecated shims that construct a
+    bit-compatible :class:`~repro.batching.policy.SlotCountPolicy`.
+
+    ``pool`` names this engine's role in a disaggregated cluster:
+    ``"mixed"`` (default) serves both phases; ``"prefill"`` relays each
+    request to ``stream_take_handoffs()`` the moment its prompt is
+    prefilled; ``"decode"`` adopts handed-off requests (prefill already
+    billed elsewhere) and decodes them to completion.
     """
 
     def __init__(self, cfg: ModelConfig, *, fmt: str = "bfloat16",
                  device: DeviceSpec = H100_SXM, n_chips: int = 1,
-                 mode: str = "continuous", max_batch: int = 32,
-                 max_prefill_batch: int = 8, bucket_prefill: bool = True,
+                 mode: str = "continuous",
+                 max_batch: Optional[int] = None,
+                 max_prefill_batch: Optional[int] = None,
+                 bucket_prefill: Optional[bool] = None,
+                 batch_policy: Optional[BatchPolicy] = None,
+                 pool: str = "mixed",
                  kv_pages: int = 1 << 15, page_size: int = 128,
                  energy_model_cls=EnergyModel,
                  execute: bool = False, model=None, params=None,
@@ -235,6 +278,12 @@ class ServeEngine:
                  macro_step: bool = True):
         if mode not in ("continuous", "sequential"):
             raise ValueError(mode)
+        if pool not in ("mixed", "prefill", "decode"):
+            raise ValueError(f"unknown pool {pool!r}; "
+                             "known: ['mixed', 'prefill', 'decode']")
+        if pool != "mixed" and mode != "continuous":
+            raise ValueError("disaggregated pools require "
+                             "mode='continuous'")
         # event-horizon macro-stepping (bit-identical to single-step;
         # macro_step=False forces the per-token loop — parity tests and
         # the simperf baseline use it)
@@ -243,8 +292,40 @@ class ServeEngine:
         self.policy: PrecisionPolicy = make_policy(fmt)
         self.n_chips = n_chips
         self.mode = mode
+        self.pool = pool
         self.stack = "fused" if mode == "continuous" else "eager"
-        self.max_batch = max_batch
+        if batch_policy is not None:
+            if max_prefill_batch is not None or bucket_prefill is not None:
+                raise ValueError(
+                    "max_prefill_batch=/bucket_prefill= conflict with "
+                    "batch_policy=; configure the policy instead")
+            if (max_batch is not None
+                    and max_batch != batch_policy.max_batch):
+                raise ValueError(
+                    f"max_batch={max_batch} conflicts with "
+                    f"batch_policy.max_batch={batch_policy.max_batch}")
+            if (mode == "sequential"
+                    and batch_policy.name != SlotCountPolicy.name):
+                raise ValueError("mode='sequential' ignores batch "
+                                 "formation; batch_policy= requires "
+                                 "mode='continuous'")
+        else:
+            if (max_batch is not None or max_prefill_batch is not None
+                    or bucket_prefill is not None):
+                warnings.warn(
+                    "ServeEngine(max_batch=, max_prefill_batch=, "
+                    "bucket_prefill=) are deprecated; pass "
+                    "batch_policy=SlotCountPolicy(...) instead",
+                    DeprecationWarning, stacklevel=2)
+            batch_policy = SlotCountPolicy(
+                max_batch=32 if max_batch is None else max_batch,
+                max_prefill_batch=(8 if max_prefill_batch is None
+                                   else max_prefill_batch),
+                bucket_prefill=(True if bucket_prefill is None
+                                else bucket_prefill))
+        self.batch_policy = batch_policy
+        self.max_batch = batch_policy.max_batch
+        max_batch = batch_policy.max_batch
         if (execute and backend is not None
                 and not isinstance(backend, ExecutedBackend)):
             raise ValueError(
@@ -287,11 +368,9 @@ class ServeEngine:
         self.device = getattr(backend, "device", None) or device
         self.energy = getattr(backend, "energy", None) or \
             energy_model_cls(self.device, self.policy)
-        self._batcher_kw = dict(
-            kv_pages=kv_pages, page_size=page_size,
-            max_prefill_batch=max_prefill_batch,
-            bucket_prefill=bucket_prefill)
-        self.batcher = ContinuousBatcher(max_batch, **self._batcher_kw)
+        self._batcher_kw = dict(kv_pages=kv_pages, page_size=page_size)
+        self.batcher = ContinuousBatcher(policy=self.batch_policy,
+                                         **self._batcher_kw)
         self._stream: Optional[_StreamState] = None
         # power-state telemetry (repro.serving.trace): set per run by
         # run(trace=...) or by the cluster before stream_start()
@@ -347,6 +426,7 @@ class ServeEngine:
             self._record("prefill", r.t_prefill_start, now,
                          pre.energy_j, 1.0)
             r.t_first_token = now
+            r.prefilled_tokens = r.prompt_len
             r.tokens_generated = 1
             dec_steps = max(r.max_new_tokens - 1, 0)
             e = pre.energy_j
@@ -412,7 +492,8 @@ class ServeEngine:
         """Begin a fresh continuous-mode stream at clock ``t0``."""
         if self.mode != "continuous":
             raise RuntimeError("streams require mode='continuous'")
-        self.batcher = ContinuousBatcher(self.max_batch,
+        self.batch_policy.reset()
+        self.batcher = ContinuousBatcher(policy=self.batch_policy,
                                          **self._batcher_kw)
         self._stream = _StreamState(now=t0)
         self.backend.start()
@@ -427,18 +508,24 @@ class ServeEngine:
         return self.batcher.n_live + self.batcher.n_waiting
 
     def stream_outstanding_work(self) -> float:
-        """Outstanding token work: un-prefilled prompt tokens plus
-        remaining decode tokens of queued + running requests."""
-        b = self.batcher
-        work = b.waiting_tokens
-        work += sum(b.slots[i].request.max_new_tokens
-                    - b.slots[i].request.tokens_generated
-                    for i in b.live_slots())
-        return float(work)
+        """Outstanding token work: un-prefilled prompt tokens
+        (including chunk remainders of partially-prefilled slots) plus
+        remaining decode tokens of queued + running requests.  Single
+        policy-visible accounting method — routers/schedulers and the
+        conservation tests all read this one number."""
+        return float(self.batch_policy.outstanding_tokens(self.batcher))
 
     def stream_submit(self, req: Request) -> None:
         self._stream.submitted.append(req)
         self.batcher.admit(req)
+
+    def stream_take_handoffs(self) -> List[Request]:
+        """Drain prefill-complete requests relayed by a
+        ``pool='prefill'`` engine (disaggregated serving); the cluster
+        loop re-submits them to a decode replica."""
+        out = self._stream.handoffs
+        self._stream.handoffs = []
+        return out
 
     def stream_can_step(self) -> bool:
         """True if the scheduler can make progress right now (a prefill
@@ -446,11 +533,7 @@ class ServeEngine:
         b = self.batcher
         if b.n_live:
             return True
-        if b.n_waiting and b.n_live < self.max_batch:
-            head = b.waiting_head()
-            return b.kv.can_allocate(head.prompt_len
-                                     + head.max_new_tokens)
-        return False
+        return bool(b.n_waiting) and self.batch_policy.can_admit(b)
 
     def stream_stuck(self) -> bool:
         """Waiting requests exist but can never be scheduled (KV pool
@@ -466,35 +549,70 @@ class ServeEngine:
         next shaped release / cluster sync point). Returns the phase
         latency (0.0 if there was nothing to do)."""
         s, b = self._stream, self.batcher
-        picks = b.schedule_prefill()
-        if picks:
-            lens = [r.prompt_len for _, r in picks]
-            pad = bucket_length(max(lens)) if b.bucket_prefill \
-                else max(lens)
+        plan = self.batch_policy.schedule_prefill(b, s.now)
+        if plan is not None and plan.picks:
+            if plan.adopt:
+                # prefill already ran on another replica (disaggregated
+                # handoff): the picks enter the decode batch directly,
+                # no compute phase and no clock advance
+                for _, r in plan.picks:
+                    r.status = RequestStatus.RUNNING
+                self._finish_ready(b, s.done, s.now)
+                return 0.0
+            picks = plan.picks
             res = self.backend.prefill(PrefillBatch(
-                picks=picks, pad_len=pad, stack=self.stack))
+                picks=picks, pad_len=plan.pad_len, stack=self.stack,
+                chunk_start=plan.chunk_start, chunk_len=plan.chunk_len))
             self._record("prefill", s.now, s.now + res.latency_s,
                          res.energy_j, float(len(picks)))
             s.now += res.latency_s
             s.busy_t += res.latency_s
             s.busy_e += res.energy_j
             s.n_prefills += 1
-            for _, r in picks:
+            if plan.is_chunk:
+                slot, r = picks[0]
+                if plan.chunk_start == 0:
+                    r.status = RequestStatus.RUNNING
+                    r.t_prefill_start = s.now - res.latency_s
+                r.energy_j += res.energy_j
+                s.prefill_chunks += 1
+                s.prefill_computed += plan.chunk_len
+                s.prefill_effective += plan.chunk_len
+                if b.note_chunk(slot, plan.chunk_len):
+                    r.t_first_token = s.now
+                    r.tokens_generated = 1
+                    if self.pool == "prefill":
+                        self._relay([(slot, r)])
+                    else:
+                        self._finish_ready(b, s.done, s.now)
+                return res.latency_s
+            for slot, r in picks:
                 r.status = RequestStatus.RUNNING
                 r.t_prefill_start = s.now - res.latency_s
                 r.t_first_token = s.now
                 r.tokens_generated = 1
                 r.energy_j += res.energy_j / len(picks)
-            self._finish_ready(b, s.done, s.now)
+                b.complete_prefill(slot)
+            s.prefill_computed += len(picks) * plan.pad_len
+            s.prefill_effective += sum(r.prompt_len for _, r in picks)
+            if self.pool == "prefill":
+                self._relay(picks)
+            else:
+                self._finish_ready(b, s.done, s.now)
             return res.latency_s
-        live = b.live_slots()
+        live = b.decode_ready_slots()
         if live:
             reqs = [b.slots[i].request for i in live]
             k, completes = (self._decode_horizon(reqs)
                             if self.macro_step else (1, True))
+            cap = self.batch_policy.decode_horizon_cap(b)
+            if cap is not None and k > cap:
+                k, completes = cap, False
             if k > 1:
-                return self._decode_macro(live, reqs, k, completes,
-                                          stop)
+                lat = self._decode_macro(live, reqs, k, completes,
+                                         stop)
+                self.batch_policy.note_decode()
+                return lat
             res = self.backend.decode_step(DecodeBatch(
                 slots=live, requests=reqs,
                 cache_lens=[r.prompt_len + r.tokens_generated
@@ -512,9 +630,22 @@ class ServeEngine:
             for r in reqs:
                 r.tokens_generated += 1
                 r.energy_j += res.energy_j / len(live)
+            self.batch_policy.note_decode()
             self._finish_ready(b, s.done, s.now)
             return res.latency_s
         return 0.0
+
+    def _relay(self, picks) -> None:
+        """Hand prefill-complete requests off the replica (disaggregated
+        ``pool='prefill'``): free the slot and KV, and queue the request
+        for the cluster loop to deliver to a decode replica."""
+        s, b = self._stream, self.batcher
+        for slot, r in picks:
+            b.finish(slot)
+            self.backend.release_slot(slot)
+            s.done.append(r)
+            s.handoffs.append(r)
+            s.n_relayed += 1
 
     # -- event-horizon macro-stepping ----------------------------------
     def _decode_horizon(self, reqs: List[Request]
@@ -607,11 +738,14 @@ class ServeEngine:
             wall_time_s=s.now, busy_time_s=s.busy_t,
             mean_batch=mean_batch, n_prefill_batches=s.n_prefills,
             n_decode_steps=s.n_decode, gated_energy_j=s.gated_e,
-            gated_time_s=s.gated_t, idle_time_s=s.idle_t)
+            gated_time_s=s.gated_t, idle_time_s=s.idle_t,
+            prefill_computed_tokens=s.prefill_computed,
+            prefill_effective_tokens=s.prefill_effective,
+            prefill_chunks=s.prefill_chunks, n_relayed=s.n_relayed)
 
     def _finish_ready(self, b: ContinuousBatcher, done: List[Request],
                       now: float) -> None:
-        for i in b.live_slots():
+        for i in b.decode_ready_slots():
             r = b.slots[i].request
             if r.tokens_generated >= r.max_new_tokens:
                 r.t_done = now

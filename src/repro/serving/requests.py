@@ -36,6 +36,7 @@ class Request:
     t_prefill_start: float = -1.0
     t_first_token: float = -1.0
     t_done: float = -1.0
+    prefilled_tokens: int = 0           # prompt tokens whose KV exists
     tokens_generated: int = 0
     generated: list = dataclasses.field(default_factory=list)
     # accounting

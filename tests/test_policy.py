@@ -1,0 +1,394 @@
+"""Batch-formation policy tests: deprecation shims, SlotCount golden
+parity, spec-axis validation (with speccache hash regression), token-
+budget and length-sorted properties, chunked-prefill accounting,
+macro-step parity for every policy, and disaggregated prefill/decode
+serving."""
+import glob
+import json
+import math
+import os
+import warnings
+
+import pytest
+
+from repro.api import ExperimentSpec
+from repro.batching import ContinuousBatcher
+from repro.batching.policy import (BATCH_POLICIES, ChunkedPrefillPolicy,
+                                   LengthSortedPolicy, SlotCountPolicy,
+                                   TokenBudgetPolicy, make_batch_policy)
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.serving.arrival import fixed_arrivals, paper_requests
+from repro.serving.cluster import make_cluster
+from repro.serving.engine import ServeEngine
+from repro.serving.requests import Request
+
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+DATA = os.path.join(os.path.dirname(__file__), "data")
+SPECCACHE = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "experiments", "bench", "speccache")
+
+
+def _reqs(n=24, seed=0, prompt_range=(200, 4000), output_range=(10, 120),
+          gap=0.0):
+    return paper_requests(n, fixed_arrivals(n, gap), seed=seed,
+                          prompt_range=prompt_range,
+                          output_range=output_range)
+
+
+def _fixed_reqs(plens, out=20):
+    return [Request(req_id=i, prompt=None, prompt_len=p,
+                    max_new_tokens=out, arrival_time=0.0)
+            for i, p in enumerate(plens)]
+
+
+def _report_sig(rep):
+    return (rep.total_energy_j, rep.busy_energy_j, rep.wall_time_s,
+            [r.t_done for r in rep.requests],
+            [r.ttft for r in rep.requests],
+            [r.energy_j for r in rep.requests])
+
+
+# ---------------------------------------------------------------------------
+# legacy kwargs -> deprecation shim
+# ---------------------------------------------------------------------------
+class TestDeprecationShim:
+    def test_legacy_kwargs_warn(self):
+        with pytest.warns(DeprecationWarning,
+                          match="batch_policy=SlotCountPolicy"):
+            ServeEngine(LLAMA8B, max_batch=8)
+
+    def test_default_engine_does_not_warn(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            ServeEngine(LLAMA8B)
+
+    def test_legacy_matches_explicit_policy(self):
+        with pytest.warns(DeprecationWarning):
+            legacy = ServeEngine(LLAMA8B, max_batch=8,
+                                 max_prefill_batch=4,
+                                 bucket_prefill=True)
+        explicit = ServeEngine(LLAMA8B, batch_policy=SlotCountPolicy(
+            max_batch=8, max_prefill_batch=4, bucket_prefill=True))
+        assert _report_sig(legacy.run(_reqs())) \
+            == _report_sig(explicit.run(_reqs()))
+
+    def test_policy_conflicts_raise(self):
+        pol = SlotCountPolicy(max_batch=8)
+        with pytest.raises(ValueError, match="conflict with batch_policy"):
+            ServeEngine(LLAMA8B, batch_policy=pol, max_prefill_batch=4)
+        with pytest.raises(ValueError, match="max_batch=16 conflicts"):
+            ServeEngine(LLAMA8B, batch_policy=pol, max_batch=16)
+        with pytest.raises(ValueError, match="mode='continuous'"):
+            ServeEngine(LLAMA8B, mode="sequential",
+                        batch_policy=TokenBudgetPolicy(token_budget=4096))
+
+
+# ---------------------------------------------------------------------------
+# SlotCountPolicy parity: the refactor must not move a single bit
+# ---------------------------------------------------------------------------
+class TestSlotCountParity:
+    with open(os.path.join(DATA, "golden_pre_refactor.json")) as f:
+        GOLDEN = json.load(f)["records"]
+
+    @pytest.mark.parametrize("name", sorted(GOLDEN))
+    def test_golden_records_still_reproduce(self, name):
+        rec = self.GOLDEN[name]
+        spec = ExperimentSpec.from_dict(rec["spec"])
+        assert spec.spec_hash() == rec["spec_hash"]
+        assert spec.run().to_json() == rec["result"]
+
+    def test_explicit_slot_count_matches_default(self):
+        default = ServeEngine(LLAMA8B)
+        explicit = ServeEngine(LLAMA8B, batch_policy=SlotCountPolicy())
+        assert _report_sig(default.run(_reqs(gap=0.2))) \
+            == _report_sig(explicit.run(_reqs(gap=0.2)))
+
+
+# ---------------------------------------------------------------------------
+# spec axes: validation + serialization stability
+# ---------------------------------------------------------------------------
+class TestSpecAxes:
+    @pytest.mark.parametrize("changes, match", [
+        (dict(batch_policy="nope"), "unknown batch_policy"),
+        (dict(batch_policy="token_budget"), "token_budget is required"),
+        (dict(batch_policy="token_budget",
+              policy_params={"token_budget": -5}),
+         "token_budget must be >= 1"),
+        (dict(batch_policy="chunked_prefill",
+              policy_params={"chunk_tokens": 0}),
+         "chunk_tokens must be >= 1"),
+        (dict(batch_policy="length_sorted",
+              policy_params={"window": 0}), "window must be >= 1"),
+        (dict(policy_params={"max_batch": 4}),
+         "policy_params may not set"),
+        (dict(batch_policy="length_sorted",
+              policy_params={"bogus": 1}), "unknown policy_params"),
+        (dict(batch_policy="length_sorted", mode="sequential"),
+         "mode='continuous'"),
+        (dict(batch_policy="length_sorted", pipeline="profile"),
+         "pipeline='serve'"),
+        (dict(disaggregate=1), "replicas >= 2"),
+        (dict(disaggregate=2, replicas=2), "no decode"),
+        (dict(disaggregate=-1), ">= 0"),
+    ])
+    def test_rejects(self, changes, match):
+        with pytest.raises(ValueError, match=match):
+            ExperimentSpec(**changes)
+
+    def test_registry_and_factory(self):
+        assert BATCH_POLICIES == ("slot_count", "token_budget",
+                                  "length_sorted", "chunked_prefill")
+        with pytest.raises(ValueError, match="unknown batch policy"):
+            make_batch_policy("nope")
+        pol = make_batch_policy("token_budget", token_budget=4096,
+                                max_batch=8)
+        assert isinstance(pol, TokenBudgetPolicy)
+        assert (pol.token_budget, pol.max_batch) == (4096, 8)
+
+    def test_round_trip_and_hash(self):
+        spec = ExperimentSpec(batch_policy="token_budget",
+                              policy_params={"token_budget": 8192},
+                              n_requests=8)
+        again = ExperimentSpec.from_json(spec.to_json())
+        assert again == spec and again.spec_hash() == spec.spec_hash()
+        assert spec.spec_hash() != ExperimentSpec(n_requests=8).spec_hash()
+
+    def test_default_spec_json_has_no_new_keys(self):
+        d = ExperimentSpec(n_requests=8).to_dict()
+        for key in ("batch_policy", "policy_params", "disaggregate"):
+            assert key not in d
+
+    def test_speccache_hashes_unchanged(self):
+        blobs = sorted(glob.glob(os.path.join(SPECCACHE, "*.json")))
+        if not blobs:            # fresh checkout: cache not built yet
+            pytest.skip("no memoized sweep blobs to regress against")
+        for path in blobs:
+            with open(path) as f:
+                blob = json.load(f)
+            spec = ExperimentSpec.from_dict(blob["spec"])
+            stem = os.path.splitext(os.path.basename(path))[0]
+            assert spec.spec_hash() == stem, \
+                f"spec hash drifted for {os.path.basename(path)}"
+
+    def test_formation_fields_round_trip(self):
+        from repro.api import RunResult
+        res = ExperimentSpec(batch_policy="length_sorted",
+                             n_requests=8).run()
+        d = res.to_dict()
+        assert "prefill_padding_fraction" in d and "n_handoffs" in d
+        assert RunResult.from_json(res.to_json()).to_json() \
+            == res.to_json()
+        plain = ExperimentSpec(n_requests=8).run().to_dict()
+        assert "prefill_padding_fraction" not in plain
+
+
+# ---------------------------------------------------------------------------
+# policy properties (driven through the batcher, no engine clock)
+# ---------------------------------------------------------------------------
+class TestTokenBudgetProperty:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_committed_tokens_never_exceed_budget(self, seed):
+        budget = 6000
+        pol = TokenBudgetPolicy(token_budget=budget, max_batch=32,
+                                max_prefill_batch=8, bucket_prefill=False)
+        b = ContinuousBatcher(policy=pol, kv_pages=1 << 14)
+        reqs = _reqs(48, seed=seed, prompt_range=(50, 4000),
+                     output_range=(5, 120))
+        for r in reqs:                   # every request fits the budget
+            assert r.prompt_len + r.max_new_tokens <= budget
+            b.admit(r)
+        admitted = 0
+        while b.n_waiting or b.n_live:
+            plan = pol.schedule_prefill(b, 0.0)
+            if plan is not None:
+                admitted += len(plan.picks)
+                for slot, _ in plan.picks:
+                    b.complete_prefill(slot)
+            assert b.live_committed_tokens <= budget
+            for slot in list(b.step_decode_bookkeeping()):
+                r = b.slots[slot].request
+                r.tokens_generated += 1
+                if r.tokens_generated >= r.max_new_tokens:
+                    b.finish(slot)
+        assert admitted == len(reqs)
+
+
+class TestLengthSortedProperty:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_padding_never_worse_than_fifo(self, seed):
+        pol = LengthSortedPolicy(max_batch=64, max_prefill_batch=8,
+                                 window=16, patience=10 ** 9)
+        b = ContinuousBatcher(policy=pol, kv_pages=1 << 14)
+        for r in _reqs(64, seed=seed, prompt_range=(50, 4000)):
+            b.admit(r)
+        while b.n_waiting:
+            cands = b.waiting[:pol.window]
+            plan = pol.schedule_prefill(b, 0.0)
+            assert plan is not None
+            k = len(plan.picks)
+            fifo = cands[:k]
+            fifo_cost = (k * max(r.prompt_len for r in fifo)
+                         - sum(r.prompt_len for r in fifo))
+            cost = (k * plan.pad_len
+                    - sum(r.prompt_len for _, r in plan.picks))
+            assert cost <= fifo_cost
+            for slot, _ in plan.picks:   # drain so slots free up
+                b.complete_prefill(slot)
+                b.finish(slot)
+
+    def test_patience_bounds_head_starvation(self):
+        pol = LengthSortedPolicy(max_batch=64, max_prefill_batch=2,
+                                 window=8, patience=1)
+        b = ContinuousBatcher(policy=pol, kv_pages=1 << 14)
+        # long head followed by a stream of well-matched short pairs:
+        # an unbounded sorter would never pick the head
+        for r in _fixed_reqs([4000] + [100] * 8):
+            b.admit(r)
+        batches = []
+        while b.n_waiting:
+            plan = pol.schedule_prefill(b, 0.0)
+            batches.append([r.req_id for _, r in plan.picks])
+            for slot, _ in plan.picks:
+                b.complete_prefill(slot)
+                b.finish(slot)
+        picked_in = next(i for i, ids in enumerate(batches) if 0 in ids)
+        assert picked_in <= pol.patience
+
+
+# ---------------------------------------------------------------------------
+# conservation: tokens are neither lost nor double-counted
+# ---------------------------------------------------------------------------
+class TestConservation:
+    @pytest.mark.parametrize("policy", [
+        SlotCountPolicy(max_batch=8),
+        TokenBudgetPolicy(token_budget=8192, max_batch=8),
+        LengthSortedPolicy(max_batch=8),
+        ChunkedPrefillPolicy(chunk_tokens=256, max_batch=8),
+    ], ids=lambda p: p.name)
+    def test_outstanding_plus_done_is_constant(self, policy):
+        reqs = _reqs(16, prompt_range=(100, 2000), output_range=(5, 60))
+        total = sum(r.prompt_len + r.max_new_tokens for r in reqs)
+        eng = ServeEngine(LLAMA8B, batch_policy=policy)
+        eng.stream_start()
+        for r in reqs:
+            eng.stream_submit(r)
+        while eng.stream_can_step():
+            eng.stream_step()
+            done = sum(r.prefilled_tokens + r.tokens_generated
+                       for r in reqs)
+            assert eng.stream_outstanding_work() + done == total
+        rep = eng.stream_report()
+        assert rep.n == len(reqs)
+        assert eng.stream_outstanding_work() == 0
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+class TestChunkedPrefill:
+    def test_chunk_count_and_completion(self):
+        chunk = 256
+        plens = [1000, 513, 257, 2048]
+        eng = ServeEngine(LLAMA8B, batch_policy=ChunkedPrefillPolicy(
+            chunk_tokens=chunk, max_batch=8))
+        rep = eng.run(_fixed_reqs(plens))
+        assert rep.prefill_chunks == sum(math.ceil(p / chunk)
+                                         for p in plens)
+        assert rep.n == len(plens)
+        for r in rep.requests:
+            assert r.prefilled_tokens == r.prompt_len
+        # chunks are exact, so chunked phases add no padding
+        assert rep.prefill_padding_fraction == 0.0
+
+    def test_short_prompts_match_slot_count(self):
+        reqs = _reqs(16, prompt_range=(100, 1000))
+        a = ServeEngine(LLAMA8B, batch_policy=ChunkedPrefillPolicy(
+            chunk_tokens=8192, max_batch=8)).run(_reqs(
+                16, prompt_range=(100, 1000)))
+        c = ServeEngine(LLAMA8B, batch_policy=SlotCountPolicy(
+            max_batch=8)).run(reqs)
+        assert _report_sig(a) == _report_sig(c)
+
+    def test_long_prompt_does_not_stall_decode(self):
+        # short requests admitted first keep decoding while the long
+        # prompt chunks: their latency must beat the monolithic path
+        reqs = _fixed_reqs([300, 300, 300, 300, 6000], out=200)
+        chunked = ServeEngine(LLAMA8B, batch_policy=ChunkedPrefillPolicy(
+            chunk_tokens=512, max_batch=8)).run(reqs)
+        mono = ServeEngine(LLAMA8B, batch_policy=SlotCountPolicy(
+            max_batch=8, bucket_prefill=False)).run(
+                _fixed_reqs([300, 300, 300, 300, 6000], out=200))
+        by_id = {r.req_id: r for r in chunked.requests}
+        mono_by = {r.req_id: r for r in mono.requests}
+        short_chunked = max(by_id[i].latency for i in range(4))
+        short_mono = max(mono_by[i].latency for i in range(4))
+        assert short_chunked <= short_mono
+
+
+# ---------------------------------------------------------------------------
+# macro-stepping parity for every policy
+# ---------------------------------------------------------------------------
+class TestMacroParity:
+    @pytest.mark.parametrize("name, params", [
+        ("slot_count", {}),
+        ("token_budget", {"token_budget": 8192}),
+        ("length_sorted", {}),
+        ("chunked_prefill", {"chunk_tokens": 512}),
+    ])
+    def test_macro_equals_single_step(self, name, params):
+        def run(macro):
+            pol = make_batch_policy(name, max_batch=8, **params)
+            eng = ServeEngine(LLAMA8B, batch_policy=pol,
+                              macro_step=macro)
+            return eng.run(_reqs(16, gap=0.15))
+        assert _report_sig(run(True)) == _report_sig(run(False))
+
+
+# ---------------------------------------------------------------------------
+# disaggregated prefill/decode serving
+# ---------------------------------------------------------------------------
+class TestDisaggregated:
+    def test_cluster_hands_off_every_request(self):
+        spec = ExperimentSpec(n_requests=16, replicas=3, disaggregate=1,
+                              arrival="poisson",
+                              arrival_params={"rate_per_s": 4.0})
+        res = spec.run()
+        assert res.kind == "cluster"
+        assert res.n_requests == 16 and res.n_shed == 0
+        assert res.n_handoffs == 16
+        assert res.handoff_energy_j > 0.0
+        # handoff energy is part of the fleet total
+        rep = res.report
+        assert rep.total_energy_j == pytest.approx(
+            sum(r.total_energy_j for r in rep.replica_reports)
+            + rep.handoff_energy_j)
+        # decode replicas own the finished requests; prefill pool none
+        assert sum(rep.requests_per_replica) == 16
+        assert rep.requests_per_replica[0] == 0
+
+    def test_handoff_energy_scales_with_kv(self):
+        def run(prompt):
+            return ExperimentSpec(
+                n_requests=8, replicas=2, disaggregate=1,
+                prompt_range=(prompt, prompt),
+                output_range=(20, 20)).run().handoff_energy_j
+        assert run(2000) > run(400)
+
+    def test_pool_validation(self):
+        mixed = ServeEngine(LLAMA8B)
+        pooled = ServeEngine(LLAMA8B, pool="prefill")
+        with pytest.raises(ValueError, match="unknown pool"):
+            ServeEngine(LLAMA8B, pool="bogus")
+        from repro.serving.cluster import ClusterEngine
+        with pytest.raises(ValueError, match="mix"):
+            ClusterEngine([mixed, pooled])
+        with pytest.raises(ValueError):
+            ClusterEngine([ServeEngine(LLAMA8B, pool="prefill"),
+                           ServeEngine(LLAMA8B, pool="prefill")])
+
+    def test_make_cluster_rejects_shared_policy(self):
+        with pytest.raises(ValueError, match="shared across replicas"):
+            make_cluster(LLAMA8B, 2,
+                         batch_policy=SlotCountPolicy(max_batch=8))
+        make_cluster(LLAMA8B, 1, batch_policy=SlotCountPolicy(
+            max_batch=8))                # single replica is fine
