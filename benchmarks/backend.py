@@ -32,6 +32,7 @@ from repro import (AnalyticBackend, Claim, ExperimentSpec, Option,
                    RecordingBackend, run_spec, sweep)
 from repro.serving.engine import ServeEngine
 from repro.sweep import SweepResult
+from repro.batching.policy import SlotCountPolicy
 
 N_REQ = int(os.environ.get("REPRO_BACKEND_NREQ", "96"))
 FREQS = (0.5, 0.6, 0.75, 0.9)
@@ -97,7 +98,7 @@ def _replay_points() -> SweepResult:
     # record the reference workload's phase stream, then replay it
     cfg = BASE.model_config()
     rec = RecordingBackend(AnalyticBackend(cfg))
-    eng = ServeEngine(cfg, max_batch=32, backend=rec)
+    eng = ServeEngine(cfg, backend=rec, batch_policy=SlotCountPolicy(max_batch=32))
     eng.run(BASE.derive(max_batch=32).requests())
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, "replay_roundtrip_trace.json")

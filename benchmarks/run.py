@@ -4,6 +4,7 @@
     fig 2a/2b + fig 6/7  -> benchmarks.batching
     fig 3a/3b/3c         -> benchmarks.serving
     batch formation      -> benchmarks.formation
+    workflows / tasks    -> benchmarks.workflows
     fleet / routing      -> benchmarks.cluster
     §5 scheduling        -> benchmarks.scheduler
     backends / DVFS      -> benchmarks.backend
@@ -64,11 +65,12 @@ def _row_record(suite: str, row) -> dict:
 def _benches():
     from benchmarks import (backend, batching, cluster, formation, macro,
                             microbench, precision, roofline_report,
-                            scheduler, serving, simperf)
+                            scheduler, serving, simperf, workflows)
     return [("precision", precision),
             ("batching", batching),
             ("serving", serving),
             ("formation", formation),
+            ("workflows", workflows),
             ("cluster", cluster),
             ("scheduler", scheduler),
             ("backend", backend),
@@ -112,6 +114,7 @@ def main(argv=None) -> None:
     if args.quick:
         os.environ.setdefault("REPRO_CLUSTER_NREQ", "80")
         os.environ.setdefault("REPRO_FORMATION_NREQ", "96")
+        os.environ.setdefault("REPRO_WORKFLOWS_NREQ", "8")
         os.environ.setdefault("REPRO_SCHED_NREQ", "80")
         os.environ.setdefault("REPRO_BACKEND_NREQ", "48")
         os.environ.setdefault("REPRO_SIMPERF_QUICK", "1")

@@ -29,6 +29,7 @@ from benchmarks.common import Row, save_results
 from repro.configs.paper_zoo import PAPER_MODELS
 from repro.serving.arrival import burst_arrivals, paper_requests
 from repro.serving.engine import ServeEngine
+from repro.batching.policy import SlotCountPolicy
 
 CFG = PAPER_MODELS["llama-3.1-8b"]
 
@@ -52,7 +53,7 @@ def _requests(n: int, shape: dict, burst: int = 64,
 
 def _timed_run(n: int, shape: dict, *, macro: bool,
                max_batch: int = 32) -> dict:
-    eng = ServeEngine(CFG, max_batch=max_batch, macro_step=macro)
+    eng = ServeEngine(CFG, macro_step=macro, batch_policy=SlotCountPolicy(max_batch=max_batch))
     reqs = _requests(n, shape)
     t0 = time.perf_counter()
     rep = eng.run(reqs)

@@ -21,6 +21,7 @@ import tempfile
 import repro
 from repro.serving import (AnalyticBackend, RecordingBackend,
                            ReplayBackend, ServeEngine)
+from repro.batching.policy import SlotCountPolicy
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "..", "tests", "data",
                        "replay_h100_small.json")
@@ -36,7 +37,7 @@ def main() -> None:
 
     # 1. record: analytic backend wrapped in a recorder
     rec = RecordingBackend(AnalyticBackend(cfg))
-    eng = ServeEngine(cfg, max_batch=SPEC.max_batch, backend=rec)
+    eng = ServeEngine(cfg, backend=rec, batch_policy=SlotCountPolicy(max_batch=SPEC.max_batch))
     ref = eng.run(SPEC.requests())
     path = os.path.join(tempfile.gettempdir(), "replay_demo_trace.json")
     trace = rec.dump(path, device="h100-sxm", model=cfg.name,
@@ -48,9 +49,10 @@ def main() -> None:
           f"{ref.wall_time_s:.1f}s wall")
 
     # 2. replay the recording through the same live scheduler
-    rep = ServeEngine(cfg, max_batch=SPEC.max_batch,
-                      backend=ReplayBackend.from_json(path)
-                      ).run(SPEC.requests())
+    rep = ServeEngine(cfg,
+                      backend=ReplayBackend.from_json(path),
+                      batch_policy=SlotCountPolicy(
+                          max_batch=SPEC.max_batch)).run(SPEC.requests())
     drift = rep.total_energy_j / ref.total_energy_j
     print(f"  replayed:           "
           f"{rep.mean_energy_per_request_wh*1e3:.3f} mWh/request "

@@ -32,8 +32,11 @@ from repro.serving.scheduler import HorizonStop  # noqa: F401
 from repro.sweep import (sweep, run_spec, expand_grid, Option,  # noqa: F401
                          Claim, ClaimResult, SweepResult, select,
                          check_claims, WORKERS_ENV)
+from repro.workflows import (Workflow, WorkflowStep,  # noqa: F401
+                             TaskReport, WorkflowSource,
+                             WORKFLOW_TEMPLATES, make_workflow)
 
-__version__ = "0.6.0"
+__version__ = "0.7.0"
 
 __all__ = [
     "__version__",
@@ -48,4 +51,6 @@ __all__ = [
     "sweep", "run_spec", "expand_grid", "Option",
     "Claim", "ClaimResult", "SweepResult", "select", "check_claims",
     "WORKERS_ENV",
+    "Workflow", "WorkflowStep", "TaskReport", "WorkflowSource",
+    "WORKFLOW_TEMPLATES", "make_workflow",
 ]

@@ -76,7 +76,9 @@ ENERGY_MODELS = ("phase", "fused_dequant")
 #: hash (cache keys / bench-row provenance stay comparable)
 _LATE_FIELD_DEFAULTS = {"backend": "analytic", "freq_scale": 1.0,
                         "replay_path": None, "batch_policy": "slot_count",
-                        "policy_params": {}, "disaggregate": 0}
+                        "policy_params": {}, "disaggregate": 0,
+                        "workflow": None, "workflow_params": {},
+                        "workflow_reuse": True}
 
 #: spec fields a per-replica override mapping may set (heterogeneous fleets)
 REPLICA_OVERRIDE_FIELDS = ("fmt", "device", "max_batch", "n_chips")
@@ -149,6 +151,15 @@ class ExperimentSpec:
     arrival: str = "all_at_once"
     arrival_params: Mapping[str, Any] = dataclasses.field(
         default_factory=dict)
+    # -- workflow workload (repro.workflows template; when set,
+    #    n_requests counts *tasks* and the arrival process spaces task
+    #    graphs whose steps release on dependency completion) ----------
+    workflow: Optional[str] = None
+    workflow_params: Mapping[str, Any] = dataclasses.field(
+        default_factory=dict)
+    # prefix_of= KV forking on/off (the reuse-ablation axis; reuse is
+    # auto-disabled in sequential mode and on disaggregated fleets)
+    workflow_reuse: bool = True
     # -- workload distribution (paper §2/§3.1 defaults) -----------------
     n_requests: int = 64
     prompt_range: Tuple[int, int] = (200, 4000)
@@ -174,6 +185,7 @@ class ExperimentSpec:
              _freeze(dict(self.scheduler_params)))
         set_(self, "arrival_params", _freeze(dict(self.arrival_params)))
         set_(self, "policy_params", _freeze(dict(self.policy_params)))
+        set_(self, "workflow_params", _freeze(dict(self.workflow_params)))
         set_(self, "replica_overrides",
              _freeze(tuple(dict(o) for o in self.replica_overrides)))
         set_(self, "prompt_range", tuple(self.prompt_range))
@@ -268,6 +280,23 @@ class ExperimentSpec:
                     "static batch)")
         if self.batch_policy != "slot_count" or self.policy_params:
             self.build_batch_policy()  # surfaces bad params early
+        if self.workflow_params and self.workflow is None:
+            raise ValueError(
+                "workflow_params= is set but workflow is None; name a "
+                "template via workflow=")
+        if not self.workflow_reuse and self.workflow is None:
+            raise ValueError(
+                "workflow_reuse=False is set but workflow is None; "
+                "name a template via workflow=")
+        if self.workflow is not None:
+            if self.pipeline != "serve":
+                raise ValueError(
+                    "workflow= requires pipeline='serve' (the profile "
+                    "pipeline pads one static batch)")
+            from repro.workflows import make_workflow
+            # surfaces unknown templates / bad params at construction
+            make_workflow(self.workflow, np.random.default_rng(0),
+                          **dict(self.workflow_params))
         if self.disaggregate < 0:
             raise ValueError("disaggregate must be >= 0 (the prefill "
                              "pool size)")
@@ -424,6 +453,22 @@ class ExperimentSpec:
                         seed=self.slo_seed)
         return reqs
 
+    def build_workflow_source(self):
+        """Materialize the workflow axis: ``n_requests`` task graphs
+        drawn from the template (seeded), spaced by the spec's arrival
+        process. Fresh source per run — engines mutate its requests."""
+        from repro.workflows import WorkflowSource, make_workflow
+        rng = np.random.default_rng(self.seed)
+        wfs = [make_workflow(self.workflow, rng,
+                             **dict(self.workflow_params))
+               for _ in range(self.n_requests)]
+        cfg = self.model_config()
+        materialize = self.effective_backend() == "executed"
+        return WorkflowSource(
+            wfs, self.arrivals(), seed=self.seed,
+            reuse_prefix=self.workflow_reuse,
+            vocab_size=cfg.vocab_size if materialize else None)
+
     def _engine_stack(self) -> str:
         return "fused" if self.mode == "continuous" else "eager"
 
@@ -542,6 +587,13 @@ class ExperimentSpec:
 _FORMATION_RESULT_FIELDS = ("prefill_padding_fraction", "prefill_chunks",
                             "handoff_energy_j", "n_handoffs")
 
+#: result fields added with the workflow axis; same omit-when-None rule
+_WORKFLOW_RESULT_FIELDS = ("n_tasks", "n_tasks_completed",
+                           "mean_task_latency_s",
+                           "mean_task_critical_path_s",
+                           "mean_energy_per_task_wh",
+                           "prefix_reused_tokens")
+
 
 @dataclasses.dataclass
 class RunResult:
@@ -625,11 +677,29 @@ class RunResult:
     prefill_chunks: Optional[int] = None
     handoff_energy_j: Optional[float] = None
     n_handoffs: Optional[int] = None
+    # -- workflow serving (set when the spec names a workflow template;
+    #    omitted from to_dict when None, same byte-stability rule) ------
+    n_tasks: Optional[int] = None
+    n_tasks_completed: Optional[int] = None
+    mean_task_latency_s: Optional[float] = None
+    mean_task_critical_path_s: Optional[float] = None
+    mean_energy_per_task_wh: Optional[float] = None
+    prefix_reused_tokens: Optional[int] = None
     # -- non-serialized engine report (fresh runs only) -----------------
     report: Optional[Any] = dataclasses.field(
         default=None, compare=False, repr=False)
 
     # ------------------------------------------------------------------
+    @property
+    def mean_energy_per_token_wh(self) -> float:
+        """Total energy per generated token, in Wh — 0.0 on an empty
+        run (same guard as ``tokens_per_s``). Derived, never
+        serialized, so pre-existing records stay byte-identical."""
+        toks = self.tokens_per_s * self.wall_time_s
+        if toks <= 0:
+            return 0.0
+        return self.total_energy_j / 3600.0 / toks
+
     def metric(self, name: str) -> float:
         """Look up a metric by (possibly dotted) name, e.g.
         ``"mean_energy_wh"`` or ``"tier_attainment.interactive"``."""
@@ -647,7 +717,7 @@ class RunResult:
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d.pop("report")
-        for key in _FORMATION_RESULT_FIELDS:
+        for key in _FORMATION_RESULT_FIELDS + _WORKFLOW_RESULT_FIELDS:
             if d[key] is None:
                 del d[key]
         return _thaw(d)
@@ -683,8 +753,14 @@ def _tier_attainment(report) -> Dict[str, float]:
 def _run_serve(spec: ExperimentSpec) -> RunResult:
     engine = spec.build_engine()
     trace = PowerTrace() if spec.trace else None
-    report = engine.run(spec.requests(),
-                        scheduler=spec.build_scheduler(), trace=trace)
+    if spec.workflow is not None:
+        source = spec.build_workflow_source()
+        report = engine.run(source.initial(),
+                            scheduler=spec.build_scheduler(),
+                            trace=trace, source=source)
+    else:
+        report = engine.run(spec.requests(),
+                            scheduler=spec.build_scheduler(), trace=trace)
     return result_from_report(spec, report, trace)
 
 
@@ -740,6 +816,22 @@ def result_from_report(spec: ExperimentSpec, report,
                 prefill_padding_fraction=report.prefill_padding_fraction,
                 prefill_chunks=report.prefill_chunks,
                 handoff_energy_j=0.0, n_handoffs=0)
+    if spec.workflow is not None:
+        tasks = report.tasks
+        done = [t for t in tasks if t.completed]
+        kw.update(
+            n_tasks=len(tasks), n_tasks_completed=len(done),
+            mean_task_latency_s=(float(np.mean(
+                [t.latency_s for t in done])) if done else 0.0),
+            mean_task_critical_path_s=(float(np.mean(
+                [t.critical_path_s for t in done])) if done else 0.0),
+            # total energy (idle and handoffs included) over offered
+            # tasks: the fleet-level "Wh per unit of work" the paper's
+            # serving sections argue about
+            mean_energy_per_task_wh=(report.total_energy_j
+                                     / len(tasks) / 3600.0
+                                     if tasks else 0.0),
+            prefix_reused_tokens=report.prefix_reused_tokens)
     mean_lat = (float(np.mean([r.latency for r in report.completed]))
                 if report.completed else 0.0)
     mean_ttft = (float(np.mean([r.ttft for r in report.completed]))

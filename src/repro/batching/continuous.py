@@ -170,7 +170,16 @@ class ContinuousBatcher:
         self._n_waiting -= 1
         self._waiting_tokens -= req.prompt_len + req.max_new_tokens
         slot = self._free.pop(0)
-        self.kv.allocate(req.req_id, req.prompt_len)
+        if (req.kv_parent is not None
+                and 0 < req.prefilled_tokens < req.prompt_len):
+            # workflow child: co-own the parent's prefix pages and only
+            # allocate fresh pages for the unprefilled remainder
+            self.kv.fork_prefix(req.kv_parent, req.req_id,
+                                req.prefilled_tokens, req.prompt_len)
+        else:
+            self.kv.allocate(req.req_id, req.prompt_len)
+        if req.kv_pin:
+            self.kv.pin(req.req_id, req.kv_pin)
         self.slots[slot].request = req
         bisect.insort(self._live, slot)
         if req.prefilled_tokens >= req.prompt_len:

@@ -33,6 +33,12 @@ class PagedKVAllocator:
         self.page_size = page_size
         self.free: List[int] = list(range(n_pages - 1, -1, -1))
         self.tables: Dict[int, PageTable] = {}
+        #: owner count for pages held by >1 table (absent == 1 owner)
+        self._shared: Dict[int, int] = {}
+        #: outstanding prefix-fork reservations per sequence
+        self._pins: Dict[int, int] = {}
+        #: released-but-pinned tables kept alive for pending forks
+        self.lingering: Dict[int, PageTable] = {}
 
     # ------------------------------------------------------------------
     def pages_needed(self, n_tokens: int) -> int:
@@ -82,7 +88,79 @@ class PagedKVAllocator:
 
     def release(self, seq_id: int) -> None:
         t = self.tables.pop(seq_id)
-        self.free.extend(reversed(t.pages))
+        if self._pins.get(seq_id, 0) > 0:
+            self.lingering[seq_id] = t       # kept alive for forks
+        else:
+            self._free_pages(t.pages)
+
+    def _free_pages(self, pages: List[int]) -> None:
+        """Drop one ownership per page; a page returns to the free
+        list (historical reversed-append order) only at zero owners."""
+        shared = self._shared
+        for p in reversed(pages):
+            c = shared.get(p)
+            if c is None:
+                self.free.append(p)
+            elif c == 2:
+                del shared[p]
+            else:
+                shared[p] = c - 1
+
+    # -- prefix sharing ------------------------------------------------
+    def pin(self, seq_id: int, n: int = 1) -> None:
+        """Reserve ``seq_id``'s pages for ``n`` future prefix forks:
+        release() then parks the table in :attr:`lingering` instead of
+        freeing it, until every pin is consumed."""
+        if n > 0:
+            self._pins[seq_id] = self._pins.get(seq_id, 0) + n
+
+    def unpin(self, seq_id: int) -> None:
+        """Consume one pin; at zero a lingering table is freed."""
+        c = self._pins.get(seq_id, 0)
+        if c <= 1:
+            self._pins.pop(seq_id, None)
+            t = self.lingering.pop(seq_id, None)
+            if t is not None:
+                self._free_pages(t.pages)
+        else:
+            self._pins[seq_id] = c - 1
+
+    def has_seq(self, seq_id: int) -> bool:
+        return seq_id in self.tables or seq_id in self.lingering
+
+    def fork_prefix(self, parent_id: int, child_id: int,
+                    share_tokens: int, total_tokens: int) -> PageTable:
+        """Allocate ``child_id`` reusing the parent's first
+        ``share_tokens`` (page-aligned) tokens of KV: those pages are
+        co-owned, the remainder up to ``total_tokens`` comes fresh from
+        the free pool. Consumes one pin on the parent."""
+        if child_id in self.tables:
+            raise KeyError(f"seq {child_id} already allocated")
+        parent = self.tables.get(parent_id)
+        if parent is None:
+            parent = self.lingering.get(parent_id)
+        if parent is None:
+            raise KeyError(f"fork parent {parent_id} not resident")
+        ps = self.page_size
+        if share_tokens % ps:
+            raise ValueError("share_tokens must be page-aligned")
+        n_share = share_tokens // ps
+        if n_share > len(parent.pages) or share_tokens > total_tokens:
+            raise ValueError("shared prefix exceeds parent/child extent")
+        need = self.pages_needed(total_tokens) - n_share
+        if need > len(self.free):
+            raise MemoryError(
+                f"need {need} pages, {len(self.free)} free")
+        shared_pages = parent.pages[:n_share]
+        for p in shared_pages:
+            self._shared[p] = self._shared.get(p, 1) + 1
+        pages = list(shared_pages)
+        pages += [self.free.pop() for _ in range(need)]
+        t = PageTable(seq_id=child_id, pages=pages,
+                      n_tokens=total_tokens)
+        self.tables[child_id] = t
+        self.unpin(parent_id)
+        return t
 
     # ------------------------------------------------------------------
     @property
@@ -145,9 +223,21 @@ class PagedKVAllocator:
         return row
 
     def check_invariants(self) -> None:
-        """No page double-owned, free+owned == all (property tests)."""
-        owned = [p for t in self.tables.values() for p in t.pages]
-        assert len(owned) == len(set(owned)), "page double-allocated"
-        all_pages = set(owned) | set(self.free)
+        """Ownership counts match the share table, free+owned == all
+        (property tests)."""
+        counts: Dict[int, int] = {}
+        for t in list(self.tables.values()) + list(
+                self.lingering.values()):
+            for p in t.pages:
+                counts[p] = counts.get(p, 0) + 1
+        for p, c in counts.items():
+            assert c == self._shared.get(p, 1), \
+                f"page {p}: {c} owners, share table says " \
+                f"{self._shared.get(p, 1)}"
+        assert not (set(self._shared) - set(counts)), "stale share entry"
         assert len(self.free) == len(set(self.free)), "free-list dup"
-        assert all_pages == set(range(self.n_pages)), "page leak"
+        assert not (set(counts) & set(self.free)), "owned page in free"
+        assert set(counts) | set(self.free) == set(range(self.n_pages)), \
+            "page leak"
+        for sid in self.lingering:
+            assert self._pins.get(sid, 0) > 0, "unpinned lingering table"

@@ -115,8 +115,12 @@ class BatchPolicy:
         if not (batcher.n_waiting and batcher.free_count):
             return False
         head = batcher.waiting_head()
-        return batcher.kv.can_allocate(head.prompt_len
-                                       + head.max_new_tokens)
+        need = head.prompt_len + head.max_new_tokens
+        if (head.kv_parent is not None
+                and 0 < head.prefilled_tokens < head.prompt_len
+                and batcher.kv.has_seq(head.kv_parent)):
+            need -= head.prefilled_tokens    # prefix pages are forked
+        return batcher.kv.can_allocate(need)
 
     def admit_now(self, batcher: "ContinuousBatcher",
                   now: float) -> List[Tuple[int, "Request"]]:
@@ -131,6 +135,9 @@ class BatchPolicy:
         requests (disaggregated handoff) is handled here for every
         policy before its own planning."""
         plan = self._adopt(batcher)
+        if plan is not None:
+            return plan
+        plan = self._resume(batcher)
         if plan is not None:
             return plan
         return self._plan(batcher, now)
@@ -175,6 +182,46 @@ class BatchPolicy:
         if not picks:
             return None
         return PrefillPlan(picks=picks, pad_len=0, adopt=True)
+
+    def _resume_take(self, batcher: "ContinuousBatcher"):
+        """Admit a head-of-line workflow child whose KV prefix still
+        lives in the allocator (``kv_parent``): ``_take`` forks the
+        parent's prefix pages, so only the unprefilled remainder needs
+        fresh pages.  Returns ``(slot, request)`` or None.  A child
+        whose parent KV is gone (shed / evicted) falls back to a full
+        prefill."""
+        if not (batcher.n_waiting and batcher.free_count):
+            return None
+        head = batcher.waiting_head()
+        if not (0 < head.prefilled_tokens < head.prompt_len):
+            return None
+        if (head.kv_parent is None
+                or not batcher.kv.has_seq(head.kv_parent)):
+            head.prefilled_tokens = 0
+            head.kv_parent = None
+            return None
+        if not batcher.kv.can_allocate(
+                head.prompt_len + head.max_new_tokens
+                - head.prefilled_tokens):
+            return None                  # head-of-line KV block
+        slot = batcher._take(batcher._whead, head)
+        batcher._skip_tombstones()
+        return slot, head
+
+    def _resume(self, batcher: "ContinuousBatcher") \
+            -> Optional[PrefillPlan]:
+        """Plan the admitted child's prompt remainder as one exact
+        chunk: the compute phase attends to the reused prefix KV but
+        only processes the new tokens (the chunked-prefill cost
+        model)."""
+        taken = self._resume_take(batcher)
+        if taken is None:
+            return None
+        slot, head = taken
+        remainder = head.prompt_len - head.prefilled_tokens
+        return PrefillPlan(picks=[(slot, head)], pad_len=remainder,
+                           chunk_start=head.prefilled_tokens,
+                           chunk_len=remainder)
 
     # -- decode hooks -------------------------------------------------
     def decode_horizon_cap(self,
@@ -225,6 +272,8 @@ class SlotCountPolicy(BatchPolicy):
             if req is None:
                 i += 1
                 continue
+            if 0 < req.prefilled_tokens < req.prompt_len:
+                break                    # workflow child resumes at head
             if (head_bucket is not None and picks
                     and bucket_length(req.prompt_len) != head_bucket):
                 i += 1
@@ -277,6 +326,8 @@ class TokenBudgetPolicy(SlotCountPolicy):
             if req is None:
                 i += 1
                 continue
+            if 0 < req.prefilled_tokens < req.prompt_len:
+                break                    # workflow child resumes at head
             if (head_bucket is not None and picks
                     and bucket_length(req.prompt_len) != head_bucket):
                 i += 1
@@ -335,8 +386,10 @@ class LengthSortedPolicy(BatchPolicy):
         w = batcher._waiting
         i = batcher._whead
         while i < len(w) and len(cands) < self.window:
-            if w[i] is not None:
-                cands.append((i, w[i]))
+            r = w[i]
+            if r is not None and not (0 < r.prefilled_tokens
+                                      < r.prompt_len):
+                cands.append((i, r))     # resumable children excluded
             i += 1
         k = min(self.max_prefill_batch, batcher.free_count, len(cands))
         if k == 0:
@@ -398,6 +451,13 @@ class ChunkedPrefillPolicy(SlotCountPolicy):
     def note_decode(self):
         self._interleave = False
 
+    def _resume(self, batcher):
+        # admit only: the forked child lands as a partial slot, and
+        # _plan's existing partial path chunks the remainder starting
+        # from prefilled_tokens (in chunk_tokens pieces)
+        self._resume_take(batcher)
+        return None
+
     def decode_horizon_cap(self, batcher):
         # While a partial prefill is outstanding, decode one token at a
         # time so the next chunk is never delayed by a macro horizon.
@@ -451,6 +511,8 @@ class ChunkedPrefillPolicy(SlotCountPolicy):
             if req is None:
                 i += 1
                 continue
+            if 0 < req.prefilled_tokens < req.prompt_len:
+                break                    # workflow child resumes at head
             if req.prompt_len > self.chunk_tokens:
                 i += 1                   # long one chunks on its own later
                 continue

@@ -66,6 +66,7 @@ from repro.core import workload as W
 from repro.core.energy import EnergyModel, EnergyReport
 from repro.core.hardware import DeviceSpec, H100_SXM
 from repro.core.precision import PrecisionPolicy, make_policy
+from repro.batching.policy import SlotCountPolicy
 
 if TYPE_CHECKING:   # event-horizon boundaries (duck-typed at runtime)
     from repro.serving.scheduler import HorizonStop
@@ -796,9 +797,9 @@ def selfcheck(verbose: bool = True) -> int:
     # 1. analytic: conformance + default-engine parity
     analytic = AnalyticBackend(cfg)
     _conformance(analytic, reqs())
-    rep_default = ServeEngine(cfg, max_batch=4).run(reqs())
-    rep_explicit = ServeEngine(cfg, max_batch=4,
-                               backend=AnalyticBackend(cfg)).run(reqs())
+    rep_default = ServeEngine(cfg, batch_policy=SlotCountPolicy(max_batch=4)).run(reqs())
+    rep_explicit = ServeEngine(cfg,
+                               backend=AnalyticBackend(cfg), batch_policy=SlotCountPolicy(max_batch=4)).run(reqs())
     _check(rep_default.total_energy_j == rep_explicit.total_energy_j
            and rep_default.wall_time_s == rep_explicit.wall_time_s,
            "explicit AnalyticBackend diverges from the default engine")
@@ -820,11 +821,11 @@ def selfcheck(verbose: bool = True) -> int:
 
     # 2. replay: record the analytic run, replay it, compare
     rec = RecordingBackend(AnalyticBackend(cfg))
-    ServeEngine(cfg, max_batch=4, backend=rec).run(reqs())
+    ServeEngine(cfg, backend=rec, batch_policy=SlotCountPolicy(max_batch=4)).run(reqs())
     replay = ReplayBackend(rec.to_trace(device="h100-sxm",
                                         model=cfg.name))
     _conformance(replay, reqs())
-    rep_replay = ServeEngine(cfg, max_batch=4, backend=replay).run(reqs())
+    rep_replay = ServeEngine(cfg, backend=replay, batch_policy=SlotCountPolicy(max_batch=4)).run(reqs())
     drift = (rep_replay.total_energy_j
              / max(rep_default.total_energy_j, 1e-12))
     _check(0.9 < drift < 1.1,
@@ -846,8 +847,8 @@ def selfcheck(verbose: bool = True) -> int:
              for i in range(3)]
     backend = ExecutedBackend(rcfg, model, params, max_batch=4,
                               buf_len=32, fmt="float32")
-    rep = ServeEngine(rcfg, fmt="float32", max_batch=4, buf_len=32,
-                      backend=backend).run(ereqs)
+    rep = ServeEngine(rcfg, fmt="float32", buf_len=32,
+                      backend=backend, batch_policy=SlotCountPolicy(max_batch=4)).run(ereqs)
     _check(all(len(r.generated) == r.max_new_tokens
                for r in rep.requests),
            "executed backend did not generate real tokens")

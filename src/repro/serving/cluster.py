@@ -30,8 +30,9 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serving.engine import ServeEngine, ServeReport
-from repro.serving.requests import Request
+from repro.serving.engine import (ServeEngine, ServeReport,
+                                  _insert_pending)
+from repro.serving.requests import Request, RequestStatus
 from repro.serving.router import Router, make_router
 from repro.serving.scheduler import (HorizonStop, Scheduler,
                                      apply_schedule)
@@ -55,6 +56,9 @@ class ClusterReport:
     # the fleet energy bill — disaggregation is not free.
     handoff_energy_j: float = 0.0
     n_handoffs: int = 0
+    # workflow serving: per-task aggregation (repro.workflows.TaskReport)
+    # when a WorkflowSource drove the run
+    tasks: List = dataclasses.field(default_factory=list)
 
     # -- fleet energy ---------------------------------------------------
     @property
@@ -96,6 +100,21 @@ class ClusterReport:
         if self.n == 0:
             return 0.0
         return self.total_energy_j / self.n / 3600.0
+
+    @property
+    def mean_energy_per_token_wh(self) -> float:
+        """Fleet energy (incl. handoffs) per generated token, completed
+        requests only — 0.0 on an empty or fully-shed run."""
+        toks = sum(r.tokens_generated for r in self.completed)
+        if toks == 0:
+            return 0.0
+        return self.total_energy_j / 3600.0 / toks
+
+    @property
+    def prefix_reused_tokens(self) -> int:
+        """Prompt tokens fleet-wide whose KV was forked from a workflow
+        parent instead of recomputed."""
+        return sum(r.prefix_reused_tokens for r in self.replica_reports)
 
     @property
     def slo_attainment(self) -> float:
@@ -189,13 +208,25 @@ class ClusterEngine:
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
             scheduler: Optional[Scheduler] = None,
-            trace: Optional[PowerTrace] = None) -> ClusterReport:
+            trace: Optional[PowerTrace] = None,
+            source: Optional[object] = None) -> ClusterReport:
         """Serve a request stream across the fleet. A scheduler shapes
         and admits the *shared* stream before the router sees it, so
         shaping composes with routing; a planning scheduler also lets
         work-less replicas power-gate the known gaps (same effect as a
-        gating router, without changing placement)."""
+        gating router, without changing placement).
+
+        ``source`` is a :class:`~repro.workflows.WorkflowSource`: each
+        completion is reported back (with its replica), released
+        successors join the shared arrival stream, and a child forking
+        its parent's KV is affinity-routed to the parent's replica."""
         reqs, shed = apply_schedule(requests, scheduler)
+        if source is not None:
+            source.bind(disaggregated=self.disaggregated,
+                        page_size=self.replicas[0].batcher.kv.page_size,
+                        kv_get=lambda i: self.replicas[i].batcher.kv)
+            for r in shed:
+                source.on_shed(r)
         gate = self.router.gates_idle or (scheduler is not None
                                           and scheduler.plans_gaps)
         for i, eng in enumerate(self.replicas):
@@ -203,19 +234,37 @@ class ClusterEngine:
             eng._trace_replica = i
         try:
             if self.disaggregated:
-                return self._run_disaggregated(reqs, shed, gate)
-            return self._run(reqs, shed, gate)
+                rep = self._run_disaggregated(reqs, shed, gate,
+                                              source=source)
+            else:
+                rep = self._run(reqs, shed, gate, source=source)
         finally:
             for eng in self.replicas:
                 eng._trace = None
+        if source is not None:
+            rep.tasks = source.task_reports()
+        return rep
 
     def _run(self, reqs: List[Request], shed: List[Request],
-             gate: bool) -> ClusterReport:
+             gate: bool, source: Optional[object] = None
+             ) -> ClusterReport:
         for eng in self.replicas:
             eng.stream_start()
         pending = list(reqs)
         head = 0
+        seen = [0] * len(self.replicas)    # done cursors (source drain)
         self._gated = [False] * len(self.replicas)
+
+        def drain(i: int) -> None:
+            done = self.replicas[i]._stream.done
+            while seen[i] < len(done):
+                r = done[seen[i]]
+                seen[i] += 1
+                if r.status is RequestStatus.DONE:
+                    for child in source.on_finish(r, r.t_done,
+                                                  replica=i):
+                        _insert_pending(pending, head, child)
+
         while True:
             t_arr = (pending[head].effective_arrival
                      if head < len(pending) else None)
@@ -234,9 +283,24 @@ class ClusterEngine:
                 # arrival clock: a macro-step may run many decode steps
                 # at once but never past the point where this loop
                 # would have stopped stepping the replica
+                bound = t_arr
+                if source is not None:
+                    # conservative co-sim bound for dynamic releases:
+                    # any other steppable replica may complete a step
+                    # and release a successor no earlier than its own
+                    # clock, so never macro-step past it (the in-flight
+                    # step still completes, exactly like the
+                    # single-step loop) — this keeps macro_step on/off
+                    # field-for-field identical under workflows
+                    others = [e.stream_now for e in ready if e is not nxt]
+                    if others:
+                        o = min(others)
+                        bound = o if bound is None else min(bound, o)
                 nxt.stream_step(
-                    stop=None if t_arr is None
-                    else HorizonStop(t_arr, mode="clock"))
+                    stop=None if bound is None
+                    else HorizonStop(bound, mode="clock"))
+                if source is not None:
+                    drain(self.replicas.index(nxt))
                 continue
             if t_arr is None:
                 break
@@ -249,7 +313,10 @@ class ClusterEngine:
                         self._gated[j] = True
             req = pending[head]
             head += 1
-            i = self.router.select(req, self.replicas, t_arr)
+            aff = (source.route_affinity(req)
+                   if source is not None else None)
+            i = aff if aff is not None else \
+                self.router.select(req, self.replicas, t_arr)
             if self._gated[i]:
                 # waking a gated replica: clock ramp at idle power
                 # before it can serve again
@@ -276,8 +343,9 @@ class ClusterEngine:
 
     # -- disaggregated prefill/decode fleets ---------------------------
     def _run_disaggregated(self, reqs: List[Request],
-                           shed: List[Request],
-                           gate: bool) -> ClusterReport:
+                           shed: List[Request], gate: bool,
+                           source: Optional[object] = None
+                           ) -> ClusterReport:
         """Co-simulate a prefill pool and a decode pool.
 
         Arrivals route among the prefill replicas; the moment a prompt
@@ -315,6 +383,22 @@ class ClusterEngine:
         seq = 0
         hand_e = 0.0
         n_hand = 0
+        dseen = {id(e): 0 for e in self.decoders}
+
+        def drain_done(eng: ServeEngine) -> None:
+            # workflow completions surface on decode replicas only (a
+            # prefiller never finishes a request — it hands it off);
+            # released children re-enter through the shared arrival
+            # stream and route among the prefill pool like any arrival
+            done = eng._stream.done
+            i = self.replicas.index(eng)
+            while dseen[id(eng)] < len(done):
+                r = done[dseen[id(eng)]]
+                dseen[id(eng)] += 1
+                if r.status is RequestStatus.DONE:
+                    for child in source.on_finish(r, r.t_done,
+                                                  replica=i):
+                        _insert_pending(pending, head, child)
 
         def drain(eng: ServeEngine) -> None:
             nonlocal seq, hand_e, n_hand
@@ -359,10 +443,23 @@ class ClusterEngine:
             if cands:
                 eng, bound, is_prefiller = min(
                     cands, key=lambda c: c[0].stream_now)
+                if source is not None and not is_prefiller:
+                    # conservative co-sim bound for dynamic releases:
+                    # another decoder may complete and release a
+                    # successor no earlier than its own clock, so a
+                    # macro decode run must not overshoot it (the
+                    # in-flight step still completes) — keeps
+                    # macro_step on/off field-for-field identical
+                    others = [e.stream_now for e in self.decoders
+                              if e is not eng and e.stream_can_step()]
+                    if others:
+                        bound = min(bound, min(others))
                 eng.stream_step(stop=None if bound == inf
                                 else HorizonStop(bound, mode="clock"))
                 if is_prefiller:
                     drain(eng)
+                elif source is not None:
+                    drain_done(eng)
                 continue
             if t_hand <= t_arr:
                 if not events:

@@ -80,6 +80,22 @@ def _fold_many(inits: np.ndarray, values: np.ndarray) -> np.ndarray:
     return np.add.accumulate(buf, axis=1)[:, -1]
 
 
+def _insert_pending(pending: List[Request], head: int,
+                    req: Request) -> None:
+    """Insert a released workflow request into the still-unconsumed
+    suffix ``pending[head:]``, keeping it sorted by effective arrival
+    (ties go after existing entries: FIFO in release order)."""
+    t = req.effective_arrival
+    lo, hi = head, len(pending)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if pending[mid].effective_arrival <= t:
+            lo = mid + 1
+        else:
+            hi = mid
+    pending.insert(lo, req)
+
+
 @dataclasses.dataclass
 class ServeReport:
     requests: List[Request]
@@ -110,6 +126,11 @@ class ServeReport:
     prefill_effective_tokens: int = 0
     prefill_chunks: int = 0
     n_relayed: int = 0
+    # workflow serving: prompt tokens whose KV was forked from a parent
+    # request instead of recomputed, and per-task aggregation
+    # (repro.workflows.TaskReport) when a WorkflowSource drove the run
+    prefix_reused_tokens: int = 0
+    tasks: List = dataclasses.field(default_factory=list)
 
     @property
     def prefill_padding_fraction(self) -> float:
@@ -169,6 +190,15 @@ class ServeReport:
         # rows would silently deflate throughput with zero-token entries
         toks = sum(r.tokens_generated for r in self.completed)
         return toks / max(self.wall_time_s, 1e-12)
+
+    @property
+    def mean_energy_per_token_wh(self) -> float:
+        """Total (busy+idle+gated) energy per generated token, completed
+        requests only — 0.0 on an empty or fully-shed run."""
+        toks = sum(r.tokens_generated for r in self.completed)
+        if toks == 0:
+            return 0.0
+        return self.total_energy_j / 3600.0 / toks
 
     def latency_percentiles(self, qs: Sequence[float] = (50, 90, 99)
                             ) -> Dict[str, float]:
@@ -234,6 +264,7 @@ class _StreamState:
     prefill_effective: int = 0     # prompt tokens that needed computing
     prefill_chunks: int = 0
     n_relayed: int = 0
+    prefix_reused: int = 0         # prompt tokens served from forked KV
     # disaggregated serving: prefill-complete requests awaiting pickup
     # by the cluster loop (stream_take_handoffs drains this)
     handoffs: List[Request] = dataclasses.field(default_factory=list)
@@ -380,22 +411,36 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
             scheduler: Optional[Scheduler] = None,
-            trace: Optional[PowerTrace] = None) -> ServeReport:
+            trace: Optional[PowerTrace] = None,
+            source: Optional["object"] = None) -> ServeReport:
         """Serve a request list, optionally shaped/admitted by a
         :class:`~repro.serving.scheduler.Scheduler` and recorded onto a
-        :class:`~repro.serving.trace.PowerTrace` timeline."""
+        :class:`~repro.serving.trace.PowerTrace` timeline.
+
+        ``source`` is a :class:`~repro.workflows.WorkflowSource`: each
+        completion is reported back to it and any dependent requests it
+        releases join the arrival stream at their release times."""
         reqs, shed = apply_schedule(requests, scheduler)
+        if source is not None:
+            source.bind(sequential=(self.mode == "sequential"),
+                        page_size=self.batcher.kv.page_size,
+                        kv_get=lambda _i: self.batcher.kv)
+            for r in shed:
+                source.on_shed(r)
         self._trace = trace
         self._trace_replica = 0     # standalone run (cluster sets >0)
         plans_gaps = scheduler is not None and scheduler.plans_gaps
         try:
             if self.mode == "sequential":
-                rep = self._run_sequential(reqs)
+                rep = self._run_sequential(reqs, source=source)
             else:
-                rep = self._run_continuous(reqs, plans_gaps=plans_gaps)
+                rep = self._run_continuous(reqs, plans_gaps=plans_gaps,
+                                           source=source)
         finally:
             self._trace = None
         rep.shed = shed
+        if source is not None:
+            rep.tasks = source.task_reports()
         return rep
 
     def _record(self, state: str, t0: float, t1: float, energy_j: float,
@@ -405,11 +450,16 @@ class ServeEngine:
                                energy_j, batch)
 
     # ------------------------------------------------------------------
-    def _run_sequential(self, reqs: List[Request]) -> ServeReport:
+    def _run_sequential(self, reqs: List[Request],
+                        source: Optional[object] = None) -> ServeReport:
         self.backend.start()
         now, busy_e, idle_e, busy_t = 0.0, 0.0, 0.0, 0.0
         idle_t = 0.0
-        for r in reqs:
+        pending = list(reqs)
+        i = 0
+        while i < len(pending):
+            r = pending[i]
+            i += 1
             if r.effective_arrival > now:
                 gap = r.effective_arrival - now
                 res = self.backend.idle(gap, "idle")
@@ -444,34 +494,53 @@ class ServeEngine:
             r.t_done = now
             r.status = RequestStatus.DONE
             self.backend.finish_request(r)
-        return ServeReport(requests=reqs, total_energy_j=busy_e + idle_e,
+            if source is not None:
+                for child in source.on_finish(r, r.t_done):
+                    _insert_pending(pending, i, child)
+        return ServeReport(requests=pending,
+                           total_energy_j=busy_e + idle_e,
                            busy_energy_j=busy_e, idle_energy_j=idle_e,
                            wall_time_s=now, busy_time_s=busy_t,
                            idle_time_s=idle_t,
-                           mean_batch=1.0, n_prefill_batches=len(reqs),
+                           mean_batch=1.0,
+                           n_prefill_batches=len(pending),
                            n_decode_steps=sum(r.tokens_generated - 1
-                                              for r in reqs))
+                                              for r in pending))
 
     # ------------------------------------------------------------------
     def _run_continuous(self, reqs: List[Request],
-                        plans_gaps: bool = False) -> ServeReport:
+                        plans_gaps: bool = False,
+                        source: Optional[object] = None) -> ServeReport:
         self.stream_start()
         s = self._stream
-        n, head = len(reqs), 0          # head pointer, no pop(0) shifts
-        while len(s.done) < n:
-            while (head < n and reqs[head].effective_arrival
+        pending = list(reqs)
+        head = 0                        # head pointer, no pop(0) shifts
+        seen = 0                        # done-list cursor (source drain)
+        while len(s.done) < len(pending):
+            n = len(pending)
+            while (head < n and pending[head].effective_arrival
                     <= s.now + 1e-12):
-                self.stream_submit(reqs[head])
+                self.stream_submit(pending[head])
                 head += 1
             if self.stream_can_step():
                 # the next (shaped) release bounds the decode horizon
-                stop = (HorizonStop(reqs[head].effective_arrival,
+                stop = (HorizonStop(pending[head].effective_arrival,
                                     mode="admit")
                         if head < n else None)
                 self.stream_step(stop=stop)
+                if source is not None:
+                    # report completions; released successors join the
+                    # arrival stream at their release times
+                    done = s.done
+                    while seen < len(done):
+                        r = done[seen]
+                        seen += 1
+                        if r.status is RequestStatus.DONE:
+                            for child in source.on_finish(r, r.t_done):
+                                _insert_pending(pending, head, child)
                 continue
             if head < n:
-                t_next = reqs[head].effective_arrival
+                t_next = pending[head].effective_arrival
                 gap = t_next - s.now
                 wake = self.device.wake_latency_s
                 if plans_gaps and gap > wake:
@@ -571,9 +640,14 @@ class ServeEngine:
             s.n_prefills += 1
             if plan.is_chunk:
                 slot, r = picks[0]
-                if plan.chunk_start == 0:
+                if r.t_prefill_start < 0:
+                    # first compute phase — for a resumed workflow child
+                    # chunk_start > 0 here: those tokens were never
+                    # recomputed, their KV was forked from the parent
                     r.status = RequestStatus.RUNNING
                     r.t_prefill_start = s.now - res.latency_s
+                    if plan.chunk_start:
+                        s.prefix_reused += plan.chunk_start
                 r.energy_j += res.energy_j
                 s.prefill_chunks += 1
                 s.prefill_computed += plan.chunk_len
@@ -741,7 +815,8 @@ class ServeEngine:
             gated_time_s=s.gated_t, idle_time_s=s.idle_t,
             prefill_computed_tokens=s.prefill_computed,
             prefill_effective_tokens=s.prefill_effective,
-            prefill_chunks=s.prefill_chunks, n_relayed=s.n_relayed)
+            prefill_chunks=s.prefill_chunks, n_relayed=s.n_relayed,
+            prefix_reused_tokens=s.prefix_reused)
 
     def _finish_ready(self, b: ContinuousBatcher, done: List[Request],
                       now: float) -> None:

@@ -31,6 +31,11 @@ class Request:
     # request is handed to the engine at its raw arrival time)
     release_time: Optional[float] = None
     shed_reason: Optional[str] = None
+    # workflow membership (set by repro.workflows.WorkflowSource)
+    task_id: Optional[int] = None       # owning task graph
+    step: Optional[str] = None          # WorkflowStep name
+    kv_parent: Optional[int] = None     # req_id whose KV prefix we fork
+    kv_pin: int = 0                     # children that will fork our KV
     # lifecycle
     status: RequestStatus = RequestStatus.QUEUED
     t_prefill_start: float = -1.0

@@ -20,6 +20,7 @@ from repro.serving.backend import (AnalyticBackend, DecodeBatch,
                                    make_backend)
 from repro.serving.engine import ServeEngine, ServeReport
 from repro.serving.requests import Request
+from repro.batching.policy import SlotCountPolicy
 
 LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
 DATA = os.path.join(os.path.dirname(__file__), "data")
@@ -51,9 +52,9 @@ class TestGoldenParity:
         assert spec.run().to_json() == rec["result"]
 
     def test_explicit_analytic_backend_is_default(self):
-        a = ServeEngine(LLAMA8B, max_batch=8).run(_reqs(20))
-        b = ServeEngine(LLAMA8B, max_batch=8,
-                        backend=AnalyticBackend(LLAMA8B)).run(_reqs(20))
+        a = ServeEngine(LLAMA8B, batch_policy=SlotCountPolicy(max_batch=8)).run(_reqs(20))
+        b = ServeEngine(LLAMA8B,
+                        backend=AnalyticBackend(LLAMA8B), batch_policy=SlotCountPolicy(max_batch=8)).run(_reqs(20))
         assert a.total_energy_j == b.total_energy_j
         assert a.wall_time_s == b.wall_time_s
         assert a.busy_energy_j == b.busy_energy_j
@@ -119,10 +120,10 @@ class TestReplay:
         """Record an analytic run, replay it through the same
         scheduler: the report reproduces within aggregation noise."""
         rec = RecordingBackend(AnalyticBackend(LLAMA8B))
-        ref = ServeEngine(LLAMA8B, max_batch=8, backend=rec).run(_reqs(24))
+        ref = ServeEngine(LLAMA8B, backend=rec, batch_policy=SlotCountPolicy(max_batch=8)).run(_reqs(24))
         replay = ReplayBackend(rec.to_trace(model=LLAMA8B.name))
-        rep = ServeEngine(LLAMA8B, max_batch=8,
-                          backend=replay).run(_reqs(24))
+        rep = ServeEngine(LLAMA8B,
+                          backend=replay, batch_policy=SlotCountPolicy(max_batch=8)).run(_reqs(24))
         assert rep.total_energy_j == pytest.approx(
             ref.total_energy_j, rel=0.02)
         assert rep.wall_time_s == pytest.approx(ref.wall_time_s, rel=0.02)
@@ -130,8 +131,8 @@ class TestReplay:
 
     def test_deterministic(self):
         backend = ReplayBackend.from_json(FIXTURE)
-        a = ServeEngine(LLAMA8B, max_batch=8, backend=backend).run(_reqs(16))
-        b = ServeEngine(LLAMA8B, max_batch=8, backend=backend).run(_reqs(16))
+        a = ServeEngine(LLAMA8B, backend=backend, batch_policy=SlotCountPolicy(max_batch=8)).run(_reqs(16))
+        b = ServeEngine(LLAMA8B, backend=backend, batch_policy=SlotCountPolicy(max_batch=8)).run(_reqs(16))
         assert a.total_energy_j == b.total_energy_j
         assert a.wall_time_s == b.wall_time_s
 
@@ -167,7 +168,7 @@ class TestReplay:
         reqs = [Request(req_id=i, prompt=None, prompt_len=64,
                         max_new_tokens=4, arrival_time=0.0)
                 for i in range(4)]
-        ServeEngine(LLAMA8B, max_batch=4, backend=rec).run(reqs)
+        ServeEngine(LLAMA8B, backend=rec, batch_policy=SlotCountPolicy(max_batch=4)).run(reqs)
         trace = rec.to_trace()
         assert trace["idle_power_w"] == H100_SXM.idle_power
         assert trace["gated_power_w"] == H100_SXM.gated_power
@@ -177,7 +178,7 @@ class TestReplay:
         hash cannot see trace content, so run_spec refuses to cache."""
         from repro.sweep import run_spec
         rec = RecordingBackend(AnalyticBackend(LLAMA8B))
-        ServeEngine(LLAMA8B, max_batch=4, backend=rec).run(_reqs(8))
+        ServeEngine(LLAMA8B, backend=rec, batch_policy=SlotCountPolicy(max_batch=4)).run(_reqs(8))
         path = str(tmp_path / "trace.json")
         trace = rec.dump(path)
         spec = ExperimentSpec(model="llama-3.1-8b", backend="replay",
@@ -198,14 +199,14 @@ class TestReplay:
         scaled = H100_SXM.with_freq_scale(0.5)
         inner = AnalyticBackend(LLAMA8B, device=scaled)
         rec = RecordingBackend(inner)
-        eng = ServeEngine(LLAMA8B, max_batch=4, backend=rec)
+        eng = ServeEngine(LLAMA8B, backend=rec, batch_policy=SlotCountPolicy(max_batch=4))
         # routers/schedulers must price with the inner backend's device
         assert eng.device is scaled
         assert eng.energy is inner.energy
 
     def test_recording_emits_valid_schema(self, tmp_path):
         rec = RecordingBackend(AnalyticBackend(LLAMA8B))
-        ServeEngine(LLAMA8B, max_batch=4, backend=rec).run(_reqs(8))
+        ServeEngine(LLAMA8B, backend=rec, batch_policy=SlotCountPolicy(max_batch=4)).run(_reqs(8))
         trace = rec.dump(str(tmp_path / "t.json"), device="h100-sxm")
         assert trace["schema"] == REPLAY_SCHEMA
         assert trace["prefill"] and trace["decode"]
@@ -266,16 +267,14 @@ class TestExecuted:
     def test_backend_kwarg_matches_legacy_execute(self):
         cfg, m, params = self._setup()
         legacy = ServeEngine(cfg, fmt="float32", mode="continuous",
-                             max_batch=4, max_prefill_batch=2,
                              execute=True, model=m, params=params,
-                             buf_len=32)
+                             buf_len=32, batch_policy=SlotCountPolicy(max_batch=4, max_prefill_batch=2))
         rep_a = legacy.run(self._prompts(cfg))
         assert isinstance(legacy.backend, ExecutedBackend)
         explicit = ServeEngine(
-            cfg, fmt="float32", mode="continuous", max_batch=4,
-            max_prefill_batch=2,
+            cfg, fmt="float32", mode="continuous",
             backend=ExecutedBackend(cfg, m, params, max_batch=4,
-                                    buf_len=32, fmt="float32"))
+                                    buf_len=32, fmt="float32"), batch_policy=SlotCountPolicy(max_batch=4, max_prefill_batch=2))
         rep_b = explicit.run(self._prompts(cfg))
         assert explicit.execute
         # identical analytic clocks AND identical real generations
@@ -415,7 +414,7 @@ class TestSpecAxes:
 # ---------------------------------------------------------------------------
 class TestReportGuards:
     def test_empty_run_all_aggregates_finite(self):
-        rep = ServeEngine(LLAMA8B, max_batch=4).run([])
+        rep = ServeEngine(LLAMA8B, batch_policy=SlotCountPolicy(max_batch=4)).run([])
         assert rep.tokens_per_s == 0.0
         assert rep.mean_energy_per_request_wh == 0.0
         for v in rep.summary().values():

@@ -12,6 +12,7 @@ from repro.serving import (ClusterEngine, Request, ServeEngine,
                            burst_arrivals, fixed_arrivals, make_cluster,
                            make_router, poisson_arrivals)
 from repro.serving.requests import RequestStatus
+from repro.batching.policy import SlotCountPolicy
 
 LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
 
@@ -73,8 +74,7 @@ class TestClusterInvariants:
         alignment (none with one replica). Tied/simultaneous arrivals
         must form the same prefill batches as the single-engine loop."""
         n = len(arrivals)
-        eng_rep = ServeEngine(LLAMA8B, mode="continuous",
-                              max_batch=8).run(_reqs(n, arrivals))
+        eng_rep = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=8)).run(_reqs(n, arrivals))
         cl_rep = make_cluster(LLAMA8B, 1, policy="round_robin",
                               max_batch=8,
                               fmt="bfloat16").run(_reqs(n, arrivals))
@@ -86,8 +86,8 @@ class TestClusterInvariants:
                                                    rel=1e-9)
 
     def test_deadlock_detection(self):
-        eng = ServeEngine(LLAMA8B, mode="continuous", max_batch=4,
-                          kv_pages=2, page_size=8)
+        eng = ServeEngine(LLAMA8B, mode="continuous",
+                          kv_pages=2, page_size=8, batch_policy=SlotCountPolicy(max_batch=4))
         cl = ClusterEngine([eng], make_router("round_robin"))
         with pytest.raises(RuntimeError, match="deadlock"):
             cl.run(_reqs(1, [0.0], plen=800, out=16))
@@ -189,18 +189,16 @@ class TestHeterogeneousFleet:
     def test_energy_aware_prefers_cheaper_format(self):
         """bf16 replicas are cheaper per marginal joule than fp32, so
         the energy-aware router should load them first."""
-        fleet = [ServeEngine(LLAMA8B, fmt="float32", mode="continuous",
-                             max_batch=16),
-                 ServeEngine(LLAMA8B, fmt="bfloat16", mode="continuous",
-                             max_batch=16)]
+        fleet = [ServeEngine(LLAMA8B, fmt="float32", mode="continuous", batch_policy=SlotCountPolicy(max_batch=16)),
+                 ServeEngine(LLAMA8B, fmt="bfloat16", mode="continuous", batch_policy=SlotCountPolicy(max_batch=16))]
         cl = ClusterEngine(fleet, make_router("energy_aware"))
         rep = cl.run(_reqs(12, burst_arrivals(12, 4, 2.0)))
         n_fp32, n_bf16 = rep.requests_per_replica
         assert n_bf16 > n_fp32
 
     def test_mixed_max_batch_completes(self):
-        fleet = [ServeEngine(LLAMA8B, mode="continuous", max_batch=4),
-                 ServeEngine(LLAMA8B, mode="continuous", max_batch=16)]
+        fleet = [ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=4)),
+                 ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=16))]
         cl = ClusterEngine(fleet, make_router("least_loaded"))
         rep = cl.run(_reqs(24, poisson_arrivals(24, 30.0, seed=4)))
         assert all(r.status == RequestStatus.DONE for r in rep.requests)

@@ -25,6 +25,7 @@ from repro.serving.scheduler import HorizonStop, make_scheduler
 from repro.serving.trace import PowerTrace
 from repro.serving.arrival import (burst_arrivals, paper_requests,
                                    poisson_arrivals)
+from repro.batching.policy import SlotCountPolicy
 
 LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
 
@@ -60,8 +61,9 @@ def _pair(seed, *, n=40, arrival="poisson", engine_kw=None, run_kw=None,
     shape = dict(shape or {})
     out = []
     for macro in (False, True):
-        eng = ServeEngine(LLAMA8B, macro_step=macro,
-                          **{"max_batch": 16, **engine_kw})
+        kw = {"max_batch": 16, **engine_kw}
+        kw["batch_policy"] = SlotCountPolicy(max_batch=kw.pop("max_batch"))
+        eng = ServeEngine(LLAMA8B, macro_step=macro, **kw)
         out.append(eng.run(_mix(seed, n=n, arrival=arrival, **shape),
                            **run_kw_f))
     return out
@@ -101,7 +103,7 @@ class TestEngineParity:
         releases bound the decode horizons."""
         reports = []
         for macro in (False, True):
-            eng = ServeEngine(LLAMA8B, max_batch=16, macro_step=macro)
+            eng = ServeEngine(LLAMA8B, macro_step=macro, batch_policy=SlotCountPolicy(max_batch=16))
             reports.append(eng.run(_mix(5, arrival="burst"),
                                    scheduler=make_scheduler(policy, **kw)))
         assert _fields(reports[0]) == _fields(reports[1])
@@ -110,7 +112,7 @@ class TestEngineParity:
         traces = []
         for macro in (False, True):
             tr = PowerTrace()
-            ServeEngine(LLAMA8B, max_batch=16, macro_step=macro).run(
+            ServeEngine(LLAMA8B, macro_step=macro, batch_policy=SlotCountPolicy(max_batch=16)).run(
                 _mix(1, arrival="burst"), trace=tr)
             traces.append(tr)
         a, b = traces
@@ -161,8 +163,8 @@ class TestEngineParity:
                 for i in range(4)]
         errs = []
         for macro in (False, True):
-            eng = ServeEngine(LLAMA8B, max_batch=4, kv_pages=16,
-                              page_size=64, macro_step=macro)
+            eng = ServeEngine(LLAMA8B, kv_pages=16,
+                              page_size=64, macro_step=macro, batch_policy=SlotCountPolicy(max_batch=4))
             with pytest.raises(MemoryError):
                 eng.run([dataclasses.replace(r) for r in reqs])
             errs.append(True)
@@ -177,8 +179,8 @@ class TestClusterParity:
                                         "shortest_work", "energy_aware"])
     def test_heterogeneous_fleet_bit_identical(self, policy):
         def fleet(macro):
-            engines = [ServeEngine(LLAMA8B, max_batch=mb, fmt=fmt,
-                                   macro_step=macro)
+            engines = [ServeEngine(LLAMA8B, fmt=fmt,
+                                   macro_step=macro, batch_policy=SlotCountPolicy(max_batch=mb))
                        for mb, fmt in [(8, "bfloat16"), (16, "bfloat16"),
                                        (8, "int8")]]
             return ClusterEngine(engines, make_router(policy))
@@ -247,8 +249,8 @@ class TestDecodeRun:
         reports = []
         for macro in (False, True):
             backend = _StepOnlyBackend()
-            eng = ServeEngine(LLAMA8B, max_batch=8, macro_step=macro,
-                              backend=backend)
+            eng = ServeEngine(LLAMA8B, macro_step=macro,
+                              backend=backend, batch_policy=SlotCountPolicy(max_batch=8))
             reports.append(eng.run(_mix(9, n=16)))
             assert backend.step_calls == reports[-1].n_decode_steps
         assert _fields(reports[0]) == _fields(reports[1])
@@ -310,10 +312,9 @@ class TestExecutedMacro:
 
         reports = []
         for macro in (False, True):
-            eng = ServeEngine(cfg, fmt="float32", max_batch=4,
-                              max_prefill_batch=2, execute=True,
+            eng = ServeEngine(cfg, fmt="float32", execute=True,
                               model=model, params=params, buf_len=32,
-                              macro_step=macro)
+                              macro_step=macro, batch_policy=SlotCountPolicy(max_batch=4, max_prefill_batch=2))
             reports.append(eng.run(prompts()))
         a, b = reports
         assert _fields(a) == _fields(b)

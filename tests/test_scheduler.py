@@ -13,6 +13,7 @@ from repro.serving import (EnergyBudgetScheduler, PowerTrace, Request,
                            burst_arrivals, estimate_service_rate,
                            fixed_arrivals, make_cluster, make_scheduler,
                            poisson_arrivals, uniform_random_arrivals)
+from repro.batching.policy import SlotCountPolicy
 
 LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
 
@@ -152,9 +153,8 @@ class TestWindow:
         than the unshaped dribble."""
         def reqs():
             return _reqs(fixed_arrivals(16, 0.15), plen=256, out=8)
-        plain = ServeEngine(LLAMA8B, mode="continuous",
-                            max_batch=16).run(reqs())
-        shaped = ServeEngine(LLAMA8B, mode="continuous", max_batch=16) \
+        plain = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=16)).run(reqs())
+        shaped = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=16)) \
             .run(reqs(), scheduler=make_scheduler("window", window_s=1.2))
         assert shaped.n_prefill_batches < plain.n_prefill_batches
 
@@ -198,7 +198,7 @@ class TestDeadline:
         reqs = _reqs([0.0] * 5, out=8)
         for r in reqs:
             r.deadline_s = 1.5
-        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=8).run(
+        rep = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=8)).run(
             reqs, scheduler=make_scheduler("deadline",
                                            service_rate_per_s=1.0))
         assert rep.n == 2 and rep.n_shed == 3
@@ -236,8 +236,7 @@ class TestEnergyBudget:
                    for r in res.shed)
 
     def test_for_engine_matches_engine_model(self):
-        eng = ServeEngine(LLAMA8B, fmt="float32", mode="continuous",
-                          max_batch=8)
+        eng = ServeEngine(LLAMA8B, fmt="float32", mode="continuous", batch_policy=SlotCountPolicy(max_batch=8))
         s = EnergyBudgetScheduler.for_engine(eng, 0.01)
         assert s.energy is eng.energy
         assert s.max_batch == 8 and s.stack == eng.stack
@@ -246,9 +245,8 @@ class TestEnergyBudget:
 class TestEngineIntegration:
     def test_passthrough_matches_no_scheduler(self):
         arr = burst_arrivals(24, 6, 1.0)
-        plain = ServeEngine(LLAMA8B, mode="continuous",
-                            max_batch=8).run(_reqs(arr))
-        shaped = ServeEngine(LLAMA8B, mode="continuous", max_batch=8) \
+        plain = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=8)).run(_reqs(arr))
+        shaped = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=8)) \
             .run(_reqs(arr), scheduler=make_scheduler("passthrough"))
         assert shaped.total_energy_j == pytest.approx(
             plain.total_energy_j, rel=1e-9)
@@ -257,7 +255,7 @@ class TestEngineIntegration:
 
     @pytest.mark.parametrize("mode", ["sequential", "continuous"])
     def test_all_released_complete(self, mode):
-        rep = ServeEngine(LLAMA8B, mode=mode, max_batch=8).run(
+        rep = ServeEngine(LLAMA8B, mode=mode, batch_policy=SlotCountPolicy(max_batch=8)).run(
             _reqs(poisson_arrivals(20, 25.0, seed=1), seed=2),
             scheduler=make_scheduler("paced", rate_per_s=20.0, burst=2))
         assert rep.n == 20
@@ -270,9 +268,8 @@ class TestEngineIntegration:
         """A planning scheduler lets the engine gate known quiet gaps;
         passthrough burns full idle power over the same gaps."""
         arr = burst_arrivals(24, 8, 4.0)
-        plain = ServeEngine(LLAMA8B, mode="continuous",
-                            max_batch=16).run(_reqs(arr))
-        shaped = ServeEngine(LLAMA8B, mode="continuous", max_batch=16) \
+        plain = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=16)).run(_reqs(arr))
+        shaped = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=16)) \
             .run(_reqs(arr), scheduler=make_scheduler("window",
                                                       window_s=0.5))
         assert plain.gated_energy_j == 0.0
@@ -280,7 +277,7 @@ class TestEngineIntegration:
         assert shaped.total_energy_j < plain.total_energy_j
 
     def test_energy_conservation_with_scheduler(self):
-        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=8).run(
+        rep = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=8)).run(
             _reqs(burst_arrivals(20, 5, 2.0)),
             scheduler=make_scheduler("paced", rate_per_s=15.0, burst=4))
         attributed = sum(r.energy_j for r in rep.requests)

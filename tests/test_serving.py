@@ -14,6 +14,7 @@ from repro.serving import (ServeEngine, Request, fixed_arrivals,
                            uniform_random_arrivals, poisson_arrivals,
                            burst_arrivals)
 from repro.serving.requests import RequestStatus
+from repro.batching.policy import SlotCountPolicy
 
 LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
 
@@ -48,7 +49,7 @@ class TestArrivalPatterns:
 class TestEngineSim:
     @pytest.mark.parametrize("mode", ["sequential", "continuous"])
     def test_all_requests_complete(self, mode):
-        eng = ServeEngine(LLAMA8B, mode=mode, max_batch=8)
+        eng = ServeEngine(LLAMA8B, mode=mode, batch_policy=SlotCountPolicy(max_batch=8))
         reqs = _reqs(20, uniform_random_arrivals(20, 0.0, 0.1))
         rep = eng.run(reqs)
         assert all(r.status == RequestStatus.DONE for r in rep.requests)
@@ -61,14 +62,13 @@ class TestEngineSim:
         reqs_a = _reqs(60, [0.0] * 60, out=32)
         reqs_b = _reqs(60, [0.0] * 60, out=32)
         seq = ServeEngine(LLAMA8B, mode="sequential").run(reqs_a)
-        con = ServeEngine(LLAMA8B, mode="continuous",
-                          max_batch=32).run(reqs_b)
+        con = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=32)).run(reqs_b)
         assert (con.mean_energy_per_request_wh
                 < seq.mean_energy_per_request_wh / 5)
 
     def test_energy_conservation(self):
         """Attributed per-request energy sums to busy energy."""
-        eng = ServeEngine(LLAMA8B, mode="continuous", max_batch=8)
+        eng = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=8))
         rep = eng.run(_reqs(25, fixed_arrivals(25, 0.05)))
         attributed = sum(r.energy_j for r in rep.requests)
         assert attributed == pytest.approx(rep.busy_energy_j, rel=1e-6)
@@ -81,14 +81,13 @@ class TestEngineSim:
         rng = np.random.default_rng(seed)
         arrivals = np.cumsum(rng.exponential(0.05, n)).tolist()
         reqs = _reqs(n, arrivals, out=8, rng=rng)
-        rep = ServeEngine(LLAMA8B, mode="continuous",
-                          max_batch=4).run(reqs)
+        rep = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=4)).run(reqs)
         assert all(r.status == RequestStatus.DONE for r in rep.requests)
         assert rep.wall_time_s >= max(arrivals)
 
     def test_deadlock_detection(self):
-        eng = ServeEngine(LLAMA8B, mode="continuous", max_batch=4,
-                          kv_pages=2, page_size=8)
+        eng = ServeEngine(LLAMA8B, mode="continuous",
+                          kv_pages=2, page_size=8, batch_policy=SlotCountPolicy(max_batch=4))
         with pytest.raises(RuntimeError, match="deadlock"):
             eng.run(_reqs(1, [0.0], plen=800, out=16))
 
@@ -110,9 +109,8 @@ class TestEngineExecute:
         reqs = [Request(req_id=i, prompt=p, prompt_len=len(p),
                         max_new_tokens=5, arrival_time=0.0)
                 for i, p in enumerate(prompts)]
-        eng = ServeEngine(cfg, mode="continuous", max_batch=4,
-                          max_prefill_batch=2, execute=True, model=m,
-                          params=params, buf_len=32)
+        eng = ServeEngine(cfg, mode="continuous", execute=True, model=m,
+                          params=params, buf_len=32, batch_policy=SlotCountPolicy(max_batch=4, max_prefill_batch=2))
         eng.run(reqs)
         # reference: sequential greedy generation per request
         for r in reqs:

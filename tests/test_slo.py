@@ -11,6 +11,7 @@ from repro.serving import (BATCH, INTERACTIVE, Request, ServeEngine,
                            SLOTier, STANDARD, assign_slos, attainment,
                            estimate_request_latency, get_tier,
                            make_cluster, make_scheduler, slo_summary)
+from repro.batching.policy import SlotCountPolicy
 
 LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
 
@@ -92,7 +93,7 @@ class TestEstimates:
         discrete-event engine serving one request."""
         est = estimate_request_latency(LLAMA8B, prompt_len=512,
                                        new_tokens=64, batch=1)
-        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=1).run(
+        rep = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=1)).run(
             [_req(0, prompt_len=512, max_new_tokens=64)])
         real = rep.requests[0].latency
         assert real / 3 < est < real * 3
@@ -108,7 +109,7 @@ class TestEmptyReportGuards:
                 assert math.isfinite(v), k
 
     def test_engine_empty_run(self):
-        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=4).run([])
+        rep = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=4)).run([])
         assert rep.mean_energy_per_request_wh == 0.0
         assert rep.mean_latency_s == 0.0
         assert rep.mean_ttft_s == 0.0
@@ -119,7 +120,7 @@ class TestEmptyReportGuards:
 
     def test_engine_fully_shed_run(self):
         reqs = [_req(i, deadline_s=0.01) for i in range(5)]
-        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=4).run(
+        rep = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=4)).run(
             reqs, scheduler=make_scheduler("deadline",
                                            service_rate_per_s=1.0,
                                            est_latency_s=10.0))

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.batching.policy import SlotCountPolicy
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.models import build_model
@@ -46,8 +47,8 @@ def test_checkpoint_then_serve(tmp_path):
     prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
     reqs = [Request(req_id=0, prompt=prompt, prompt_len=8,
                     max_new_tokens=4, arrival_time=0.0)]
-    eng = ServeEngine(cfg, mode="continuous", max_batch=2, execute=True,
-                      model=m, params=params2, buf_len=32)
+    eng = ServeEngine(cfg, mode="continuous", execute=True,
+                      model=m, params=params2, buf_len=32, batch_policy=SlotCountPolicy(max_batch=2))
     rep = eng.run(reqs)
     assert len(rep.requests[0].generated) == 4
 
@@ -80,8 +81,7 @@ def test_paper_headline_through_full_stack():
         [Request(req_id=i, prompt=None, prompt_len=256,
                  max_new_tokens=32, arrival_time=0.0)
          for i in range(80)])
-    opt = ServeEngine(LLAMA8B, fmt="bfloat16", mode="continuous",
-                      max_batch=64).run(reqs())
+    opt = ServeEngine(LLAMA8B, fmt="bfloat16", mode="continuous", batch_policy=SlotCountPolicy(max_batch=64)).run(reqs())
     ratio = (naive.mean_energy_per_request_wh
              / opt.mean_energy_per_request_wh)
     assert ratio >= 10

@@ -8,6 +8,7 @@ from repro.configs.paper_zoo import PAPER_MODELS
 from repro.core.hardware import H100_SXM
 from repro.serving import (PowerTrace, Request, ServeEngine, STATES,
                            burst_arrivals, make_scheduler)
+from repro.batching.policy import SlotCountPolicy
 
 LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
 
@@ -68,7 +69,7 @@ class TestRecorder:
 class TestEngineAccounting:
     def _run(self, scheduler=None, mode="continuous"):
         tr = PowerTrace()
-        rep = ServeEngine(LLAMA8B, mode=mode, max_batch=8).run(
+        rep = ServeEngine(LLAMA8B, mode=mode, batch_policy=SlotCountPolicy(max_batch=8)).run(
             _reqs(burst_arrivals(16, 4, 2.0)), scheduler=scheduler,
             trace=tr)
         return rep, tr
@@ -111,7 +112,7 @@ class TestEngineAccounting:
         assert segs[-1].t1 == pytest.approx(rep.wall_time_s, abs=1e-9)
 
     def test_trace_detached_after_run(self):
-        eng = ServeEngine(LLAMA8B, mode="continuous", max_batch=8)
+        eng = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=8))
         tr = PowerTrace()
         eng.run(_reqs([0.0] * 4), trace=tr)
         n = len(tr.segments)
@@ -122,7 +123,7 @@ class TestEngineAccounting:
 class TestExport:
     def test_json_roundtrip(self, tmp_path):
         tr = PowerTrace()
-        rep = ServeEngine(LLAMA8B, mode="continuous", max_batch=8).run(
+        rep = ServeEngine(LLAMA8B, mode="continuous", batch_policy=SlotCountPolicy(max_batch=8)).run(
             _reqs(burst_arrivals(8, 4, 1.0)),
             scheduler=make_scheduler("paced", rate_per_s=10.0, burst=4),
             trace=tr)

@@ -1,0 +1,754 @@
+"""Workflow subsystem tests: DAG validation, template determinism,
+release ordering, prefix-reuse KV accounting conservation, per-task
+energy partition, spec-axis serialization, macro-step parity for
+workflow-driven runs, and the ``mean_energy_per_token_wh`` satellite
+guards."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, RunResult
+from repro.batching.policy import ChunkedPrefillPolicy, SlotCountPolicy
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.serving.arrival import poisson_arrivals
+from repro.serving.cluster import ClusterEngine, make_cluster
+from repro.serving.engine import ServeEngine, ServeReport
+from repro.serving.requests import Request, RequestStatus
+from repro.serving.scheduler import make_scheduler
+from repro.workflows import (WORKFLOW_TEMPLATES, TaskReport, Workflow,
+                             WorkflowSource, WorkflowStep, make_workflow)
+
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+QWEN05B = PAPER_MODELS["qwen2.5-0.5b"]
+
+
+def _step(name, deps=(), prefix_of=None, plen=64, out=8, think=0.0):
+    return WorkflowStep(name, prompt_len=plen, max_new_tokens=out,
+                        deps=tuple(deps), prefix_of=prefix_of,
+                        think_time_s=think)
+
+
+def _diamond():
+    return Workflow(name="d", steps=(
+        _step("a"),
+        _step("b", deps=("a",), think=0.5),
+        _step("c", deps=("a",), think=0.25),
+        _step("d", deps=("b", "c"))))
+
+
+def _source(template="agent_loop", n=5, seed=0, rate=3.0, reuse=True,
+            vocab=None, **params):
+    """Fresh n-task source (sources are single-use per run)."""
+    rng = np.random.default_rng(seed)
+    wfs = [make_workflow(template, rng, **params) for _ in range(n)]
+    arr = [float(t) for t in poisson_arrivals(n, rate, seed=seed)]
+    return WorkflowSource(wfs, arr, reuse_prefix=reuse,
+                         vocab_size=vocab, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# DAG validation
+# ---------------------------------------------------------------------------
+class TestWorkflowValidation:
+    def test_empty_workflow_rejected(self):
+        with pytest.raises(ValueError, match="no steps"):
+            Workflow(name="empty", steps=())
+
+    def test_duplicate_step_names_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            Workflow(name="w", steps=(_step("a"), _step("a")))
+
+    def test_unknown_dep_rejected(self):
+        with pytest.raises(ValueError, match="unknown dep"):
+            Workflow(name="w", steps=(_step("a", deps=("ghost",)),))
+
+    def test_self_dependency_rejected(self):
+        with pytest.raises(ValueError, match="depends on itself"):
+            Workflow(name="w", steps=(_step("a", deps=("a",)),))
+
+    def test_cycle_rejected(self):
+        with pytest.raises(ValueError, match="cycle"):
+            Workflow(name="w", steps=(
+                _step("a", deps=("b",)), _step("b", deps=("a",))))
+
+    def test_prefix_of_must_be_a_dep(self):
+        with pytest.raises(ValueError, match="prefix_of"):
+            Workflow(name="w", steps=(
+                _step("a"), _step("b"),
+                _step("c", deps=("a",), prefix_of="b")))
+
+    @pytest.mark.parametrize("bad", [0, -3])
+    def test_prompt_len_positive(self, bad):
+        with pytest.raises(ValueError, match="prompt_len"):
+            Workflow(name="w", steps=(_step("a", plen=bad),))
+
+    def test_max_new_tokens_positive(self):
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            Workflow(name="w", steps=(_step("a", out=0),))
+
+    def test_negative_think_time_rejected(self):
+        with pytest.raises(ValueError, match="think_time_s"):
+            Workflow(name="w", steps=(_step("a", think=-0.1),))
+
+    def test_list_steps_coerced_to_tuple(self):
+        wf = Workflow(name="w", steps=[_step("a")])
+        assert isinstance(wf.steps, tuple)
+
+
+# ---------------------------------------------------------------------------
+# graph queries
+# ---------------------------------------------------------------------------
+class TestWorkflowGraph:
+    def test_topo_order_respects_deps(self):
+        wf = _diamond()
+        pos = {n: i for i, n in enumerate(wf.topo_order)}
+        for s in wf.steps:
+            for d in s.deps:
+                assert pos[d] < pos[s.name]
+
+    def test_roots_and_successors(self):
+        wf = _diamond()
+        assert tuple(s.name for s in wf.roots) == ("a",)
+        succ = wf.successors()
+        assert set(succ["a"]) == {"b", "c"}
+        assert succ["d"] == ()
+
+    def test_step_lookup_and_keyerror(self):
+        wf = _diamond()
+        assert wf.step("b").think_time_s == 0.5
+        with pytest.raises(KeyError):
+            wf.step("nope")
+
+    def test_token_totals(self):
+        wf = _diamond()
+        assert wf.total_prompt_tokens == 4 * 64
+        assert wf.total_new_tokens == 4 * 8
+
+    def test_critical_path_diamond(self):
+        # a=1; b = 1+0.5+2; c = 1+0.25+5; d = max(b,c)+1 = 7.25
+        wf = _diamond()
+        cp = wf.critical_path({"a": 1.0, "b": 2.0, "c": 5.0, "d": 1.0})
+        assert cp == pytest.approx(7.25)
+
+    def test_critical_path_missing_service_counts_zero(self):
+        # only think times remain: a=0, b=0.5, c=0.25, d=max(b,c)
+        wf = _diamond()
+        assert wf.critical_path({}) == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# templates
+# ---------------------------------------------------------------------------
+class TestTemplates:
+    @pytest.mark.parametrize("name", sorted(WORKFLOW_TEMPLATES))
+    def test_template_deterministic_under_seed(self, name):
+        a = make_workflow(name, np.random.default_rng(7))
+        b = make_workflow(name, np.random.default_rng(7))
+        assert a == b
+
+    @pytest.mark.parametrize("name", sorted(WORKFLOW_TEMPLATES))
+    def test_template_seed_sensitivity(self, name):
+        a = make_workflow(name, np.random.default_rng(1))
+        b = make_workflow(name, np.random.default_rng(2))
+        assert a != b          # shapes are drawn from the rng
+
+    def test_unknown_template_rejected(self):
+        with pytest.raises(ValueError, match="unknown workflow template"):
+            make_workflow("nope", np.random.default_rng(0))
+
+    def test_unknown_param_rejected(self):
+        with pytest.raises(ValueError, match="unknown workflow_params"):
+            make_workflow("agent_loop", np.random.default_rng(0),
+                          bogus=3)
+
+    @pytest.mark.parametrize("name,params", [
+        ("agent_loop", {"rounds": 0}),
+        ("agent_loop", {"tool_tokens": 0}),
+        ("rag_chain", {"n_docs": 0}),
+        ("fan_out", {"n": 0}),
+        ("speculative", {"acceptance": 1.5}),
+        ("speculative", {"draft_scale": 0.0}),
+        ("speculative", {"target_tokens": 0}),
+        ("speculative", {"k": 0}),
+    ])
+    def test_template_param_validation(self, name, params):
+        with pytest.raises(ValueError):
+            make_workflow(name, np.random.default_rng(0), **params)
+
+    def test_agent_loop_prefix_chain(self):
+        wf = make_workflow("agent_loop", np.random.default_rng(0),
+                           rounds=4)
+        assert len(wf.steps) == 4
+        prompts = [s.prompt_len for s in wf.steps]
+        assert prompts == sorted(prompts)   # context only grows
+        for i, s in enumerate(wf.steps):
+            if i == 0:
+                assert s.deps == () and s.prefix_of is None
+            else:
+                assert s.deps == (f"round_{i - 1}",)
+                assert s.prefix_of == f"round_{i - 1}"
+
+    def test_fan_out_join_reads_every_candidate(self):
+        wf = make_workflow("fan_out", np.random.default_rng(0), n=3)
+        join = wf.step("join")
+        assert set(join.deps) == {"sample_0", "sample_1", "sample_2"}
+        assert join.prefix_of == "sample_0"
+        samples = [wf.step(f"sample_{i}") for i in range(3)]
+        assert len({s.prompt_len for s in samples}) == 1
+        assert join.prompt_len == samples[0].prompt_len \
+            + sum(s.max_new_tokens for s in samples)
+
+    def test_rag_chain_synthesis_extends_retrieval(self):
+        wf = make_workflow("rag_chain", np.random.default_rng(0))
+        ret, syn = wf.step("retrieve"), wf.step("synthesize")
+        assert syn.prefix_of == "retrieve"
+        assert syn.prompt_len > ret.prompt_len + ret.max_new_tokens
+
+    def test_speculative_alternates_draft_verify(self):
+        wf = make_workflow("speculative", np.random.default_rng(0),
+                           k=4, acceptance=0.7)
+        names = [s.name for s in wf.steps]
+        assert names[0] == "draft_0" and names[1] == "verify_0"
+        for s in wf.steps:
+            if s.name.startswith("verify"):
+                assert s.max_new_tokens == 1
+                assert s.prefix_of == s.deps[0]
+
+    def test_speculative_low_acceptance_needs_more_rounds(self):
+        lo = make_workflow("speculative", np.random.default_rng(0),
+                           acceptance=0.3)
+        hi = make_workflow("speculative", np.random.default_rng(0),
+                           acceptance=0.9)
+        assert len(lo.steps) > len(hi.steps)
+
+
+# ---------------------------------------------------------------------------
+# TaskReport
+# ---------------------------------------------------------------------------
+class TestTaskReport:
+    def _tr(self, **kw):
+        base = dict(task_id=0, workflow="w", n_steps=2, n_done=2,
+                    completed=True, t_start=1.0, t_done=4.0,
+                    energy_j=7200.0, tokens_generated=10,
+                    prompt_tokens=100, prefix_reused_tokens=0,
+                    critical_path_s=2.0)
+        base.update(kw)
+        return TaskReport(**base)
+
+    def test_latency(self):
+        assert self._tr().latency_s == pytest.approx(3.0)
+
+    def test_incomplete_latency_is_nan(self):
+        t = self._tr(completed=False, n_done=1, t_done=-1.0)
+        assert math.isnan(t.latency_s)
+
+    def test_energy_wh(self):
+        assert self._tr().energy_wh == pytest.approx(2.0)
+
+    def test_energy_per_token_wh(self):
+        assert self._tr().energy_per_token_wh == pytest.approx(0.2)
+        assert self._tr(tokens_generated=0).energy_per_token_wh == 0.0
+
+
+# ---------------------------------------------------------------------------
+# WorkflowSource mechanics (no engine)
+# ---------------------------------------------------------------------------
+class TestWorkflowSource:
+    def test_arrival_count_mismatch_rejected(self):
+        wf = _diamond()
+        with pytest.raises(ValueError, match="arrival times"):
+            WorkflowSource([wf], [0.0, 1.0])
+
+    def test_initial_returns_roots_in_arrival_order(self):
+        wfs = [_diamond(), _diamond()]
+        src = WorkflowSource(wfs, [5.0, 0.0])
+        roots = src.initial()
+        assert [r.task_id for r in roots] == [1, 0]
+        assert all(r.step == "a" for r in roots)
+        assert src.n_unreleased() == 2 * 3
+
+    def test_release_time_is_max_dep_done_plus_think(self):
+        src = WorkflowSource([_diamond()], [0.0])
+        (a,) = src.initial()
+        a.tokens_generated = 8
+        rel = src.on_finish(a, 3.0)
+        assert sorted(r.step for r in rel) == ["b", "c"]
+        by = {r.step: r for r in rel}
+        assert by["b"].release_time == pytest.approx(3.5)
+        assert by["c"].release_time == pytest.approx(3.25)
+        # latency is counted from release, not task arrival
+        assert by["b"].arrival_time == by["b"].release_time
+        assert src.n_unreleased() == 1
+
+    def test_join_waits_for_all_deps(self):
+        src = WorkflowSource([_diamond()], [0.0])
+        (a,) = src.initial()
+        b, c = sorted(src.on_finish(a, 1.0), key=lambda r: r.step)
+        assert src.on_finish(b, 2.0) == []      # d still blocked on c
+        (d,) = src.on_finish(c, 5.0)
+        assert d.step == "d"
+        assert d.release_time == pytest.approx(5.0)
+        assert src.n_unreleased() == 0
+
+    def test_released_children_sorted_by_release_time(self):
+        wf = Workflow(name="w", steps=(
+            _step("a"),
+            _step("late", deps=("a",), think=2.0),
+            _step("soon", deps=("a",), think=0.1)))
+        src = WorkflowSource([wf], [0.0])
+        (a,) = src.initial()
+        rel = src.on_finish(a, 1.0)
+        assert [r.step for r in rel] == ["soon", "late"]
+
+    def test_prefix_share_is_page_aligned(self):
+        wf = Workflow(name="w", steps=(
+            _step("p", plen=400, out=128),
+            _step("c", deps=("p",), prefix_of="p", plen=640)))
+        src = WorkflowSource([wf], [0.0])
+        (p,) = src.initial()
+        assert p.kv_pin == 1                    # child will fork
+        p.tokens_generated = 113                # parent KV = 512 = 4 pages
+        (c,) = src.on_finish(p, 1.0)
+        assert c.kv_parent == p.req_id
+        assert c.prefilled_tokens == 512        # min(4, (640-1)//128) pages
+        assert src.task_reports()[0].prefix_reused_tokens == 512
+
+    def test_zero_share_skips_fork(self):
+        # parent KV < one page: nothing page-aligned to reuse
+        wf = Workflow(name="w", steps=(
+            _step("p", plen=60, out=16),
+            _step("c", deps=("p",), prefix_of="p", plen=200)))
+        src = WorkflowSource([wf], [0.0])
+        (p,) = src.initial()
+        p.tokens_generated = 10
+        (c,) = src.on_finish(p, 1.0)
+        assert c.kv_parent is None and c.prefilled_tokens == 0
+
+    def test_bind_sequential_disables_reuse(self):
+        wf = Workflow(name="w", steps=(
+            _step("p", plen=400, out=128),
+            _step("c", deps=("p",), prefix_of="p", plen=640)))
+        src = WorkflowSource([wf], [0.0])
+        src.bind(sequential=True)
+        (p,) = src.initial()
+        assert p.kv_pin == 0                    # pin dropped with reuse
+        p.tokens_generated = 113
+        (c,) = src.on_finish(p, 1.0)
+        assert c.kv_parent is None and c.prefilled_tokens == 0
+
+    def test_bind_disaggregated_disables_reuse(self):
+        wf = Workflow(name="w", steps=(
+            _step("p", plen=400, out=128),
+            _step("c", deps=("p",), prefix_of="p", plen=640)))
+        src = WorkflowSource([wf], [0.0])
+        src.bind(disaggregated=True)
+        (p,) = src.initial()
+        p.tokens_generated = 113
+        (c,) = src.on_finish(p, 1.0)
+        assert c.kv_parent is None
+
+    def test_reuse_prefix_false_disables_reuse(self):
+        src = _source("agent_loop", n=1, reuse=False)
+        src.bind()                              # engine handshake
+        (root,) = src.initial()
+        assert root.kv_pin == 0
+        root.tokens_generated = 64
+        (child,) = src.on_finish(root, 1.0)
+        assert child.kv_parent is None
+
+    def test_on_shed_aborts_descendants(self):
+        src = WorkflowSource([_diamond()], [0.0])
+        (a,) = src.initial()
+        src.on_shed(a)
+        assert src.n_unreleased() == 0
+        assert src.on_finish(a, 1.0) == []      # nothing released
+        (t,) = src.task_reports()
+        assert not t.completed and math.isnan(t.latency_s)
+
+    def test_shed_sibling_aborts_whole_task(self):
+        wf = Workflow(name="w", steps=(
+            _step("a"), _step("b"), _step("j", deps=("a", "b"))))
+        src = WorkflowSource([wf], [0.0])
+        a, b = src.initial()
+        src.on_shed(a)
+        b.tokens_generated = 8
+        assert src.on_finish(b, 1.0) == []      # join never releases
+
+    def test_route_affinity_points_at_parent_replica(self):
+        src = _source("agent_loop", n=1)
+        (root,) = src.initial()
+        assert src.route_affinity(root) is None
+        root.tokens_generated = 64
+        (child,) = src.on_finish(root, 1.0, replica=2)
+        assert child.kv_parent == root.req_id
+        assert src.route_affinity(child) == 2
+
+    def test_materialized_prompts_extend_parent_context(self):
+        src = _source("agent_loop", n=1, vocab=1000)
+        (root,) = src.initial()
+        assert root.prompt is not None
+        assert len(root.prompt) == root.prompt_len
+        root.tokens_generated = 3
+        root.generated = [7, 8, 9]
+        (child,) = src.on_finish(root, 1.0)
+        assert len(child.prompt) == child.prompt_len
+        np.testing.assert_array_equal(
+            child.prompt[:root.prompt_len], root.prompt)
+        np.testing.assert_array_equal(
+            child.prompt[root.prompt_len:root.prompt_len + 3],
+            [7, 8, 9])
+
+    def test_deterministic_request_ids(self):
+        a, b = _source(n=3, seed=5), _source(n=3, seed=5)
+        assert [r.req_id for r in a.initial()] \
+            == [r.req_id for r in b.initial()]
+        assert a.next_req_id == b.next_req_id
+
+
+# ---------------------------------------------------------------------------
+# single-engine integration
+# ---------------------------------------------------------------------------
+class TestServeIntegration:
+    def _run(self, src, **engine_kw):
+        engine_kw.setdefault("batch_policy", SlotCountPolicy(max_batch=16))
+        eng = ServeEngine(LLAMA8B, **engine_kw)
+        rep = eng.run(src.initial(), source=src)
+        return eng, rep
+
+    @pytest.mark.parametrize("template", sorted(WORKFLOW_TEMPLATES))
+    def test_all_tasks_complete(self, template):
+        src = _source(template, n=4)
+        _, rep = self._run(src)
+        assert len(rep.tasks) == 4
+        assert all(t.completed for t in rep.tasks)
+        assert all(t.n_done == t.n_steps for t in rep.tasks)
+        assert all(r.status is RequestStatus.DONE for r in rep.requests)
+
+    def test_kv_conservation_after_forked_run(self):
+        src = _source("agent_loop", n=5)
+        eng, rep = self._run(src)
+        assert rep.prefix_reused_tokens > 0
+        eng.batcher.kv.check_invariants()
+        assert eng.batcher.kv.lingering == {}   # every pin consumed
+        assert eng.batcher.kv._pins == {}
+        assert len(eng.batcher.kv.free) == eng.batcher.kv.n_pages
+
+    def test_report_reuse_matches_task_reuse(self):
+        src = _source("agent_loop", n=5)
+        _, rep = self._run(src)
+        assert rep.prefix_reused_tokens \
+            == sum(t.prefix_reused_tokens for t in rep.tasks)
+
+    def test_per_task_energy_partitions_request_energy(self):
+        src = _source("agent_loop", n=5)
+        _, rep = self._run(src)
+        tsum = sum(t.energy_j for t in rep.tasks)
+        assert tsum == pytest.approx(
+            sum(r.energy_j for r in rep.requests), rel=1e-9)
+        assert tsum == pytest.approx(rep.busy_energy_j, rel=1e-9)
+        assert tsum <= rep.total_energy_j * (1 + 1e-9)
+
+    def test_per_task_token_partition(self):
+        src = _source("fan_out", n=4)
+        _, rep = self._run(src)
+        assert sum(t.tokens_generated for t in rep.tasks) \
+            == sum(r.tokens_generated for r in rep.requests)
+        assert sum(t.prompt_tokens for t in rep.tasks) \
+            == sum(r.prompt_len for r in rep.requests)
+
+    def test_reuse_saves_energy_on_agent_loop(self):
+        _, with_reuse = self._run(_source("agent_loop", n=5, rounds=6))
+        _, without = self._run(
+            _source("agent_loop", n=5, reuse=False, rounds=6))
+        assert with_reuse.prefix_reused_tokens > 0
+        assert without.prefix_reused_tokens == 0
+        assert with_reuse.busy_energy_j < without.busy_energy_j
+
+    def test_critical_path_bounds_task_latency(self):
+        src = _source("agent_loop", n=4)
+        _, rep = self._run(src)
+        for t in rep.tasks:
+            assert t.latency_s >= t.critical_path_s * (1 - 1e-9)
+
+    def test_sequential_mode_completes_without_reuse(self):
+        src = _source("rag_chain", n=3)
+        eng = ServeEngine(LLAMA8B, mode="sequential")
+        rep = eng.run(src.initial(), source=src)
+        assert all(t.completed for t in rep.tasks)
+        assert rep.prefix_reused_tokens == 0
+
+    def test_composes_with_scheduler_and_chunked_policy(self):
+        src = _source("agent_loop", n=4)
+        eng = ServeEngine(
+            LLAMA8B,
+            batch_policy=ChunkedPrefillPolicy(max_batch=16,
+                                              chunk_tokens=512))
+        rep = eng.run(src.initial(),
+                      scheduler=make_scheduler("window", window_s=0.5),
+                      source=src)
+        assert all(t.completed for t in rep.tasks)
+        eng.batcher.kv.check_invariants()
+        assert eng.batcher.kv.lingering == {}
+
+
+# ---------------------------------------------------------------------------
+# cluster integration
+# ---------------------------------------------------------------------------
+class TestClusterIntegration:
+    def test_mixed_fleet_completes_and_conserves_kv(self):
+        src = _source("agent_loop", n=6, rate=6.0)
+        cl = make_cluster(LLAMA8B, 3, policy="least_loaded", max_batch=8)
+        rep = cl.run(src.initial(), source=src)
+        assert all(t.completed for t in rep.tasks)
+        assert rep.prefix_reused_tokens \
+            == sum(r.prefix_reused_tokens for r in rep.replica_reports)
+        assert rep.prefix_reused_tokens > 0
+        for eng in cl.replicas:
+            eng.batcher.kv.check_invariants()
+            assert eng.batcher.kv.lingering == {}
+
+    def test_forked_children_land_on_parent_replica(self):
+        src = _source("agent_loop", n=6, rate=6.0)
+        cl = make_cluster(LLAMA8B, 3, policy="round_robin", max_batch=8)
+        rep = cl.run(src.initial(), source=src)
+        where = dict(src._replica_of)
+        forked = [r for r in rep.requests if r.kv_parent is not None]
+        assert forked
+        for r in forked:
+            assert where[r.req_id] == where[r.kv_parent]
+
+    def test_disaggregated_fleet_completes_without_reuse(self):
+        src = _source("agent_loop", n=4, rate=4.0)
+        cl = ClusterEngine([
+            ServeEngine(LLAMA8B, pool="prefill",
+                        batch_policy=SlotCountPolicy(max_batch=8)),
+            ServeEngine(LLAMA8B, pool="decode",
+                        batch_policy=SlotCountPolicy(max_batch=8)),
+        ])
+        rep = cl.run(src.initial(), source=src)
+        assert all(t.completed for t in rep.tasks)
+        assert rep.prefix_reused_tokens == 0    # reuse off across pools
+        assert rep.n_handoffs > 0               # every step still billed
+        assert rep.handoff_energy_j > 0
+
+    def test_fleet_energy_partition(self):
+        src = _source("fan_out", n=5, rate=6.0)
+        cl = make_cluster(LLAMA8B, 2, max_batch=8)
+        rep = cl.run(src.initial(), source=src)
+        assert sum(t.energy_j for t in rep.tasks) == pytest.approx(
+            sum(r.energy_j for r in rep.requests), rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# macro-step parity (satellite: seeded workflow runs, field-for-field)
+# ---------------------------------------------------------------------------
+def _req_fields(reqs):
+    return tuple((r.req_id, r.status, r.t_prefill_start, r.t_first_token,
+                  r.t_done, r.tokens_generated, r.energy_j,
+                  r.prefilled_tokens) for r in reqs)
+
+
+def _rep_fields(rep):
+    return (rep.total_energy_j, rep.busy_energy_j, rep.idle_energy_j,
+            rep.wall_time_s, rep.busy_time_s, rep.mean_batch,
+            rep.n_prefill_batches, rep.n_decode_steps,
+            rep.prefix_reused_tokens,
+            _req_fields(sorted(rep.requests, key=lambda r: r.req_id)))
+
+
+def _task_fields(tasks):
+    return tuple((t.task_id, t.n_done, t.completed, t.t_done,
+                  t.energy_j, t.tokens_generated,
+                  t.prefix_reused_tokens, t.critical_path_s)
+                 for t in tasks)
+
+
+class TestMacroParity:
+    @pytest.mark.parametrize("template", ["agent_loop", "fan_out"])
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_single_engine_parity(self, template, seed):
+        out = []
+        for macro in (False, True):
+            src = _source(template, n=5, seed=seed)
+            eng = ServeEngine(LLAMA8B, macro_step=macro,
+                              batch_policy=SlotCountPolicy(max_batch=16))
+            rep = eng.run(src.initial(), source=src)
+            out.append((_rep_fields(rep), _task_fields(rep.tasks)))
+        assert out[0] == out[1]
+
+    def test_mixed_cluster_parity(self):
+        out = []
+        for macro in (False, True):
+            src = _source("agent_loop", n=6, seed=1, rate=6.0)
+            replicas = [ServeEngine(LLAMA8B, macro_step=macro,
+                                    batch_policy=SlotCountPolicy(
+                                        max_batch=8))
+                        for _ in range(3)]
+            rep = ClusterEngine(replicas).run(src.initial(), source=src)
+            out.append((tuple(_rep_fields(r)
+                              for r in rep.replica_reports),
+                        _task_fields(rep.tasks), rep.wall_time_s))
+        assert out[0] == out[1]
+
+    def test_disaggregated_parity(self):
+        out = []
+        for macro in (False, True):
+            src = _source("rag_chain", n=5, seed=2, rate=4.0)
+            cl = ClusterEngine([
+                ServeEngine(LLAMA8B, pool="prefill", macro_step=macro,
+                            batch_policy=SlotCountPolicy(max_batch=8)),
+                ServeEngine(LLAMA8B, pool="decode", macro_step=macro,
+                            batch_policy=SlotCountPolicy(max_batch=8)),
+            ])
+            rep = cl.run(src.initial(), source=src)
+            out.append((tuple(_rep_fields(r)
+                              for r in rep.replica_reports),
+                        _task_fields(rep.tasks),
+                        rep.handoff_energy_j, rep.n_handoffs))
+        assert out[0] == out[1]
+
+
+# ---------------------------------------------------------------------------
+# mean_energy_per_token_wh (satellite)
+# ---------------------------------------------------------------------------
+class TestEnergyPerTokenWh:
+    def test_serve_report_value_and_guard(self):
+        eng = ServeEngine(QWEN05B,
+                          batch_policy=SlotCountPolicy(max_batch=8))
+        reqs = [Request(req_id=i, prompt=None, prompt_len=128,
+                        max_new_tokens=16, arrival_time=0.0)
+                for i in range(4)]
+        rep = eng.run(reqs)
+        toks = sum(r.tokens_generated for r in rep.completed)
+        assert rep.mean_energy_per_token_wh == pytest.approx(
+            rep.total_energy_j / 3600.0 / toks)
+        empty = eng.__class__(QWEN05B,
+                              batch_policy=SlotCountPolicy(max_batch=8)
+                              ).run([])
+        assert empty.mean_energy_per_token_wh == 0.0
+
+    def test_empty_report_guard_direct(self):
+        rep = ServeReport(requests=[], total_energy_j=0.0,
+                          busy_energy_j=0.0, idle_energy_j=0.0,
+                          wall_time_s=0.0, busy_time_s=0.0,
+                          mean_batch=0.0)
+        assert rep.mean_energy_per_token_wh == 0.0
+
+    def test_cluster_report_includes_handoffs(self):
+        src = _source("rag_chain", n=3, rate=4.0)
+        cl = ClusterEngine([
+            ServeEngine(LLAMA8B, pool="prefill",
+                        batch_policy=SlotCountPolicy(max_batch=8)),
+            ServeEngine(LLAMA8B, pool="decode",
+                        batch_policy=SlotCountPolicy(max_batch=8)),
+        ])
+        rep = cl.run(src.initial(), source=src)
+        toks = sum(r.tokens_generated for r in rep.completed)
+        assert rep.handoff_energy_j > 0
+        assert rep.mean_energy_per_token_wh == pytest.approx(
+            (sum(r.total_energy_j for r in rep.replica_reports)
+             + rep.handoff_energy_j) / 3600.0 / toks)
+
+    def test_run_result_property(self):
+        spec = ExperimentSpec(model="qwen2.5-0.5b", n_requests=6,
+                              max_batch=8)
+        r = spec.run()
+        toks = r.tokens_per_s * r.wall_time_s
+        assert r.mean_energy_per_token_wh == pytest.approx(
+            r.total_energy_j / 3600.0 / toks)
+
+    def test_run_result_zero_token_guard(self):
+        r = ExperimentSpec(model="qwen2.5-0.5b", n_requests=4).run()
+        z = dataclass_replace_tokens_zero(r)
+        assert z.mean_energy_per_token_wh == 0.0
+
+
+def dataclass_replace_tokens_zero(r: RunResult) -> RunResult:
+    import dataclasses
+    return dataclasses.replace(r, tokens_per_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec axes
+# ---------------------------------------------------------------------------
+class TestSpecAxes:
+    def test_default_spec_serialization_unchanged(self):
+        # the workflow axes must not perturb pre-existing spec hashes
+        spec = ExperimentSpec(model="llama-3.1-8b")
+        assert spec.spec_hash() == "935d4a49f3c6"
+        blob = json.loads(spec.to_json())
+        assert "workflow" not in blob
+        assert "workflow_params" not in blob
+        assert "workflow_reuse" not in blob
+
+    def test_workflow_axes_serialize_and_round_trip(self):
+        spec = ExperimentSpec(model="llama-3.1-8b",
+                              workflow="agent_loop",
+                              workflow_params={"rounds": 6},
+                              workflow_reuse=False)
+        blob = json.loads(spec.to_json())
+        assert blob["workflow"] == "agent_loop"
+        assert blob["workflow_params"] == {"rounds": 6}
+        assert blob["workflow_reuse"] is False
+        back = ExperimentSpec.from_json(spec.to_json())
+        assert back == spec
+        assert back.spec_hash() == spec.spec_hash()
+
+    def test_workflow_axes_change_the_hash(self):
+        base = ExperimentSpec(model="llama-3.1-8b")
+        assert base.derive(workflow="rag_chain").spec_hash() \
+            != base.spec_hash()
+
+    @pytest.mark.parametrize("changes,msg", [
+        ({"workflow_params": {"rounds": 2}}, "workflow_params"),
+        ({"workflow_reuse": False}, "workflow_reuse"),
+        ({"workflow": "nope"}, "unknown workflow template"),
+        ({"workflow": "agent_loop",
+          "workflow_params": {"bogus": 1}}, "unknown workflow_params"),
+        ({"workflow": "agent_loop",
+          "pipeline": "profile"}, "pipeline"),
+    ])
+    def test_spec_validation(self, changes, msg):
+        with pytest.raises(ValueError, match=msg):
+            ExperimentSpec(model="llama-3.1-8b", **changes)
+
+    def test_spec_run_produces_task_metrics(self):
+        spec = ExperimentSpec(model="qwen2.5-0.5b", n_requests=4,
+                              max_batch=8, workflow="agent_loop",
+                              arrival="poisson",
+                              arrival_params={"rate_per_s": 3.0})
+        r = spec.run()
+        assert r.n_tasks == 4 and r.n_tasks_completed == 4
+        assert r.mean_energy_per_task_wh > 0
+        assert r.mean_task_latency_s >= r.mean_task_critical_path_s \
+            * (1 - 1e-9)
+        assert r.prefix_reused_tokens > 0
+        d = r.to_dict()
+        assert d["n_tasks"] == 4
+        assert d["mean_energy_per_task_wh"] == r.mean_energy_per_task_wh
+
+    def test_non_workflow_result_omits_task_fields(self):
+        r = ExperimentSpec(model="qwen2.5-0.5b", n_requests=4).run()
+        assert r.n_tasks is None
+        d = r.to_dict()
+        assert "n_tasks" not in d
+        assert "mean_energy_per_task_wh" not in d
+
+    def test_spec_run_deterministic(self):
+        spec = ExperimentSpec(model="qwen2.5-0.5b", n_requests=3,
+                              max_batch=8, workflow="rag_chain")
+        a, b = spec.run(), spec.run()
+        assert a.total_energy_j == b.total_energy_j
+        assert a.mean_energy_per_task_wh == b.mean_energy_per_task_wh
+
+    def test_workflow_reuse_ablation_via_spec(self):
+        spec = ExperimentSpec(model="qwen2.5-0.5b", n_requests=4,
+                              max_batch=8, workflow="agent_loop",
+                              workflow_params={"rounds": 4})
+        on = spec.run()
+        off = spec.derive(workflow_reuse=False).run()
+        assert on.prefix_reused_tokens > 0
+        assert off.prefix_reused_tokens == 0
+        assert on.mean_energy_per_task_wh < off.mean_energy_per_task_wh
