@@ -6,6 +6,7 @@
     batch formation      -> benchmarks.formation
     workflows / tasks    -> benchmarks.workflows
     fleet / routing      -> benchmarks.cluster
+    geo / autoscale      -> benchmarks.fleet
     §5 scheduling        -> benchmarks.scheduler
     backends / DVFS      -> benchmarks.backend
     §6 macro estimate    -> benchmarks.macro
@@ -63,8 +64,8 @@ def _row_record(suite: str, row) -> dict:
 
 
 def _benches():
-    from benchmarks import (backend, batching, cluster, formation, macro,
-                            microbench, precision, roofline_report,
+    from benchmarks import (backend, batching, cluster, fleet, formation,
+                            macro, microbench, precision, roofline_report,
                             scheduler, serving, simperf, workflows)
     return [("precision", precision),
             ("batching", batching),
@@ -72,6 +73,7 @@ def _benches():
             ("formation", formation),
             ("workflows", workflows),
             ("cluster", cluster),
+            ("fleet", fleet),
             ("scheduler", scheduler),
             ("backend", backend),
             ("macro", macro),
@@ -119,6 +121,7 @@ def main(argv=None) -> None:
         os.environ.setdefault("REPRO_BACKEND_NREQ", "48")
         os.environ.setdefault("REPRO_SIMPERF_QUICK", "1")
         os.environ.setdefault("REPRO_MACRO_FLEET_NREQ", "20000")
+        os.environ.setdefault("REPRO_FLEET_NREQ", "262144")
 
     if args.list:
         _list_suites()

@@ -11,7 +11,11 @@ simulated tokens per host-second. This suite measures exactly that:
 * simulated-tokens/sec and requests/sec of the macro-stepped engine at
   10k / 100k / 1M-request scale (single-stepping the larger scales is
   exactly the infeasibility this PR removes, so only the smallest scale
-  carries a baseline measurement).
+  carries a baseline measurement);
+* fleet-scaling rows (16 / 64 / 256 replicas): the vectorized
+  :class:`~repro.fleet.FleetEngine` against the Python-loop
+  ``ClusterEngine`` on the same engines and requests, with a >=5x
+  wall-clock gate at 64 replicas and a field-for-field parity check.
 
 Claim-style guards (same ``claim/...`` row schema run.py exits on):
 ``macro_speedup_ge_5x`` is the CI gate; the full (non-quick) run also
@@ -27,7 +31,9 @@ from typing import List
 
 from benchmarks.common import Row, save_results
 from repro.configs.paper_zoo import PAPER_MODELS
+from repro.fleet import FleetEngine
 from repro.serving.arrival import burst_arrivals, paper_requests
+from repro.serving.cluster import ClusterEngine
 from repro.serving.engine import ServeEngine
 from repro.batching.policy import SlotCountPolicy
 
@@ -69,6 +75,34 @@ def _timed_run(n: int, shape: dict, *, macro: bool,
 def _claim_row(name: str, value: float, passed: bool) -> Row:
     return Row(name=f"claim/{name}", us_per_call=0.0,
                derived=f"value={value:.2f} pass={passed}")
+
+
+#: batch-coherent fleet workload: fleet-width waves of identically
+#: shaped requests, so whole batches admit and complete together — the
+#: cost sits exactly where the two cluster loops differ (per-arrival
+#: replica scanning vs vectorized state)
+FLEET_SHAPE = dict(prompt_range=(400, 400), output_range=(8, 8))
+
+
+def _fleet_replicas(R: int, mb: int) -> list:
+    return [ServeEngine(CFG, batch_policy=SlotCountPolicy(max_batch=mb))
+            for _ in range(R)]
+
+
+def _fleet_best_wall(make_engine, R: int, mb: int, mult: int,
+                     reps: int) -> tuple:
+    """Best-of-``reps`` wall time (first-run allocator warm-up and
+    host noise would otherwise dominate a single sample)."""
+    n = R * mb * mult
+    best, report = float("inf"), None
+    for _ in range(reps):
+        eng = make_engine(_fleet_replicas(R, mb))
+        reqs = paper_requests(n, burst_arrivals(n, R * mb, 8.0),
+                              seed=0, **FLEET_SHAPE)
+        t0 = time.perf_counter()
+        report = eng.run(reqs)
+        best = min(best, time.perf_counter() - t0)
+    return best, report
 
 
 def run() -> List[Row]:
@@ -117,6 +151,38 @@ def run() -> List[Row]:
             rows.append(_claim_row("sim_1m_requests_feasible",
                                    r["wall_s"],
                                    r["wall_s"] < 900.0))
+
+    # -- 3. fleet vectorization: FleetEngine vs the ClusterEngine loop ---
+    # the legacy loop rescans every replica per arrival (O(R) per
+    # event); the vectorized fleet keeps struct-of-arrays state. Same
+    # engines, same requests, asserted field-for-field identical.
+    mult = 4 if quick else 6
+    parity_all = True
+    for R in (16, 64) if quick else (16, 64, 256):
+        mb, m = (32, 2) if R == 256 else (64, mult)
+        tf, rf = _fleet_best_wall(
+            lambda e: FleetEngine(e, policy="least_loaded"),
+            R, mb, m, reps=3)
+        tc, rc = _fleet_best_wall(
+            lambda e: ClusterEngine(e, policy="least_loaded"),
+            R, mb, m, reps=3)
+        ratio = tc / tf
+        parity = (rf.total_energy_j == rc.total_energy_j
+                  and rf.wall_time_s == rc.wall_time_s)
+        parity_all &= parity
+        n = R * mb * m
+        rows.append(Row(
+            f"simperf/fleet_scaling_r{R}", tf * 1e6,
+            f"{ratio:.1f}x vs loop ({n} req: fleet {tf:.2f}s, "
+            f"loop {tc:.2f}s)"))
+        dump.append({"fleet_replicas": R, "n": n, "fleet_wall_s": tf,
+                     "loop_wall_s": tc, "ratio": ratio,
+                     "parity": parity})
+        if R == 64:
+            rows.append(_claim_row("fleet_vector_speedup_ge_5x_r64",
+                                   ratio, ratio >= 5.0))
+    rows.append(_claim_row("fleet_vector_parity", float(parity_all),
+                           parity_all))
 
     save_results("simperf", [{"results": dump}])
     return rows

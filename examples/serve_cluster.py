@@ -7,7 +7,7 @@ round-robin.
     PYTHONPATH=src python examples/serve_cluster.py
 """
 import repro
-from repro.serving import POLICIES
+from repro.serving import GEO_POLICIES, POLICIES
 
 N_REQ = 120
 
@@ -24,7 +24,9 @@ def main() -> None:
           f"bursts of 12 every 4 s\n")
     print(f"{'policy':14s} {'Wh/req':>8s} {'util':>5s} {'idle J':>8s} "
           f"{'gated J':>8s} {'p99 lat':>8s}  requests/replica")
-    grid = repro.sweep(BASE, {"router": list(POLICIES)})
+    # geo-aware policies need a region layer — see fleet_carbon.py
+    policies = [p for p in POLICIES if p not in GEO_POLICIES]
+    grid = repro.sweep(BASE, {"router": policies})
     for label, r in grid.results.items():
         policy = label.split("=", 1)[1]
         print(f"{policy:14s} {r.mean_energy_wh:8.5f} "

@@ -36,7 +36,7 @@ from repro.workflows import (Workflow, WorkflowStep,  # noqa: F401
                              TaskReport, WorkflowSource,
                              WORKFLOW_TEMPLATES, make_workflow)
 
-__version__ = "0.7.0"
+__version__ = "0.8.0"
 
 __all__ = [
     "__version__",

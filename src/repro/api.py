@@ -42,8 +42,11 @@ from repro.core.energy import EnergyModel, FusedDequantEnergyModel, combine
 from repro.core.hardware import DeviceSpec, get_device
 from repro.core.precision import make_policy
 from repro.core.profiler import PhaseProfiler
-from repro.serving.arrival import (burst_arrivals, fixed_arrivals,
-                                   paper_requests, poisson_arrivals,
+from repro.fleet import (AUTOSCALERS, FleetEngine, FleetReport,
+                         assign_replicas, load_regions, make_autoscaler)
+from repro.serving.arrival import (burst_arrivals, diurnal_arrivals,
+                                   fixed_arrivals, paper_requests,
+                                   poisson_arrivals,
                                    uniform_random_arrivals)
 from repro.serving.backend import BACKENDS, ReplayBackend
 from repro.serving.cluster import ClusterEngine, ClusterReport
@@ -64,6 +67,7 @@ ARRIVALS: Dict[str, Tuple[str, ...]] = {
     "uniform": ("low_s", "high_s"),
     "poisson": ("rate_per_s",),
     "burst": ("burst_size", "burst_gap_s"),
+    "diurnal": ("base_rate_per_s",),
     "explicit": ("times",),
 }
 
@@ -78,7 +82,9 @@ _LATE_FIELD_DEFAULTS = {"backend": "analytic", "freq_scale": 1.0,
                         "replay_path": None, "batch_policy": "slot_count",
                         "policy_params": {}, "disaggregate": 0,
                         "workflow": None, "workflow_params": {},
-                        "workflow_reuse": True}
+                        "workflow_reuse": True,
+                        "fleet": None, "autoscaler": None,
+                        "autoscaler_params": {}, "regions": []}
 
 #: spec fields a per-replica override mapping may set (heterogeneous fleets)
 REPLICA_OVERRIDE_FIELDS = ("fmt", "device", "max_batch", "n_chips")
@@ -143,6 +149,18 @@ class ExperimentSpec:
     # the rest decode; finished prefills hand their KV cache across
     # the interconnect (latency + pJ/byte billed per request)
     disaggregate: int = 0
+    # -- vectorized fleet path / autoscaling / geo-routing --------------
+    # fleet=None auto-selects: the legacy ClusterEngine loop unless an
+    # autoscaler/region axis demands the vectorized FleetEngine;
+    # "vector" forces the vectorized path (field-for-field identical
+    # on stock routers), "legacy" pins the serial loop
+    fleet: Optional[str] = None
+    autoscaler: Optional[str] = None   # AUTOSCALERS registry name
+    autoscaler_params: Mapping[str, Any] = dataclasses.field(
+        default_factory=dict)
+    # region dicts (see repro.fleet.load_regions / sinusoid_region):
+    # time-varying carbon/price signals, RTT, egress price, fleet slice
+    regions: Tuple = ()
     # -- scheduling -----------------------------------------------------
     scheduler: Optional[str] = None
     scheduler_params: Mapping[str, Any] = dataclasses.field(
@@ -186,6 +204,9 @@ class ExperimentSpec:
         set_(self, "arrival_params", _freeze(dict(self.arrival_params)))
         set_(self, "policy_params", _freeze(dict(self.policy_params)))
         set_(self, "workflow_params", _freeze(dict(self.workflow_params)))
+        set_(self, "autoscaler_params",
+             _freeze(dict(self.autoscaler_params)))
+        set_(self, "regions", _freeze(tuple(self.regions)))
         set_(self, "replica_overrides",
              _freeze(tuple(dict(o) for o in self.replica_overrides)))
         set_(self, "prompt_range", tuple(self.prompt_range))
@@ -314,6 +335,48 @@ class ExperimentSpec:
                 raise ValueError(
                     "disaggregate requires pipeline='serve' and "
                     "mode='continuous'")
+        if self.fleet not in (None, "vector", "legacy"):
+            raise ValueError(f"unknown fleet {self.fleet!r}; known: "
+                             "None (auto), 'vector', 'legacy'")
+        if self.autoscaler_params and self.autoscaler is None:
+            raise ValueError(
+                "autoscaler_params= is set but autoscaler is None; "
+                f"name a policy via autoscaler= ({sorted(AUTOSCALERS)})")
+        if self.autoscaler is not None:
+            # surfaces unknown names / bad params at construction
+            make_autoscaler(self.autoscaler,
+                            dict(self.autoscaler_params))
+        if self.regions:
+            # surfaces malformed region dicts and replica-count
+            # mismatches at construction
+            assign_replicas(load_regions(_thaw(list(self.regions))),
+                            self.replicas)
+        from repro.serving.router import _SignalAwareRouter
+        if (isinstance(make_router(self.router), _SignalAwareRouter)
+                and not self.regions):
+            raise ValueError(
+                f"router={self.router!r} is geo-aware and needs a "
+                "region layer; set regions=")
+        if self.fleet == "legacy" and (self.autoscaler is not None
+                                       or self.regions):
+            raise ValueError(
+                "autoscaler=/regions= need the vectorized fleet path; "
+                "remove fleet='legacy'")
+        if self._wants_fleet():
+            if self.pipeline != "serve" or self.mode != "continuous":
+                raise ValueError(
+                    "the fleet path requires pipeline='serve' and "
+                    "mode='continuous'")
+            if self.disaggregate:
+                raise ValueError(
+                    "the vectorized fleet path does not support "
+                    "disaggregated pools; use fleet='legacy' replicas "
+                    "without autoscaler=/regions=")
+            if self.workflow is not None:
+                raise ValueError(
+                    "the vectorized fleet path does not support "
+                    "workflow sources yet; drop fleet/autoscaler/"
+                    "regions or workflow=")
         for name in ("prompt_range", "output_range"):
             lo, hi = getattr(self, name)
             if lo < 1 or hi < lo:
@@ -409,6 +472,14 @@ class ExperimentSpec:
                               or self.backend == "executed") \
             else self.backend
 
+    def _wants_fleet(self) -> bool:
+        """Whether this spec resolves to the vectorized
+        :class:`~repro.fleet.FleetEngine` path."""
+        if self.fleet == "legacy":
+            return False
+        return (self.fleet == "vector" or self.autoscaler is not None
+                or bool(self.regions))
+
     def arrivals(self) -> list:
         """Materialize the arrival time list for this spec."""
         n, p = self.n_requests, dict(self.arrival_params)
@@ -428,6 +499,10 @@ class ExperimentSpec:
         if self.arrival == "burst":
             return burst_arrivals(n, p["burst_size"], p["burst_gap_s"],
                                   start=p.get("start", 0.0))
+        if self.arrival == "diurnal":
+            rate = p.pop("base_rate_per_s")
+            p.setdefault("seed", self.seed)
+            return diurnal_arrivals(n, rate, **p)
         times = list(p["times"])           # "explicit"
         if len(times) != n:
             raise ValueError(
@@ -512,6 +587,13 @@ class ExperimentSpec:
                 energy_model=self.build_energy_model(), **params)
         return make_scheduler(self.scheduler, **params)
 
+    def build_autoscaler(self):
+        """Resolve the autoscaler axis (``None`` when unset)."""
+        if self.autoscaler is None:
+            return None
+        return make_autoscaler(self.autoscaler,
+                               dict(self.autoscaler_params))
+
     def build_batch_policy(self,
                            max_batch: Optional[int] = None
                            ) -> BatchPolicy:
@@ -560,6 +642,14 @@ class ExperimentSpec:
                                pool=pool, energy_model_cls=emodel,
                                **kw, **exec_kw)
 
+        if self._wants_fleet():
+            overrides = (self.replica_overrides
+                         or ({},) * self.replicas)
+            fleet = [one(o) for o in overrides]
+            return FleetEngine(
+                fleet, make_router(self.router),
+                autoscaler=self.build_autoscaler(),
+                regions=_thaw(list(self.regions)) or None)
         if self.replicas == 1 and not self.replica_overrides:
             return one({})
         overrides = (self.replica_overrides
@@ -593,6 +683,14 @@ _WORKFLOW_RESULT_FIELDS = ("n_tasks", "n_tasks_completed",
                            "mean_task_critical_path_s",
                            "mean_energy_per_task_wh",
                            "prefix_reused_tokens")
+
+#: result fields added with the fleet axes (autoscaler / regions);
+#: same omit-when-None rule, so a bare fleet="vector" run serializes
+#: field-identically to its legacy ClusterEngine twin
+_FLEET_RESULT_FIELDS = ("transition_energy_j", "n_transitions",
+                        "gco2_total_g", "gco2_per_request_g",
+                        "usd_total", "usd_per_request",
+                        "client_latency_p99_s", "client_ttft_p99_s")
 
 
 @dataclasses.dataclass
@@ -685,6 +783,16 @@ class RunResult:
     mean_task_critical_path_s: Optional[float] = None
     mean_energy_per_task_wh: Optional[float] = None
     prefix_reused_tokens: Optional[int] = None
+    # -- fleet path (set when the spec names an autoscaler or region
+    #    axis; omitted from to_dict when None, same byte-stability rule)
+    transition_energy_j: Optional[float] = None
+    n_transitions: Optional[int] = None
+    gco2_total_g: Optional[float] = None
+    gco2_per_request_g: Optional[float] = None
+    usd_total: Optional[float] = None
+    usd_per_request: Optional[float] = None
+    client_latency_p99_s: Optional[float] = None
+    client_ttft_p99_s: Optional[float] = None
     # -- non-serialized engine report (fresh runs only) -----------------
     report: Optional[Any] = dataclasses.field(
         default=None, compare=False, repr=False)
@@ -717,7 +825,8 @@ class RunResult:
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d.pop("report")
-        for key in _FORMATION_RESULT_FIELDS + _WORKFLOW_RESULT_FIELDS:
+        for key in (_FORMATION_RESULT_FIELDS + _WORKFLOW_RESULT_FIELDS
+                    + _FLEET_RESULT_FIELDS):
             if d[key] is None:
                 del d[key]
         return _thaw(d)
@@ -803,6 +912,23 @@ def result_from_report(spec: ExperimentSpec, report,
                 prefill_chunks=sum(r.prefill_chunks for r in reps),
                 handoff_energy_j=report.handoff_energy_j,
                 n_handoffs=report.n_handoffs)
+        if isinstance(report, FleetReport):
+            # telemetry appears only when a fleet axis is actually set,
+            # so fleet="vector" alone stays field-identical to legacy
+            if spec.autoscaler is not None:
+                kw.update(
+                    transition_energy_j=report.transition_energy_j,
+                    n_transitions=report.n_transitions)
+            if spec.regions:
+                kw.update(
+                    gco2_total_g=report.gco2_total_g,
+                    gco2_per_request_g=report.gco2_per_request_g,
+                    usd_total=report.usd_total,
+                    usd_per_request=report.usd_per_request,
+                    client_latency_p99_s=report
+                    .client_latency_percentiles()["p99"],
+                    client_ttft_p99_s=report
+                    .client_ttft_percentiles()["p99"])
     else:
         kw = dict(
             kind="serve", replicas=1,
@@ -935,5 +1061,5 @@ def _run_profile(spec: ExperimentSpec) -> RunResult:
 #: re-exported so `repro.api` alone covers the common surface
 __all__ = ["ExperimentSpec", "RunResult", "result_from_report",
            "ARRIVALS", "PIPELINES", "MODES", "ENERGY_MODELS", "BACKENDS",
-           "BATCH_POLICIES", "PAPER_MODELS", "Request", "ServeReport",
-           "ClusterReport"]
+           "BATCH_POLICIES", "AUTOSCALERS", "PAPER_MODELS", "Request",
+           "ServeReport", "ClusterReport", "FleetReport"]

@@ -260,9 +260,9 @@ class ContinuousBatcher:
         self.kv.release(req.req_id)
         self.slots[slot].request = None
         self._live.remove(slot)
-        if slot in self._ready:
+        try:
             self._ready.remove(slot)
-        else:
+        except ValueError:
             self._partial.remove(slot)
         self._live_tokens -= req.prompt_len + req.max_new_tokens
         bisect.insort(self._free, slot)

@@ -54,7 +54,11 @@ class PagedKVAllocator:
         if need > len(self.free):
             raise MemoryError(
                 f"need {need} pages, {len(self.free)} free")
-        pages = [self.free.pop() for _ in range(need)]
+        if need:
+            pages = self.free[-need:][::-1]    # == [pop() * need]
+            del self.free[-need:]
+        else:
+            pages = []
         t = PageTable(seq_id=seq_id, pages=pages, n_tokens=n_tokens)
         self.tables[seq_id] = t
         return t
@@ -97,6 +101,9 @@ class PagedKVAllocator:
         """Drop one ownership per page; a page returns to the free
         list (historical reversed-append order) only at zero owners."""
         shared = self._shared
+        if not shared:                  # no co-owned pages anywhere
+            self.free.extend(reversed(pages))
+            return
         for p in reversed(pages):
             c = shared.get(p)
             if c is None:

@@ -259,15 +259,17 @@ class SlotCountPolicy(BatchPolicy):
         if not (batcher._n_waiting and batcher._free):
             return picks
         head = batcher.waiting_head()
-        if not batcher.kv.can_allocate(head.prompt_len
-                                       + head.max_new_tokens):
+        kv = batcher.kv
+        if not kv.can_allocate(head.prompt_len + head.max_new_tokens):
             return picks                 # head-of-line block: wait
         head_bucket = bucket_length(head.prompt_len) \
             if self.bucket_prefill else None
         i = batcher._whead
         w = batcher._waiting
-        while (i < len(w) and batcher._free
-               and len(picks) < self.max_prefill_batch):
+        free = batcher._free             # alias: mutated in place
+        take = batcher._take
+        mpb = self.max_prefill_batch
+        while i < len(w) and free and len(picks) < mpb:
             req = w[i]
             if req is None:
                 i += 1
@@ -278,10 +280,9 @@ class SlotCountPolicy(BatchPolicy):
                     and bucket_length(req.prompt_len) != head_bucket):
                 i += 1
                 continue
-            if not batcher.kv.can_allocate(req.prompt_len
-                                           + req.max_new_tokens):
+            if not kv.can_allocate(req.prompt_len + req.max_new_tokens):
                 break
-            picks.append((batcher._take(i, req), req))
+            picks.append((take(i, req), req))
         batcher._skip_tombstones()
         return picks
 

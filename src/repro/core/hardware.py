@@ -83,6 +83,17 @@ class DeviceSpec:
     # memory-bound decode saves energy nearly for free.
     freq_scale: float = 1.0
     dvfs_exponent: float = 3.0
+    # Fleet autoscaling transitions. Spinning a replica up (host boot /
+    # model-weights load / runtime warm-up) takes ``spinup_latency_s``
+    # during which it cannot serve, and costs ``spinup_energy_j``
+    # (roughly the ramp window at idle-class draw). Draining a replica
+    # to off costs ``drain_latency_s`` / ``drain_energy_j``. Off draws
+    # zero; the fleet simulator bills both transitions into the power
+    # trace so the energy ledger still closes to 100%.
+    spinup_latency_s: float = 20.0
+    spinup_energy_j: float = 2400.0
+    drain_latency_s: float = 5.0
+    drain_energy_j: float = 600.0
     # Interconnect energy (pJ/byte) for moving state between chips —
     # what a disaggregated cluster pays to hand a prefilled KV cache
     # from a prefill replica to a decode replica. End-to-end NVLink-
@@ -117,6 +128,8 @@ class DeviceSpec:
             "idle": PowerState("idle", self.idle_power),
             "gated": PowerState("gated", self.gated_power,
                                 wake_latency_s=self.wake_latency_s),
+            "off": PowerState("off", 0.0,
+                              wake_latency_s=self.spinup_latency_s),
         }
 
     def state_power(self, state: str) -> float:
@@ -179,6 +192,10 @@ H100_SXM = DeviceSpec(
     hbm_capacity=80e9,
     gated_power=45.0,           # deep low-power state, well under 120 W idle
     wake_latency_s=0.25,        # clock/power ramp back to serving state
+    spinup_latency_s=30.0,      # weights load + runtime warm-up
+    spinup_energy_j=3600.0,     # ~idle-class draw over the ramp window
+    drain_latency_s=5.0,
+    drain_energy_j=600.0,
     link_pj_per_byte=80.0,      # NVLink end-to-end (~10 pJ/bit)
 )
 
@@ -198,6 +215,10 @@ TPU_V5E = DeviceSpec(
     hbm_capacity=16e9,
     gated_power=15.0,
     wake_latency_s=0.1,
+    spinup_latency_s=15.0,      # smaller weights shard per chip
+    spinup_energy_j=900.0,
+    drain_latency_s=3.0,
+    drain_energy_j=180.0,
     link_pj_per_byte=40.0,      # ICI, shorter reach than NVLink
 )
 

@@ -10,8 +10,9 @@ from repro.serving.backend import (InferenceBackend, PhaseResult,  # noqa: F401
 from repro.serving.engine import ServeEngine, ServeReport  # noqa: F401
 from repro.serving.router import (Router, RoundRobinRouter,  # noqa: F401
                                   LeastLoadedRouter, ShortestWorkRouter,
-                                  EnergyAwareRouter, make_router,
-                                  POLICIES)
+                                  EnergyAwareRouter, CarbonAwareRouter,
+                                  PriceAwareRouter, make_router,
+                                  POLICIES, GEO_POLICIES)
 from repro.serving.cluster import (ClusterEngine, ClusterReport,  # noqa: F401
                                    make_cluster)
 from repro.serving.scheduler import (Scheduler, ScheduleResult,  # noqa: F401

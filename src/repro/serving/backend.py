@@ -153,6 +153,12 @@ class DecodeRun:
     t_end: float
     tokens_per_step: int        # == batch size (one token per live slot)
     bound: Optional[str] = None
+    # start time of the run's FINAL step (== t_start when the run is a
+    # single step). The fleet loop needs it to decide whether a clipped
+    # legacy run would already have executed that final step — i.e.
+    # when completions collected by an over-advanced run become visible
+    # to the serial cluster loop.
+    t_penult: float = 0.0
 
     @property
     def n_steps(self) -> int:
@@ -212,6 +218,7 @@ class InferenceBackend(abc.ABC):
         lats: List[float] = []
         ens: List[float] = []
         now = t_start
+        penult = t_start
         bound = None
         cur = batch
         for j in range(max_steps):
@@ -223,13 +230,14 @@ class InferenceBackend(abc.ABC):
             ens.append(res.energy_j)
             if bound is None:
                 bound = res.bound
+            penult = now
             now += res.latency_s
             if stop is not None and stop.hit(now):
                 break
         return DecodeRun(latencies_s=np.asarray(lats, dtype=np.float64),
                          energies_j=np.asarray(ens, dtype=np.float64),
                          t_end=float(now), tokens_per_step=batch.n,
-                         bound=bound)
+                         bound=bound, t_penult=penult)
 
     @abc.abstractmethod
     def decode_tail(self, request: Any, n_steps: int,
@@ -374,7 +382,9 @@ class AnalyticBackend(InferenceBackend):
         j = max_steps if stop is None else stop.n_steps(nows)
         return DecodeRun(latencies_s=lat[:j], energies_j=en[:j],
                          t_end=float(nows[j - 1]), tokens_per_step=n,
-                         bound=bound)
+                         bound=bound,
+                         t_penult=(float(nows[j - 2]) if j > 1
+                                   else t_start))
 
     def decode_tail(self, request: Any, n_steps: int,
                     stack: str = "eager") -> PhaseResult:

@@ -146,6 +146,38 @@ class ClusterReport:
                          ) -> Dict[str, float]:
         return slo.percentiles(self.requests, field="ttft", qs=qs)
 
+    def latency_percentiles_per_replica(
+            self, qs: Sequence[float] = (50, 90, 99)
+            ) -> List[Dict[str, float]]:
+        """Per-replica latency percentiles; replicas that served zero
+        requests (drained or never scaled up) yield 0.0-valued rows,
+        never NaN."""
+        return [slo.percentiles(rep.requests, field="latency", qs=qs)
+                for rep in self.replica_reports]
+
+    def ttft_percentiles_per_replica(
+            self, qs: Sequence[float] = (50, 90, 99)
+            ) -> List[Dict[str, float]]:
+        return [slo.percentiles(rep.requests, field="ttft", qs=qs)
+                for rep in self.replica_reports]
+
+    def per_replica_summary(self) -> List[Dict[str, float]]:
+        """One guarded row per replica — safe to tabulate for
+        autoscaled fleets where some replicas never served a request."""
+        rows = []
+        for i, rep in enumerate(self.replica_reports):
+            row = {"replica": i, "n_requests": rep.n,
+                   "utilization": rep.utilization,
+                   "idle_fraction": self.idle_fraction_per_replica[i],
+                   "energy_j": rep.total_energy_j,
+                   "mean_latency_s": rep.mean_latency_s,
+                   "mean_ttft_s": rep.mean_ttft_s}
+            for k, v in slo.percentiles(rep.requests,
+                                        field="latency").items():
+                row[f"latency_{k}_s"] = v
+            rows.append(row)
+        return rows
+
     def summary(self) -> Dict[str, float]:
         out = {
             "policy": self.policy,

@@ -29,7 +29,6 @@ Energy accounting (paper §5 methodology):
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -112,6 +111,11 @@ class ServeReport:
     gated_energy_j: float = 0.0
     gated_time_s: float = 0.0
     idle_time_s: float = 0.0
+    # fleet autoscaling: spin-up/drain transition costs billed to this
+    # replica (zero outside the fleet path, keeping legacy totals
+    # bit-identical)
+    transition_energy_j: float = 0.0
+    transition_time_s: float = 0.0
     # admission control: requests a scheduler rejected (never served;
     # excluded from every mean_* aggregate, charged against SLO
     # attainment)
@@ -253,6 +257,8 @@ class _StreamState:
     busy_t: float = 0.0
     idle_t: float = 0.0
     gated_t: float = 0.0
+    trans_e: float = 0.0           # autoscaler spin-up/drain energy
+    trans_t: float = 0.0
     batch_time: float = 0.0        # integral of live batch over decode time
     decode_time: float = 0.0
     n_prefills: int = 0
@@ -281,10 +287,9 @@ class ServeEngine:
     ``execute=True`` — both bit-compatible with the pre-backend engine.
 
     Batch formation is owned by a
-    :class:`~repro.batching.policy.BatchPolicy` (``batch_policy=``).
-    The legacy ``max_batch=`` / ``max_prefill_batch=`` /
-    ``bucket_prefill=`` kwargs are deprecated shims that construct a
-    bit-compatible :class:`~repro.batching.policy.SlotCountPolicy`.
+    :class:`~repro.batching.policy.BatchPolicy` (``batch_policy=``);
+    with none given the engine builds the default
+    :class:`~repro.batching.policy.SlotCountPolicy`.
 
     ``pool`` names this engine's role in a disaggregated cluster:
     ``"mixed"`` (default) serves both phases; ``"prefill"`` relays each
@@ -296,9 +301,6 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, *, fmt: str = "bfloat16",
                  device: DeviceSpec = H100_SXM, n_chips: int = 1,
                  mode: str = "continuous",
-                 max_batch: Optional[int] = None,
-                 max_prefill_batch: Optional[int] = None,
-                 bucket_prefill: Optional[bool] = None,
                  batch_policy: Optional[BatchPolicy] = None,
                  pool: str = "mixed",
                  kv_pages: int = 1 << 15, page_size: int = 128,
@@ -326,34 +328,13 @@ class ServeEngine:
         self.pool = pool
         self.stack = "fused" if mode == "continuous" else "eager"
         if batch_policy is not None:
-            if max_prefill_batch is not None or bucket_prefill is not None:
-                raise ValueError(
-                    "max_prefill_batch=/bucket_prefill= conflict with "
-                    "batch_policy=; configure the policy instead")
-            if (max_batch is not None
-                    and max_batch != batch_policy.max_batch):
-                raise ValueError(
-                    f"max_batch={max_batch} conflicts with "
-                    f"batch_policy.max_batch={batch_policy.max_batch}")
             if (mode == "sequential"
                     and batch_policy.name != SlotCountPolicy.name):
                 raise ValueError("mode='sequential' ignores batch "
                                  "formation; batch_policy= requires "
                                  "mode='continuous'")
         else:
-            if (max_batch is not None or max_prefill_batch is not None
-                    or bucket_prefill is not None):
-                warnings.warn(
-                    "ServeEngine(max_batch=, max_prefill_batch=, "
-                    "bucket_prefill=) are deprecated; pass "
-                    "batch_policy=SlotCountPolicy(...) instead",
-                    DeprecationWarning, stacklevel=2)
-            batch_policy = SlotCountPolicy(
-                max_batch=32 if max_batch is None else max_batch,
-                max_prefill_batch=(8 if max_prefill_batch is None
-                                   else max_prefill_batch),
-                bucket_prefill=(True if bucket_prefill is None
-                                else bucket_prefill))
+            batch_policy = SlotCountPolicy()
         self.batch_policy = batch_policy
         self.max_batch = batch_policy.max_batch
         max_batch = batch_policy.max_batch
@@ -565,6 +546,10 @@ class ServeEngine:
         self.batcher = ContinuousBatcher(policy=self.batch_policy,
                                          **self._batcher_kw)
         self._stream = _StreamState(now=t0)
+        # start time of the most recent phase's final substep — the
+        # fleet loop uses it to order over-advanced completions against
+        # the serial cluster loop's arrival clock
+        self._last_phase_start = t0
         self.backend.start()
 
     @property
@@ -626,6 +611,7 @@ class ServeEngine:
                 # no compute phase and no clock advance
                 for _, r in plan.picks:
                     r.status = RequestStatus.RUNNING
+                self._last_phase_start = s.now
                 self._finish_ready(b, s.done, s.now)
                 return 0.0
             picks = plan.picks
@@ -634,6 +620,7 @@ class ServeEngine:
                 chunk_start=plan.chunk_start, chunk_len=plan.chunk_len))
             self._record("prefill", s.now, s.now + res.latency_s,
                          res.energy_j, float(len(picks)))
+            self._last_phase_start = s.now
             s.now += res.latency_s
             s.busy_t += res.latency_s
             s.busy_e += res.energy_j
@@ -694,6 +681,7 @@ class ServeEngine:
                 stack=self.stack))
             self._record("decode", s.now, s.now + res.latency_s,
                          res.energy_j, float(len(live)))
+            self._last_phase_start = s.now
             s.now += res.latency_s
             s.busy_t += res.latency_s
             s.busy_e += res.energy_j
@@ -764,6 +752,7 @@ class ServeEngine:
                                    run.latencies_s, run.energies_j,
                                    float(n))
         t0 = s.now
+        self._last_phase_start = run.t_penult
         s.now = run.t_end
         s.busy_t = _fold(s.busy_t, run.latencies_s)
         s.busy_e = _fold(s.busy_e, run.energies_j)
@@ -807,12 +796,13 @@ class ServeEngine:
                       if s.decode_time else 0.0)
         return ServeReport(
             requests=list(s.submitted),
-            total_energy_j=s.busy_e + s.idle_e + s.gated_e,
+            total_energy_j=s.busy_e + s.idle_e + s.gated_e + s.trans_e,
             busy_energy_j=s.busy_e, idle_energy_j=s.idle_e,
             wall_time_s=s.now, busy_time_s=s.busy_t,
             mean_batch=mean_batch, n_prefill_batches=s.n_prefills,
             n_decode_steps=s.n_decode, gated_energy_j=s.gated_e,
             gated_time_s=s.gated_t, idle_time_s=s.idle_t,
+            transition_energy_j=s.trans_e, transition_time_s=s.trans_t,
             prefill_computed_tokens=s.prefill_computed,
             prefill_effective_tokens=s.prefill_effective,
             prefill_chunks=s.prefill_chunks, n_relayed=s.n_relayed,

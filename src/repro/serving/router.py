@@ -20,7 +20,12 @@ Policies:
                          :class:`~repro.core.energy.EnergyModel`
                          (heterogeneous fleets: each replica may have
                          its own precision format, device, max_batch),
-                         and gate idle replicas.
+                         and gate idle replicas,
+* ``carbon_aware``     — geo-routing: among replicas with free decode
+                         slots, prefer the region whose grid carbon
+                         intensity (gCO2/kWh) is lowest *right now*
+                         (requires ``regions=`` on the spec),
+* ``price_aware``      — same, minimizing the spot energy price.
 """
 from __future__ import annotations
 
@@ -39,6 +44,15 @@ class Router:
     name = "base"
     #: whether idle replicas are power-gated under this policy
     gates_idle = False
+    #: what select() observes about replicas — lets the vectorized
+    #: fleet loop decide how far a replica may advance between
+    #: arrivals without changing routing decisions:
+    #:   "none"  reads nothing (round robin),
+    #:   "load"  reads only stream_load (queue depths),
+    #:   "work"  reads per-token outstanding work,
+    #:   "state" reads arbitrary engine state (the conservative
+    #:           default for custom routers).
+    reads = "state"
 
     def select(self, req: "Request", replicas: List["ServeEngine"],
                now: float) -> int:
@@ -56,6 +70,7 @@ class Router:
 
 class RoundRobinRouter(Router):
     name = "round_robin"
+    reads = "none"
 
     def __init__(self):
         self._next = 0
@@ -68,6 +83,7 @@ class RoundRobinRouter(Router):
 
 class LeastLoadedRouter(Router):
     name = "least_loaded"
+    reads = "load"
 
     def select(self, req, replicas, now) -> int:
         return min(range(len(replicas)),
@@ -78,6 +94,7 @@ class ShortestWorkRouter(Router):
     """Join-shortest-expected-work, prompt-length aware."""
 
     name = "shortest_work"
+    reads = "work"
 
     def select(self, req, replicas, now) -> int:
         return min(range(len(replicas)),
@@ -146,11 +163,69 @@ class EnergyAwareRouter(Router):
         return pre.energy_j + marginal_decode + wake
 
 
+class _SignalAwareRouter(Router):
+    """Shared machinery for geo-routing on a per-region time signal.
+
+    Needs the region layer bound (:meth:`bind_regions`) before the
+    first ``select`` — :class:`repro.fleet.FleetEngine` does this from
+    the spec's ``regions=`` axis. Among replicas with a free decode
+    slot the policy picks the lowest (signal, load, index); when every
+    replica is saturated it degrades to least-loaded, so low-carbon
+    regions can't starve the fleet by queueing unboundedly.
+    """
+
+    reads = "load"
+    #: Region attribute holding the Signal this policy minimizes
+    signal_attr = "carbon"
+
+    def __init__(self):
+        self._regions = None
+        self._region_of = None
+
+    def bind_regions(self, regions, region_of) -> None:
+        """Attach the region layer: ``regions`` is a list of
+        :class:`repro.fleet.Region`, ``region_of[i]`` the region index
+        serving replica ``i``."""
+        self._regions = list(regions)
+        self._region_of = list(region_of)
+
+    def signal_value(self, region_idx: int, now: float) -> float:
+        sig = getattr(self._regions[region_idx], self.signal_attr)
+        return float(sig.at(now))
+
+    def select(self, req, replicas, now) -> int:
+        if self._regions is None:
+            raise ValueError(
+                f"{self.name!r} routing needs a bound region layer; "
+                "set regions= on the ExperimentSpec (or call "
+                "bind_regions)")
+        vals = [self.signal_value(self._region_of[i], now)
+                for i in range(len(replicas))]
+        free = [i for i in range(len(replicas))
+                if replicas[i].stream_load < replicas[i].max_batch]
+        pool = free if free else range(len(replicas))
+        return min(pool, key=lambda i: (vals[i],
+                                        replicas[i].stream_load, i))
+
+
+class CarbonAwareRouter(_SignalAwareRouter):
+    name = "carbon_aware"
+    signal_attr = "carbon"
+
+
+class PriceAwareRouter(_SignalAwareRouter):
+    name = "price_aware"
+    signal_attr = "price"
+
+
 _ROUTERS = {cls.name: cls for cls in
             (RoundRobinRouter, LeastLoadedRouter, ShortestWorkRouter,
-             EnergyAwareRouter)}
+             EnergyAwareRouter, CarbonAwareRouter, PriceAwareRouter)}
 
 POLICIES = tuple(_ROUTERS)
+#: policies that only work with a bound region layer (regions= on the
+#: spec) — single-cluster sweeps should exclude these
+GEO_POLICIES = ("carbon_aware", "price_aware")
 
 
 def make_router(policy: str) -> Router:

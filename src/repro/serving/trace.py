@@ -25,6 +25,10 @@ from typing import Dict, List, Optional
 
 #: canonical power states on the serving timeline
 STATES = ("prefill", "decode", "idle", "gated")
+#: fleet-autoscaler transition states — valid to record, but reported
+#: by energy_by_state()/time_by_state() only when actually present, so
+#: non-fleet traces (and their golden serializations) are unchanged
+TRANSITION_STATES = ("spinup", "drain")
 
 
 @dataclasses.dataclass
@@ -66,7 +70,7 @@ class PowerTrace:
     # ------------------------------------------------------------------
     def record(self, replica: int, state: str, t0: float, t1: float,
                energy_j: float, batch: float = 0.0) -> None:
-        if state not in STATES:
+        if state not in STATES and state not in TRANSITION_STATES:
             raise ValueError(f"unknown power state {state!r}")
         if t1 < t0:
             raise ValueError(f"segment ends before it starts: {t0}..{t1}")
@@ -128,6 +132,7 @@ class PowerTrace:
     def energy_by_state(self) -> Dict[str, float]:
         out = {s: 0.0 for s in STATES}
         for seg in self.segments:
+            out.setdefault(seg.state, 0.0)
             out[seg.state] += seg.energy_j
         return out
 
@@ -136,6 +141,7 @@ class PowerTrace:
         out = {s: 0.0 for s in STATES}
         for seg in self.segments:
             if replica is None or seg.replica == replica:
+                out.setdefault(seg.state, 0.0)
                 out[seg.state] += seg.duration_s
         return out
 

@@ -1,0 +1,348 @@
+"""Fleet subsystem tests: seeded vectorized-vs-legacy parity
+(field-for-field report and per-replica power-trace equality),
+autoscaler lifecycle + energy conservation (transition energy billed,
+ledger closes to 100%), region signal exactness, geo accounting,
+diurnal arrival statistics, and the ExperimentSpec fleet axes
+(default-omitting serialization, validation)."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.fleet import (FleetEngine, FleetView, QueueDepthAutoscaler,
+                         Signal, TargetUtilizationAutoscaler,
+                         assign_replicas, load_regions, make_autoscaler,
+                         make_fleet, sinusoid_region)
+from repro.serving import make_cluster, make_router, poisson_arrivals
+from repro.serving.arrival import (burst_arrivals, diurnal_arrivals,
+                                   paper_requests)
+from repro.serving.trace import PowerTrace
+
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+
+
+def _reqs(n, seed=0, rate=10.0, arrivals=None):
+    arr = arrivals if arrivals is not None \
+        else poisson_arrivals(n, rate, seed=seed)
+    return paper_requests(n, arr, seed=seed)
+
+
+def _fields(rep):
+    """Every scalar + per-request + per-replica field that parity
+    guarantees bit-identical between the legacy loop and the fleet."""
+    return {
+        "total": rep.total_energy_j, "busy": rep.busy_energy_j,
+        "idle": rep.idle_energy_j, "gated": rep.gated_energy_j,
+        "wall": rep.wall_time_s, "n": rep.n, "shed": rep.n_shed,
+        "per_replica_n": rep.requests_per_replica,
+        "replica_scalars": [(r.total_energy_j, r.busy_energy_j,
+                             r.idle_energy_j, r.gated_energy_j,
+                             r.wall_time_s, r.busy_time_s, r.mean_batch)
+                            for r in rep.replica_reports],
+        "requests": sorted((r.req_id, r.t_prefill_start, r.t_first_token,
+                            r.t_done, r.energy_j, r.tokens_generated)
+                           for rep_ in rep.replica_reports
+                           for r in rep_.requests),
+    }
+
+
+def _segs(trace):
+    # the two engines append segments in different global orders (the
+    # legacy loop interleaves replicas; the fleet advances one replica
+    # at a time), but each replica's own timeline must be identical
+    return sorted((s.replica, s.t0, s.t1, s.state, s.energy_j, s.batch)
+                  for s in trace.segments)
+
+
+class TestFleetParity:
+    """The acceptance bar: on small fleets the vectorized path is
+    field-for-field identical to ClusterEngine, per-trace-segment
+    included, across router policies and fleet sizes."""
+
+    @pytest.mark.parametrize("policy", ["round_robin", "least_loaded",
+                                        "shortest_work", "energy_aware",
+                                        "round_robin_gated"])
+    @pytest.mark.parametrize("n_rep", [1, 3])
+    def test_report_and_trace_parity(self, policy, n_rep):
+        tr_a, tr_b = PowerTrace(), PowerTrace()
+        cl = make_cluster(LLAMA8B, n_rep, policy=policy, max_batch=8)
+        fl = make_fleet(LLAMA8B, n_rep, policy=policy, max_batch=8)
+        ra = cl.run(_reqs(60, seed=11, rate=12.0), trace=tr_a)
+        rb = fl.run(_reqs(60, seed=11, rate=12.0), trace=tr_b)
+        assert _fields(ra) == _fields(rb)
+        assert _segs(tr_a) == _segs(tr_b)
+
+    def test_parity_on_bursts(self):
+        arr = burst_arrivals(48, 12, 2.0)
+        cl = make_cluster(LLAMA8B, 4, policy="least_loaded", max_batch=6)
+        fl = make_fleet(LLAMA8B, 4, policy="least_loaded", max_batch=6)
+        ra = cl.run(_reqs(48, seed=3, arrivals=arr))
+        rb = fl.run(_reqs(48, seed=3, arrivals=arr))
+        assert _fields(ra) == _fields(rb)
+
+    def test_api_vector_result_identical(self):
+        base = dict(model="llama-3.1-8b", pipeline="serve",
+                    mode="continuous", n_requests=80, replicas=3,
+                    router="least_loaded", arrival="poisson",
+                    arrival_params={"rate_per_s": 10.0}, seed=5)
+        d1 = ExperimentSpec(**base).run().to_dict()
+        d2 = ExperimentSpec(fleet="vector", **base).run().to_dict()
+        d1.pop("spec_hash"), d2.pop("spec_hash")
+        assert d1 == d2
+
+    def test_rejects_sequential_replicas(self):
+        eng = make_cluster(LLAMA8B, 1, policy="round_robin").replicas[0]
+        eng.mode = "sequential"
+        with pytest.raises(ValueError, match="continuous"):
+            FleetEngine([eng])
+
+
+class TestAutoscaler:
+    def _autoscaled(self, trace=None):
+        auto = TargetUtilizationAutoscaler(check_interval_s=5.0,
+                                           min_replicas=1)
+        fl = make_fleet(LLAMA8B, 6, policy="least_loaded", max_batch=4,
+                        autoscaler=auto)
+        reqs = _reqs(160, seed=7, arrivals=diurnal_arrivals(
+            160, 30.0, period_s=120.0, amp_frac=0.9, seed=7))
+        return fl.run(reqs, trace=trace)
+
+    def test_scales_and_conserves_energy(self):
+        tr = PowerTrace()
+        rep = self._autoscaled(trace=tr)
+        assert rep.n_transitions > 0
+        assert rep.transition_energy_j > 0
+        # the ledger closes: trace total == report total, and the
+        # report total already includes transition energy
+        assert tr.total_energy_j == pytest.approx(rep.total_energy_j,
+                                                  rel=1e-9)
+        by_state = tr.energy_by_state()
+        trans = by_state.get("spinup", 0.0) + by_state.get("drain", 0.0)
+        assert trans == pytest.approx(rep.transition_energy_j, rel=1e-9)
+        parts = (rep.busy_energy_j + rep.idle_energy_j
+                 + rep.gated_energy_j + rep.transition_energy_j)
+        assert parts == pytest.approx(rep.total_energy_j, rel=1e-9)
+
+    def test_all_requests_complete(self):
+        rep = self._autoscaled()
+        assert rep.n == 160
+        assert all(r.t_done >= r.arrival_time for r in rep.requests)
+
+    def test_zero_request_replicas_no_nan(self):
+        """Satellite: drained / never-scaled-up replicas must not put
+        NaN in any per-replica report row."""
+        auto = TargetUtilizationAutoscaler(check_interval_s=5.0)
+        fl = make_fleet(LLAMA8B, 6, policy="least_loaded",
+                        autoscaler=auto)
+        rep = fl.run(_reqs(30, seed=1, rate=4.0))
+        assert 0 in rep.requests_per_replica   # some replica never ran
+        rows = rep.per_replica_summary()
+        for row in rows:
+            for v in row.values():
+                assert not (isinstance(v, float) and math.isnan(v))
+        for d in (rep.latency_percentiles_per_replica()
+                  + rep.ttft_percentiles_per_replica()):
+            assert all(not math.isnan(v) for v in d.values())
+        assert all(not (isinstance(v, float) and math.isnan(v))
+                   for v in rep.summary().values())
+
+    def test_policy_desired(self):
+        t = TargetUtilizationAutoscaler(target=0.5, band=0.1)
+        # inside the band: hold
+        v = FleetView(t=0, n_active=2, n_total=4, queued=8, busy=2,
+                      max_batch=8)
+        assert t.desired(v) == 2
+        # way above: grow toward target utilization
+        v = FleetView(t=0, n_active=1, n_total=4, queued=32, busy=1,
+                      max_batch=8)
+        assert t.desired(v) == 8
+        q = QueueDepthAutoscaler(high=8.0, low=1.0)
+        v = FleetView(t=0, n_active=2, n_total=8, queued=32, busy=2,
+                      max_batch=8)
+        assert q.desired(v) > 2
+        v = FleetView(t=0, n_active=4, n_total=8, queued=1, busy=1,
+                      max_batch=8)
+        assert q.desired(v) < 4
+
+    def test_clamp_and_factory(self):
+        a = make_autoscaler("queue_depth", {"min_replicas": 2,
+                                            "max_replicas": 5})
+        assert a.clamp(0, 100) == 2
+        assert a.clamp(50, 100) == 5
+        assert a.clamp(50, 3) == 3
+        with pytest.raises(ValueError, match="unknown autoscaler"):
+            make_autoscaler("nope", {})
+
+
+class TestSignal:
+    def test_integral_is_exact(self):
+        sig = Signal([0.0, 2.0, 5.0], [1.0, 3.0, 0.0])
+        # trapezoid areas: [0,2]: 4.0, [2,5]: 4.5
+        assert sig.integral(0, 5) == pytest.approx(8.5)
+        assert sig.integral(1, 3) == pytest.approx(
+            np.trapezoid([sig.at(t) for t in np.linspace(1, 3, 20001)],
+                         np.linspace(1, 3, 20001)), rel=1e-7)
+
+    def test_periodic_wrap(self):
+        sig = Signal([0.0, 6.0, 18.0], [1.0, 5.0, 2.0], period_s=24.0)
+        for t in (0.0, 3.7, 11.2, 23.9):
+            assert sig.at(t + 24.0) == pytest.approx(sig.at(t))
+        one_period = sig.integral(0.0, 24.0)
+        assert sig.integral(24.0, 72.0) == pytest.approx(2 * one_period)
+        # windows spanning the wrap are still exact
+        assert sig.integral(20.0, 28.0) == pytest.approx(
+            sig.integral(20.0, 24.0) + sig.integral(0.0, 4.0))
+
+    def test_mean_zero_width_is_point_value(self):
+        sig = Signal([0.0, 10.0], [2.0, 4.0])
+        assert sig.mean(5.0, 5.0) == pytest.approx(sig.at(5.0))
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="strictly increasing"):
+            Signal([0.0, 0.0], [1.0, 2.0])
+        with pytest.raises(ValueError, match="period_s"):
+            Signal([0.0, 30.0], [1.0, 2.0], period_s=24.0)
+
+
+class TestRegions:
+    def test_load_and_assign(self):
+        regs = load_regions([sinusoid_region("us", replicas=2),
+                             sinusoid_region("eu", replicas=1)])
+        assert [r.name for r in regs] == ["us", "eu"]
+        assert assign_replicas(regs, 3) == [0, 0, 1]
+        even = load_regions([{"name": "a"}, {"name": "b"}])
+        assert assign_replicas(even, 5) == [0, 0, 0, 1, 1]
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            load_regions([{"name": "a"}, {"name": "a"}])
+        with pytest.raises(ValueError, match="sum to"):
+            assign_replicas(load_regions([{"name": "a", "replicas": 1},
+                                          {"name": "b", "replicas": 1}]),
+                            3)
+        with pytest.raises(ValueError, match="every region"):
+            assign_replicas(load_regions([{"name": "a", "replicas": 1},
+                                          {"name": "b"}]), 3)
+
+    def test_geo_accounting_closes(self):
+        """gCO2 equals energy x the signal's exact mean: with constant
+        signals the ledger is checkable in closed form."""
+        regs = [{"name": "flat", "carbon": 500.0, "price": 0.20}]
+        fl = make_fleet(LLAMA8B, 2, policy="carbon_aware", max_batch=8,
+                        regions=regs)
+        rep = fl.run(_reqs(40, seed=2, rate=10.0))
+        expect_g = rep.total_energy_j * 500.0 / 3.6e6
+        expect_usd = rep.total_energy_j * 0.20 / 3.6e6
+        assert rep.gco2_total_g == pytest.approx(expect_g, rel=1e-6)
+        assert rep.usd_total == pytest.approx(expect_usd, rel=1e-6)
+        assert rep.gco2_per_request_g == pytest.approx(expect_g / 40,
+                                                       rel=1e-6)
+
+    def test_carbon_router_prefers_low_carbon_region(self):
+        regs = [{"name": "dirty", "carbon": 600.0, "replicas": 2},
+                {"name": "clean", "carbon": 100.0, "replicas": 2}]
+        fl = make_fleet(LLAMA8B, 4, policy="carbon_aware", max_batch=8,
+                        regions=regs)
+        rep = fl.run(_reqs(30, seed=4, rate=2.0))
+        per = rep.requests_per_replica
+        assert sum(per[2:]) > sum(per[:2])
+
+    def test_rtt_shifts_client_latency(self):
+        regs = [{"name": "far", "rtt_s": 0.5}]
+        fl = make_fleet(LLAMA8B, 2, policy="carbon_aware", max_batch=8,
+                        regions=regs)
+        rep = fl.run(_reqs(20, seed=6, rate=5.0))
+        lat = rep.latency_percentiles()["p50"]
+        client = rep.client_latency_percentiles()["p50"]
+        assert client == pytest.approx(lat + 0.5)
+
+    def test_signal_router_needs_regions(self):
+        r = make_router("carbon_aware")
+        with pytest.raises(ValueError, match="region"):
+            r.select(None, [], 0.0)
+
+
+class TestDiurnalArrivals:
+    def test_basic_properties(self):
+        arr = diurnal_arrivals(500, 5.0, period_s=600.0, seed=1)
+        assert len(arr) == 500
+        assert arr == sorted(arr)
+        assert arr[0] >= 0.0
+
+    def test_rate_follows_the_sine(self):
+        """First half-period (sin > 0) must receive more arrivals than
+        the second (sin < 0)."""
+        n = 4000
+        arr = np.asarray(diurnal_arrivals(n, 4.0, period_s=1000.0,
+                                          amp_frac=0.8, seed=2))
+        arr = arr[arr < 1000.0]
+        peak = np.sum(arr < 500.0)
+        trough = arr.size - peak
+        assert peak > 2.0 * trough
+
+    def test_bursts_are_simultaneous(self):
+        arr = diurnal_arrivals(400, 5.0, period_s=300.0,
+                               bursts_per_day=4.0, burst_size=16,
+                               seed=3)
+        assert len(arr) == 400
+        _, counts = np.unique(np.asarray(arr), return_counts=True)
+        assert counts.max() >= 16
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="positive"):
+            diurnal_arrivals(10, 0.0)
+        with pytest.raises(ValueError, match="amp_frac"):
+            diurnal_arrivals(10, 1.0, amp_frac=1.0)
+        assert diurnal_arrivals(0, 1.0) == []
+
+
+class TestFleetSpec:
+    def test_defaults_keep_serialization(self):
+        s = ExperimentSpec(model="llama-3.1-8b", pipeline="serve",
+                           mode="continuous", n_requests=10, replicas=2)
+        d = json.loads(s.to_json())
+        for k in ("fleet", "autoscaler", "autoscaler_params", "regions"):
+            assert k not in d
+
+    def test_fleet_spec_round_trips(self):
+        s = ExperimentSpec(
+            model="llama-3.1-8b", pipeline="serve", mode="continuous",
+            n_requests=10, replicas=4, router="carbon_aware",
+            regions=[sinusoid_region("us", replicas=2),
+                     sinusoid_region("eu", phase_h=9.0, replicas=2)],
+            autoscaler="queue_depth",
+            autoscaler_params={"high": 16.0}, arrival="diurnal",
+            arrival_params={"base_rate_per_s": 5.0})
+        s2 = ExperimentSpec.from_json(s.to_json())
+        assert s2.spec_hash() == s.spec_hash()
+
+    @pytest.mark.parametrize("kw,msg", [
+        (dict(router="carbon_aware"), "region"),
+        (dict(fleet="legacy", autoscaler="target_util"), "legacy"),
+        (dict(autoscaler_params={"high": 3.0}), "autoscaler"),
+        (dict(fleet="wat"), "fleet"),
+        (dict(mode="sequential", fleet="vector"), "continuous"),
+        (dict(autoscaler="nope"), "unknown autoscaler"),
+    ])
+    def test_validation(self, kw, msg):
+        base = dict(model="llama-3.1-8b", pipeline="serve",
+                    mode="continuous", n_requests=10, replicas=2)
+        base.update(kw)
+        with pytest.raises(ValueError, match=msg):
+            ExperimentSpec(**base)
+
+    def test_geo_run_populates_fleet_fields(self):
+        s = ExperimentSpec(
+            model="llama-3.1-8b", pipeline="serve", mode="continuous",
+            n_requests=60, replicas=2, router="price_aware",
+            regions=[sinusoid_region("us", replicas=1),
+                     sinusoid_region("eu", phase_h=12.0, replicas=1)],
+            arrival="poisson", arrival_params={"rate_per_s": 8.0},
+            seed=9)
+        d = s.run().to_dict()
+        for k in ("gco2_total_g", "gco2_per_request_g", "usd_total",
+                  "usd_per_request", "client_latency_p99_s"):
+            assert k in d and d[k] is not None

@@ -49,35 +49,25 @@ def _report_sig(rep):
 
 
 # ---------------------------------------------------------------------------
-# legacy kwargs -> deprecation shim
+# legacy kwargs: removed for good — batch_policy= is the only spelling
 # ---------------------------------------------------------------------------
-class TestDeprecationShim:
-    def test_legacy_kwargs_warn(self):
-        with pytest.warns(DeprecationWarning,
-                          match="batch_policy=SlotCountPolicy"):
-            ServeEngine(LLAMA8B, max_batch=8)
+class TestLegacyKwargsRemoved:
+    @pytest.mark.parametrize("kwargs", [
+        dict(max_batch=8),
+        dict(max_prefill_batch=4),
+        dict(bucket_prefill=True),
+    ])
+    def test_removed_kwargs_raise_type_error(self, kwargs):
+        with pytest.raises(TypeError):
+            ServeEngine(LLAMA8B, **kwargs)
 
-    def test_default_engine_does_not_warn(self):
+    def test_no_deprecation_warnings_remain(self):
         with warnings.catch_warnings():
             warnings.simplefilter("error", DeprecationWarning)
             ServeEngine(LLAMA8B)
-
-    def test_legacy_matches_explicit_policy(self):
-        with pytest.warns(DeprecationWarning):
-            legacy = ServeEngine(LLAMA8B, max_batch=8,
-                                 max_prefill_batch=4,
-                                 bucket_prefill=True)
-        explicit = ServeEngine(LLAMA8B, batch_policy=SlotCountPolicy(
-            max_batch=8, max_prefill_batch=4, bucket_prefill=True))
-        assert _report_sig(legacy.run(_reqs())) \
-            == _report_sig(explicit.run(_reqs()))
+            ServeEngine(LLAMA8B, batch_policy=SlotCountPolicy(max_batch=8))
 
     def test_policy_conflicts_raise(self):
-        pol = SlotCountPolicy(max_batch=8)
-        with pytest.raises(ValueError, match="conflict with batch_policy"):
-            ServeEngine(LLAMA8B, batch_policy=pol, max_prefill_batch=4)
-        with pytest.raises(ValueError, match="max_batch=16 conflicts"):
-            ServeEngine(LLAMA8B, batch_policy=pol, max_batch=16)
         with pytest.raises(ValueError, match="mode='continuous'"):
             ServeEngine(LLAMA8B, mode="sequential",
                         batch_policy=TokenBudgetPolicy(token_budget=4096))
