@@ -7,6 +7,7 @@
     workflows / tasks    -> benchmarks.workflows
     fleet / routing      -> benchmarks.cluster
     geo / autoscale      -> benchmarks.fleet
+    closed-loop control  -> benchmarks.control
     §5 scheduling        -> benchmarks.scheduler
     backends / DVFS      -> benchmarks.backend
     §6 macro estimate    -> benchmarks.macro
@@ -64,9 +65,10 @@ def _row_record(suite: str, row) -> dict:
 
 
 def _benches():
-    from benchmarks import (backend, batching, cluster, fleet, formation,
-                            macro, microbench, precision, roofline_report,
-                            scheduler, serving, simperf, workflows)
+    from benchmarks import (backend, batching, cluster, control, fleet,
+                            formation, macro, microbench, precision,
+                            roofline_report, scheduler, serving, simperf,
+                            workflows)
     return [("precision", precision),
             ("batching", batching),
             ("serving", serving),
@@ -74,6 +76,7 @@ def _benches():
             ("workflows", workflows),
             ("cluster", cluster),
             ("fleet", fleet),
+            ("control", control),
             ("scheduler", scheduler),
             ("backend", backend),
             ("macro", macro),
@@ -122,6 +125,7 @@ def main(argv=None) -> None:
         os.environ.setdefault("REPRO_SIMPERF_QUICK", "1")
         os.environ.setdefault("REPRO_MACRO_FLEET_NREQ", "20000")
         os.environ.setdefault("REPRO_FLEET_NREQ", "262144")
+        os.environ.setdefault("REPRO_CONTROL_NREQ", "1400")
 
     if args.list:
         _list_suites()

@@ -138,6 +138,36 @@ def run() -> List[Row]:
                                speedup, speedup >= 10.0))
     rows.append(_claim_row("macro_bit_parity", float(parity), parity))
 
+    # -- 1b. control plumbing is free when off ---------------------------
+    # the controller hooks live on the hot event loop; a run with no
+    # controller must take the legacy code path — bit-identical
+    # results and no measurable wall-clock cost (best-of-3 vs host
+    # noise). Guards the PR-9 "zero cost when off" contract.
+    def _best_wall(**kw):
+        best, rep = float("inf"), None
+        for _ in range(3):
+            eng = ServeEngine(CFG, macro_step=True,
+                              batch_policy=SlotCountPolicy(max_batch=32))
+            reqs = _requests(n_base, LONG_DECODE)
+            t0 = time.perf_counter()
+            rep = eng.run(reqs, **kw)
+            best = min(best, time.perf_counter() - t0)
+        return best, rep
+    t_legacy, rep_legacy = _best_wall()
+    t_off, rep_off = _best_wall(controller=None)
+    off_parity = (rep_legacy.total_energy_j == rep_off.total_energy_j
+                  and rep_legacy.wall_time_s == rep_off.wall_time_s
+                  and rep_legacy.n_decode_steps == rep_off.n_decode_steps)
+    off_ratio = t_off / t_legacy
+    rows.append(Row("simperf/controller_off_wall", t_off * 1e6,
+                    f"{off_ratio:.2f}x legacy wall (off vs never)"))
+    rows.append(_claim_row("controller_off_bit_parity",
+                           float(off_parity), off_parity))
+    rows.append(_claim_row("controller_off_zero_overhead", off_ratio,
+                           off_ratio <= 1.15))
+    dump.append({"controller_off_ratio": off_ratio,
+                 "parity": off_parity})
+
     # -- 2. macro-stepped scaling: 10k / 100k / 1M requests --------------
     scales = [10_000] if quick else [10_000, 100_000, 1_000_000]
     for n in scales:

@@ -1,0 +1,82 @@
+"""Closed-loop DVFS demo: one diurnal day served three ways.
+
+A static clock must be provisioned for the crest of the day — every
+night-time request then pays crest-level power. The model-predictive
+controller (`repro.control.MPCController`) re-plans every 2 simulated
+seconds from observed queue depth and arrival rate, downclocking the
+troughs (below the lowest *feasible* static point) and spinning the
+clock back up before the crest. The run prints the static
+(Wh/request, p99) frontier and where the controller lands relative to
+it: less energy than every static point that can match its latency.
+
+Runs in a few host seconds (a compressed 300 s "day", one replica):
+
+    PYTHONPATH=src python examples/control_mpc.py
+"""
+import repro
+
+# compressed diurnal day: mean 7 req/s, crest ~13, trough ~1
+RATE_PER_S = 7.0
+PERIOD_S = 300.0
+N_REQ = int(RATE_PER_S * PERIOD_S)
+
+BASE = repro.ExperimentSpec(
+    model="llama-3.1-8b", max_batch=32, n_requests=N_REQ,
+    arrival="diurnal",
+    arrival_params={"base_rate_per_s": RATE_PER_S, "period_s": PERIOD_S,
+                    "amp_frac": 0.85},
+    prompt_range=(200, 4000), output_range=(10, 300))
+
+STATIC_GRID = (0.4, 0.5, 0.6, 0.7, 0.85, 1.0)
+
+# the controller also gets a 0.25 point no static config could hold
+# (its capacity is below the day's *mean* rate — only a controller
+# that exits it before the ramp can afford to visit it)
+MPC = dict(controller="mpc",
+           controller_params={"slo_p99_s": 1.3, "slo_weight": 150.0,
+                              "freq_grid": (0.25,) + STATIC_GRID},
+           control_interval_s=2.0)
+
+
+def main() -> None:
+    n = BASE.n_requests  # the test harness shrinks this for smoke runs
+    print(f"diurnal day: {n} requests over {PERIOD_S:.0f}s, "
+          f"{BASE.model}, max_batch={BASE.max_batch}\n")
+    print(f"{'operating point':18s} {'Wh/req':>8s} {'p99':>7s} "
+          f"{'mean freq':>10s}")
+
+    statics = {}
+    for f in STATIC_GRID:
+        r = BASE.derive(freq_scale=f).run()
+        statics[f] = r
+        print(f"static f={f:<8.2f} {r.mean_energy_wh:8.5f} "
+              f"{r.latency_p99_s:6.2f}s {f:10.2f}")
+
+    mpc = BASE.derive(**MPC).run()
+    print(f"{'mpc (closed loop)':18s} {mpc.mean_energy_wh:8.5f} "
+          f"{mpc.latency_p99_s:6.2f}s {mpc.mean_freq_scale:10.2f}"
+          f"   ({mpc.n_control_actions} control actions)")
+
+    if n < N_REQ:
+        print("\n(shrunk smoke run — frontier comparison needs the "
+              "full day)")
+        return
+
+    # the frontier comparison the benchmark claims: among static
+    # points whose p99 is within 1.05x of the controller's, the
+    # cheapest one still spends this much more energy per request
+    matched = {f: r for f, r in statics.items()
+               if r.latency_p99_s <= 1.05 * mpc.latency_p99_s}
+    assert matched, "no static point matches the controller's p99"
+    f_best = min(matched, key=lambda f: matched[f].mean_energy_wh)
+    win = matched[f_best].mean_energy_wh / mpc.mean_energy_wh
+    print(f"\nbest latency-matched static point: f={f_best:.2f} "
+          f"({matched[f_best].mean_energy_wh:.5f} Wh/req at "
+          f"{matched[f_best].latency_p99_s:.2f}s p99)")
+    print(f"closed-loop MPC serves the same day with {win:.2f}x less "
+          f"energy per request")
+    assert win >= 1.2, f"expected >=1.2x frontier win, got {win:.2f}x"
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,9 @@ from repro.batching.policy import (BatchPolicy, SlotCountPolicy,  # noqa: F401
                                    ChunkedPrefillPolicy,
                                    make_batch_policy)
 from repro.configs.paper_zoo import PAPER_MODELS  # noqa: F401
+from repro.control import (Controller, ControlView,  # noqa: F401
+                           StaticController, ReactiveController,
+                           MPCController, CONTROLLERS, make_controller)
 from repro.serving.backend import (InferenceBackend, PhaseResult,  # noqa: F401
                                    DecodeRun, AnalyticBackend,
                                    ExecutedBackend, ReplayBackend,
@@ -36,7 +39,7 @@ from repro.workflows import (Workflow, WorkflowStep,  # noqa: F401
                              TaskReport, WorkflowSource,
                              WORKFLOW_TEMPLATES, make_workflow)
 
-__version__ = "0.8.0"
+__version__ = "0.9.0"
 
 __all__ = [
     "__version__",
@@ -45,6 +48,8 @@ __all__ = [
     "BATCH_POLICIES", "PAPER_MODELS",
     "BatchPolicy", "SlotCountPolicy", "TokenBudgetPolicy",
     "LengthSortedPolicy", "ChunkedPrefillPolicy", "make_batch_policy",
+    "Controller", "ControlView", "StaticController", "ReactiveController",
+    "MPCController", "CONTROLLERS", "make_controller",
     "InferenceBackend", "PhaseResult", "DecodeRun", "AnalyticBackend",
     "ExecutedBackend", "ReplayBackend", "RecordingBackend",
     "make_backend", "HorizonStop",

@@ -38,6 +38,7 @@ from repro.batching.policy import (BATCH_POLICIES, BatchPolicy,
                                    make_batch_policy)
 from repro.configs.base import ModelConfig, get_config, list_archs
 from repro.configs.paper_zoo import PAPER_MODELS
+from repro.control import CONTROLLERS, make_controller
 from repro.core.energy import EnergyModel, FusedDequantEnergyModel, combine
 from repro.core.hardware import DeviceSpec, get_device
 from repro.core.precision import make_policy
@@ -84,7 +85,9 @@ _LATE_FIELD_DEFAULTS = {"backend": "analytic", "freq_scale": 1.0,
                         "workflow": None, "workflow_params": {},
                         "workflow_reuse": True,
                         "fleet": None, "autoscaler": None,
-                        "autoscaler_params": {}, "regions": []}
+                        "autoscaler_params": {}, "regions": [],
+                        "controller": None, "controller_params": {},
+                        "control_interval_s": 1.0}
 
 #: spec fields a per-replica override mapping may set (heterogeneous fleets)
 REPLICA_OVERRIDE_FIELDS = ("fmt", "device", "max_batch", "n_chips")
@@ -161,6 +164,13 @@ class ExperimentSpec:
     # region dicts (see repro.fleet.load_regions / sinusoid_region):
     # time-varying carbon/price signals, RTT, egress price, fleet slice
     regions: Tuple = ()
+    # -- closed-loop control (repro.control): a controller observes and
+    #    actuates DVFS / admission / replica count every
+    #    control_interval_s of simulated time ---------------------------
+    controller: Optional[str] = None   # CONTROLLERS registry name
+    controller_params: Mapping[str, Any] = dataclasses.field(
+        default_factory=dict)
+    control_interval_s: float = 1.0
     # -- scheduling -----------------------------------------------------
     scheduler: Optional[str] = None
     scheduler_params: Mapping[str, Any] = dataclasses.field(
@@ -206,6 +216,8 @@ class ExperimentSpec:
         set_(self, "workflow_params", _freeze(dict(self.workflow_params)))
         set_(self, "autoscaler_params",
              _freeze(dict(self.autoscaler_params)))
+        set_(self, "controller_params",
+             _freeze(dict(self.controller_params)))
         set_(self, "regions", _freeze(tuple(self.regions)))
         set_(self, "replica_overrides",
              _freeze(tuple(dict(o) for o in self.replica_overrides)))
@@ -351,6 +363,40 @@ class ExperimentSpec:
             # mismatches at construction
             assign_replicas(load_regions(_thaw(list(self.regions))),
                             self.replicas)
+        if self.control_interval_s <= 0:
+            raise ValueError("control_interval_s must be positive")
+        if self.controller is None:
+            if self.controller_params:
+                raise ValueError(
+                    "controller_params= is set but controller is None; "
+                    f"name a policy via controller= "
+                    f"({sorted(CONTROLLERS)})")
+            if self.control_interval_s != 1.0:
+                raise ValueError(
+                    "control_interval_s= is set but controller is "
+                    "None; name a policy via controller=")
+        else:
+            # surfaces unknown names / bad params at construction
+            make_controller(self.controller,
+                            **dict(self.controller_params))
+            if self.pipeline != "serve" or self.mode != "continuous":
+                raise ValueError(
+                    "controller= requires pipeline='serve' and "
+                    "mode='continuous'")
+            if self.workflow is not None:
+                raise ValueError(
+                    "controller= does not compose with workflow= yet; "
+                    "control a plain request stream")
+            if self.disaggregate:
+                raise ValueError(
+                    "controller= does not compose with disaggregated "
+                    "prefill/decode fleets")
+            if self.autoscaler is not None:
+                raise ValueError(
+                    "controller= and autoscaler= are both replica-"
+                    "count authorities; pick one (MPCController and "
+                    "StaticController(n_replicas=) scale the fleet "
+                    "themselves)")
         from repro.serving.router import _SignalAwareRouter
         if (isinstance(make_router(self.router), _SignalAwareRouter)
                 and not self.regions):
@@ -594,6 +640,14 @@ class ExperimentSpec:
         return make_autoscaler(self.autoscaler,
                                dict(self.autoscaler_params))
 
+    def build_controller(self):
+        """Resolve the controller axis (``None`` when unset). Fresh
+        instance per run — controllers keep planning state."""
+        if self.controller is None:
+            return None
+        return make_controller(self.controller,
+                               **dict(self.controller_params))
+
     def build_batch_policy(self,
                            max_batch: Optional[int] = None
                            ) -> BatchPolicy:
@@ -615,8 +669,11 @@ class ExperimentSpec:
         cfg = self.model_config()
 
         backend = self.effective_backend()
-        # parse + validate the trace once; ReplayBackend is stateless
-        # (nearest-sample lookup), so one instance serves every replica
+        # parse + validate the trace once; without a controller the
+        # ReplayBackend is stateless (nearest-sample lookup), so one
+        # instance serves every replica. A controller actuates
+        # ``set_freq_scale`` — per-replica state — so each replica then
+        # gets its own instance.
         replay = (ReplayBackend.from_json(self.replay_path)
                   if backend == "replay" else None)
 
@@ -637,7 +694,9 @@ class ExperimentSpec:
                                params=model.init(jax.random.PRNGKey(0)),
                                buf_len=self.buf_len)
             elif backend == "replay":
-                exec_kw = dict(backend=replay)
+                exec_kw = dict(
+                    backend=(ReplayBackend.from_json(self.replay_path)
+                             if self.controller is not None else replay))
             return ServeEngine(cfg, mode=self.mode, batch_policy=pol,
                                pool=pool, energy_model_cls=emodel,
                                **kw, **exec_kw)
@@ -691,6 +750,13 @@ _FLEET_RESULT_FIELDS = ("transition_energy_j", "n_transitions",
                         "gco2_total_g", "gco2_per_request_g",
                         "usd_total", "usd_per_request",
                         "client_latency_p99_s", "client_ttft_p99_s")
+
+#: result fields added with the controller axis; same omit-when-None
+#: rule. ``controller_overhead_s`` is host wall-clock spent inside
+#: ``controller.act`` — the one documented non-deterministic field on
+#: an otherwise byte-reproducible record.
+_CONTROL_RESULT_FIELDS = ("n_control_actions", "mean_freq_scale",
+                          "controller_overhead_s", "control_actions")
 
 
 @dataclasses.dataclass
@@ -793,6 +859,12 @@ class RunResult:
     usd_per_request: Optional[float] = None
     client_latency_p99_s: Optional[float] = None
     client_ttft_p99_s: Optional[float] = None
+    # -- closed-loop control (set when the spec names a controller;
+    #    omitted from to_dict when None, same byte-stability rule) ------
+    n_control_actions: Optional[int] = None
+    mean_freq_scale: Optional[float] = None
+    controller_overhead_s: Optional[float] = None
+    control_actions: Optional[Tuple] = None   # (t, freq, adm, replicas)
     # -- non-serialized engine report (fresh runs only) -----------------
     report: Optional[Any] = dataclasses.field(
         default=None, compare=False, repr=False)
@@ -826,7 +898,7 @@ class RunResult:
         d = dataclasses.asdict(self)
         d.pop("report")
         for key in (_FORMATION_RESULT_FIELDS + _WORKFLOW_RESULT_FIELDS
-                    + _FLEET_RESULT_FIELDS):
+                    + _FLEET_RESULT_FIELDS + _CONTROL_RESULT_FIELDS):
             if d[key] is None:
                 del d[key]
         return _thaw(d)
@@ -862,6 +934,12 @@ def _tier_attainment(report) -> Dict[str, float]:
 def _run_serve(spec: ExperimentSpec) -> RunResult:
     engine = spec.build_engine()
     trace = PowerTrace() if spec.trace else None
+    # the controller kwargs are only passed when set, so uncontrolled
+    # runs execute the byte-identical legacy call path
+    ctl_kw: Dict[str, Any] = (
+        dict(controller=spec.build_controller(),
+             control_interval_s=spec.control_interval_s)
+        if spec.controller is not None else {})
     if spec.workflow is not None:
         source = spec.build_workflow_source()
         report = engine.run(source.initial(),
@@ -869,7 +947,8 @@ def _run_serve(spec: ExperimentSpec) -> RunResult:
                             trace=trace, source=source)
     else:
         report = engine.run(spec.requests(),
-                            scheduler=spec.build_scheduler(), trace=trace)
+                            scheduler=spec.build_scheduler(), trace=trace,
+                            **ctl_kw)
     return result_from_report(spec, report, trace)
 
 
@@ -915,7 +994,7 @@ def result_from_report(spec: ExperimentSpec, report,
         if isinstance(report, FleetReport):
             # telemetry appears only when a fleet axis is actually set,
             # so fleet="vector" alone stays field-identical to legacy
-            if spec.autoscaler is not None:
+            if spec.autoscaler is not None or spec.controller is not None:
                 kw.update(
                     transition_energy_j=report.transition_energy_j,
                     n_transitions=report.n_transitions)
@@ -942,6 +1021,13 @@ def result_from_report(spec: ExperimentSpec, report,
                 prefill_padding_fraction=report.prefill_padding_fraction,
                 prefill_chunks=report.prefill_chunks,
                 handoff_energy_j=0.0, n_handoffs=0)
+    ctl = getattr(report, "control", None)
+    if spec.controller is not None and ctl is not None:
+        kw.update(
+            n_control_actions=ctl["n_control_actions"],
+            mean_freq_scale=ctl["mean_freq_scale"],
+            controller_overhead_s=ctl["controller_overhead_s"],
+            control_actions=_freeze(tuple(ctl["control_actions"])))
     if spec.workflow is not None:
         tasks = report.tasks
         done = [t for t in tasks if t.completed]
@@ -1061,5 +1147,5 @@ def _run_profile(spec: ExperimentSpec) -> RunResult:
 #: re-exported so `repro.api` alone covers the common surface
 __all__ = ["ExperimentSpec", "RunResult", "result_from_report",
            "ARRIVALS", "PIPELINES", "MODES", "ENERGY_MODELS", "BACKENDS",
-           "BATCH_POLICIES", "AUTOSCALERS", "PAPER_MODELS", "Request",
-           "ServeReport", "ClusterReport", "FleetReport"]
+           "BATCH_POLICIES", "AUTOSCALERS", "CONTROLLERS", "PAPER_MODELS",
+           "Request", "ServeReport", "ClusterReport", "FleetReport"]

@@ -144,35 +144,45 @@ class DeviceSpec:
 
     def with_freq_scale(self, scale: float) -> "DeviceSpec":
         """Derive the spec for a DVFS operating point at ``scale`` of
-        the nominal core clock.
+        the *current* core clock.
 
         Compute throughput scales linearly; busy power scales as
         ``idle + (P - idle) * scale**dvfs_exponent`` (the static/leakage
         floor — approximated by ``idle_power`` — does not clock down);
         HBM bandwidth, host launch overhead, and the idle/gated states
         live on other clock/voltage domains and are unchanged.
+
+        Repeated application composes multiplicatively and exactly:
+        ``spec.with_freq_scale(a).with_freq_scale(b)`` is the operating
+        point at ``a*b`` of nominal, because the dynamic-power law is
+        multiplicative above the shared idle floor — so a controller may
+        re-apply relative scales mid-run without drift. The combined
+        operating point must stay within [0.1, 1.5] of nominal.
         """
-        if self.freq_scale != 1.0:
-            raise ValueError(
-                f"{self.name!r} is already a scaled operating point; "
-                "derive from the nominal spec")
+        if scale <= 0:
+            raise ValueError(f"freq_scale must be positive, got {scale}")
         if scale == 1.0:
             return self
-        if not 0.1 <= scale <= 1.5:
-            raise ValueError(f"freq_scale {scale} outside [0.1, 1.5]")
+        combined = self.freq_scale * scale
+        if not 0.1 <= combined <= 1.5:
+            raise ValueError(
+                f"freq_scale {combined:g} (= {self.freq_scale:g} * "
+                f"{scale:g}) outside [0.1, 1.5]")
 
         def dyn(p: float) -> float:
             return (self.idle_power
                     + (p - self.idle_power) * scale ** self.dvfs_exponent)
 
+        base = self.name.split("@f")[0]
+        name = base if combined == 1.0 else f"{base}@f{combined:g}"
         return dataclasses.replace(
-            self, name=f"{self.name}@f{scale:g}",
+            self, name=name,
             peak_flops_16=self.peak_flops_16 * scale,
             peak_flops_32=self.peak_flops_32 * scale,
             power_mxu=dyn(self.power_mxu),
             power_scalar=dyn(self.power_scalar),
             power_memory=dyn(self.power_memory),
-            freq_scale=scale)
+            freq_scale=combined)
 
 
 H100_SXM = DeviceSpec(

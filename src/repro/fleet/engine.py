@@ -176,11 +176,22 @@ class FleetEngine:
     def run(self, requests: List[Request], *,
             scheduler: Optional[Scheduler] = None,
             trace: Optional[PowerTrace] = None,
-            source: Optional[object] = None) -> FleetReport:
+            source: Optional[object] = None,
+            controller: Optional[object] = None,
+            control_interval_s: float = 1.0) -> FleetReport:
         if source is not None:
             raise ValueError(
                 "the vectorized fleet path does not support workflow "
                 "sources; use ClusterEngine")
+        hook = None
+        if controller is not None:
+            if self.autoscaler is not None:
+                raise ValueError(
+                    "controller= and autoscaler= are both replica-count "
+                    "authorities; pass one (the controller scales via "
+                    "set_replica_target)")
+            from repro.control.hook import ControlHook
+            hook = ControlHook(controller, control_interval_s)
         reqs, shed = apply_schedule(requests, scheduler)
         gate = self.router.gates_idle or (scheduler is not None
                                           and scheduler.plans_gaps)
@@ -188,7 +199,7 @@ class FleetEngine:
             eng._trace = trace
             eng._trace_replica = i
         try:
-            rep = self._run(reqs, shed, gate, trace)
+            rep = self._run(reqs, shed, gate, trace, hook=hook)
         finally:
             for eng in self.replicas:
                 eng._trace = None
@@ -196,7 +207,8 @@ class FleetEngine:
 
     # ------------------------------------------------------------------
     def _run(self, reqs: List[Request], shed: List[Request],
-             gate: bool, trace: Optional[PowerTrace]) -> FleetReport:
+             gate: bool, trace: Optional[PowerTrace],
+             hook: Optional[object] = None) -> FleetReport:
         replicas = self.replicas
         R = len(replicas)
         for eng in replicas:
@@ -266,6 +278,26 @@ class FleetEngine:
 
         # --- autoscaler lifecycle -------------------------------------
         scaler = self.autoscaler
+        if hook is not None:
+            # closed-loop control: the controller actuates per-replica
+            # DVFS directly and the replica count through a
+            # ControllerAutoscaler, so every controller-triggered
+            # spin-up/drain is billed by the existing transition path.
+            # It fires at arrival instants (rate-limited to the control
+            # interval by the decide() machinery below).
+            from repro.control.hook import ControllerAutoscaler
+            sig = None
+            if self.regions:
+                regions, reg_idx = self.regions, self.region_of
+
+                def sig(i, t):
+                    r = regions[reg_idx[i]]
+                    return (float(r.carbon.at(t)), float(r.price.at(t)))
+            hook.attach(list(enumerate(replicas)), reqs,
+                        can_admit=False, can_scale=True,
+                        min_replicas=1, max_replicas=R, n_active=1,
+                        signals=sig)
+            scaler = ControllerAutoscaler(hook, max_replicas=R)
         life = np.zeros(R, dtype=np.int8)
         ready_at = np.zeros(R)
         avail_at = np.zeros(R)
@@ -337,8 +369,11 @@ class FleetEngine:
                                     dev.drain_energy_j)
 
         # --- per-replica advancing ------------------------------------
-        over_advance = getattr(self.router, "reads", "state") \
-            in ("none", "load")
+        # a controller may re-target DVFS at any arrival instant, so a
+        # saturated replica must never run past the arrival clock (an
+        # over-advanced run would price future steps at a stale freq)
+        over_advance = (getattr(self.router, "reads", "state")
+                        in ("none", "load")) and hook is None
 
         def advance(i: int, t: Optional[float]) -> None:
             """Run replica ``i``'s phases up to arrival bound ``t``
@@ -469,7 +504,7 @@ class FleetEngine:
 
         # --- the shared arrival loop ----------------------------------
         t_prev = -np.inf
-        for req in reqs:
+        for n_seen, req in enumerate(reqs):
             t = req.effective_arrival
             if t != t_prev:
                 # same-instant burst members skip straight to routing:
@@ -486,6 +521,8 @@ class FleetEngine:
                     activate_warm(t)
                 accrue(t)
                 if scaler is not None:
+                    if hook is not None:
+                        hook._n_arr_hint = n_seen
                     decide(t)
                 t_prev = t
                 lheap = None            # loads moved: rebuild on demand
@@ -562,6 +599,8 @@ class FleetEngine:
             s.trans_t = float(trans_t[i])
             s.now = t_end if life[i] == _ACTIVE else float(iclock[i])
         reports = [eng.stream_report() for eng in replicas]
+        if hook is not None:
+            reports[0].control = hook.summary(t_end)
         return FleetReport(
             replica_reports=reports, policy=self.router.name,
             wall_time_s=t_end, shed=shed,

@@ -300,6 +300,31 @@ class AnalyticBackend(InferenceBackend):
         self.n_chips = n_chips
         self.energy = (energy_model if energy_model is not None
                        else energy_model_cls(device, self.policy))
+        # nominal-clock anchor for the DVFS actuator: re-targeting
+        # derives from here, so repeated mid-run changes cannot drift
+        self._nominal_device = device if device.freq_scale == 1.0 else None
+
+    def set_freq_scale(self, target: float) -> None:
+        """DVFS actuator (:mod:`repro.control`): move every subsequent
+        phase to the operating point at ``target`` of the *nominal*
+        clock. The device spec and energy model are rebuilt from the
+        nominal anchor — not composed onto the current point — so a
+        controller can re-target arbitrarily often without float
+        drift in the operating point itself."""
+        if target == self.device.freq_scale:
+            return
+        base = self._nominal_device
+        if base is None:
+            # constructed at a scaled point: recover the nominal spec
+            # once (exact in freq/flops; power unwinds to ~1 ulp)
+            unwound = self.device.with_freq_scale(
+                1.0 / self.device.freq_scale)
+            base = dataclasses.replace(
+                unwound, name=self.device.name.split("@f")[0],
+                freq_scale=1.0)
+            self._nominal_device = base
+        self.device = base.with_freq_scale(target)
+        self.energy = type(self.energy)(self.device, self.policy)
 
     # -- EnergyReport-level entry points (PhaseProfiler consumes these) -
     def prefill_report(self, batch: int, seq: int,
@@ -568,6 +593,45 @@ class ReplayBackend(InferenceBackend):
             self._check_sample(s, "pad_len")
         for s in self.decode_samples:
             self._check_sample(s, "cache_len")
+        # DVFS actuation state: pristine recorded samples + the current
+        # operating point relative to the recorded clock
+        self._prefill_recorded = [dict(s) for s in self.prefill_samples]
+        self._decode_recorded = [dict(s) for s in self.decode_samples]
+        self.freq_scale = 1.0
+
+    def set_freq_scale(self, target: float) -> None:
+        """DVFS actuator for replayed traces: extrapolate the recorded
+        samples to the operating point at ``target`` of the recorded
+        clock. Measurements only exist at the recorded point, so this
+        is an explicit model-based extrapolation using the same
+        dynamic-power law as :meth:`DeviceSpec.with_freq_scale` —
+        prefill is treated as compute-bound (latency scales ``1/f``,
+        power above the idle floor scales ``f^3``), decode as
+        memory-bound (latency unchanged, dynamic power ``f^3``), and
+        the idle/gated floors are unchanged. It exists so closed-loop
+        controllers can be evaluated against recorded hardware traces;
+        static replay sweeps should instead record the trace at the
+        target operating point."""
+        if target <= 0:
+            raise ValueError(f"freq_scale must be positive, got {target}")
+        if not 0.1 <= target <= 1.5:
+            raise ValueError(f"freq_scale {target:g} outside [0.1, 1.5]")
+        if target == self.freq_scale:
+            return
+        self.freq_scale = float(target)
+        u = float(target)
+        floor = self.idle_power_w
+
+        def dyn(p: float) -> float:
+            return floor + max(p - floor, 0.0) * u ** 3
+
+        self.prefill_samples = [
+            dict(s, latency_s=s["latency_s"] / u,
+                 power_w=dyn(s["power_w"]))
+            for s in self._prefill_recorded]
+        self.decode_samples = [
+            dict(s, power_w=dyn(s["power_w"]))
+            for s in self._decode_recorded]
 
     @staticmethod
     def _check_sample(s: Mapping[str, float], length_key: str) -> None:

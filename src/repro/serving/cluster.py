@@ -26,6 +26,7 @@ scores marginal energy per replica accordingly.
 from __future__ import annotations
 
 import dataclasses
+from bisect import bisect_right as _bisect_right
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -77,6 +78,13 @@ class ClusterReport:
     @property
     def gated_energy_j(self) -> float:
         return sum(r.gated_energy_j for r in self.replica_reports)
+
+    @property
+    def control(self) -> Optional[Dict]:
+        """Closed-loop control telemetry (stored on replica 0's report
+        — the controller is fleet-scoped); None on uncontrolled runs."""
+        return (self.replica_reports[0].control
+                if self.replica_reports else None)
 
     # -- requests -------------------------------------------------------
     @property
@@ -241,7 +249,9 @@ class ClusterEngine:
     def run(self, requests: List[Request], *,
             scheduler: Optional[Scheduler] = None,
             trace: Optional[PowerTrace] = None,
-            source: Optional[object] = None) -> ClusterReport:
+            source: Optional[object] = None,
+            controller: Optional[object] = None,
+            control_interval_s: float = 1.0) -> ClusterReport:
         """Serve a request stream across the fleet. A scheduler shapes
         and admits the *shared* stream before the router sees it, so
         shaping composes with routing; a planning scheduler also lets
@@ -251,7 +261,19 @@ class ClusterEngine:
         ``source`` is a :class:`~repro.workflows.WorkflowSource`: each
         completion is reported back (with its replica), released
         successors join the shared arrival stream, and a child forking
-        its parent's KV is affinity-routed to the parent's replica."""
+        its parent's KV is affinity-routed to the parent's replica.
+
+        ``controller`` is a :class:`~repro.control.Controller` firing
+        every ``control_interval_s`` of shared simulated time, with the
+        fleet-wide actuators: per-replica DVFS and a cluster-level
+        admission bucket gating releases before the router sees them."""
+        if controller is not None:
+            if self.disaggregated:
+                raise ValueError("controller= does not compose with "
+                                 "disaggregated prefill/decode fleets")
+            if source is not None:
+                raise ValueError("controller= cannot be combined with "
+                                 "a workflow source")
         reqs, shed = apply_schedule(requests, scheduler)
         if source is not None:
             source.bind(disaggregated=self.disaggregated,
@@ -269,7 +291,12 @@ class ClusterEngine:
                 rep = self._run_disaggregated(reqs, shed, gate,
                                               source=source)
             else:
-                rep = self._run(reqs, shed, gate, source=source)
+                hook = None
+                if controller is not None:
+                    from repro.control.hook import ControlHook
+                    hook = ControlHook(controller, control_interval_s)
+                rep = self._run(reqs, shed, gate, source=source,
+                                hook=hook)
         finally:
             for eng in self.replicas:
                 eng._trace = None
@@ -278,14 +305,21 @@ class ClusterEngine:
         return rep
 
     def _run(self, reqs: List[Request], shed: List[Request],
-             gate: bool, source: Optional[object] = None
-             ) -> ClusterReport:
+             gate: bool, source: Optional[object] = None,
+             hook: Optional[object] = None) -> ClusterReport:
         for eng in self.replicas:
             eng.stream_start()
         pending = list(reqs)
         head = 0
         seen = [0] * len(self.replicas)    # done cursors (source drain)
         self._gated = [False] * len(self.replicas)
+        if hook is not None:
+            hook.attach(list(enumerate(self.replicas)), pending)
+            arrivals = [r.effective_arrival for r in pending]
+
+            def fire(t: float) -> None:
+                n_arr = _bisect_right(arrivals, t + 1e-12)
+                hook.maybe_fire(t, n_arr, held=n_arr - head)
 
         def drain(i: int) -> None:
             done = self.replicas[i]._stream.done
@@ -300,6 +334,10 @@ class ClusterEngine:
         while True:
             t_arr = (pending[head].effective_arrival
                      if head < len(pending) else None)
+            if hook is not None and t_arr is not None:
+                # the admission bucket may hold an arrival past its raw
+                # arrival instant; the fleet delivers at the release
+                t_arr = hook.release_time(t_arr)
             ready = [eng for eng in self.replicas
                      if eng.stream_can_step()]
             nxt = min(ready, key=lambda e: e.stream_now) if ready \
@@ -328,14 +366,35 @@ class ClusterEngine:
                     if others:
                         o = min(others)
                         bound = o if bound is None else min(bound, o)
+                if hook is not None:
+                    # no phase runs past a control boundary, so actuator
+                    # re-targets (freq, admission rate) stay causal
+                    t_c = hook.next_boundary
+                    bound = t_c if bound is None else min(bound, t_c)
                 nxt.stream_step(
                     stop=None if bound is None
                     else HorizonStop(bound, mode="clock"))
                 if source is not None:
                     drain(self.replicas.index(nxt))
+                if hook is not None:
+                    fire(nxt.stream_now)
                 continue
             if t_arr is None:
                 break
+            if hook is not None and hook.next_boundary < t_arr - 1e-12:
+                # the gap to the next arrival crosses a control
+                # boundary: advance work-less replicas to the boundary
+                # and fire there, so the controller keeps observing
+                # (and may re-open admission) during lulls
+                t_c = hook.next_boundary
+                for j, eng in enumerate(self.replicas):
+                    if (eng.stream_now < t_c
+                            and not eng.stream_can_step()):
+                        eng.stream_idle(t_c, gated=gate)
+                        if gate:
+                            self._gated[j] = True
+                fire(t_c)
+                continue
             # next fleet event is an arrival: bring work-less replicas
             # up to the arrival instant (idle or gated), then route
             for j, eng in enumerate(self.replicas):
@@ -345,6 +404,8 @@ class ClusterEngine:
                         self._gated[j] = True
             req = pending[head]
             head += 1
+            if hook is not None:
+                hook.take(t_arr)
             aff = (source.route_affinity(req)
                    if source is not None else None)
             i = aff if aff is not None else \
@@ -357,6 +418,8 @@ class ClusterEngine:
                     + self.replicas[i].device.wake_latency_s)
                 self._gated[i] = False
             self.replicas[i].stream_submit(req)
+            if hook is not None:
+                fire(t_arr)
         stuck = [i for i, eng in enumerate(self.replicas)
                  if eng.stream_stuck()]
         if stuck:
@@ -369,6 +432,8 @@ class ClusterEngine:
         for eng in self.replicas:
             eng.stream_idle(t_end, gated=gate)
         reports = [eng.stream_report() for eng in self.replicas]
+        if hook is not None:
+            reports[0].control = hook.summary(t_end)
         return ClusterReport(replica_reports=reports,
                              policy=self.router.name,
                              wall_time_s=t_end, shed=shed)

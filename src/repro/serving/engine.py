@@ -29,6 +29,7 @@ Energy accounting (paper §5 methodology):
 from __future__ import annotations
 
 import dataclasses
+from bisect import bisect_right as _bisect_right
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -135,6 +136,10 @@ class ServeReport:
     # (repro.workflows.TaskReport) when a WorkflowSource drove the run
     prefix_reused_tokens: int = 0
     tasks: List = dataclasses.field(default_factory=list)
+    # closed-loop control telemetry (repro.control.ControlHook.summary):
+    # None unless a controller drove the run, so legacy reports are
+    # unchanged
+    control: Optional[Dict] = None
 
     @property
     def prefill_padding_fraction(self) -> float:
@@ -384,23 +389,60 @@ class ServeEngine:
         self.batcher = ContinuousBatcher(policy=self.batch_policy,
                                          **self._batcher_kw)
         self._stream: Optional[_StreamState] = None
+        # current DVFS operating point (repro.control actuates this via
+        # set_freq_scale; threaded into trace segments)
+        self.freq_scale: float = getattr(self.device, "freq_scale", 1.0)
         # power-state telemetry (repro.serving.trace): set per run by
         # run(trace=...) or by the cluster before stream_start()
         self._trace: Optional[PowerTrace] = None
         self._trace_replica: int = 0
 
     # ------------------------------------------------------------------
+    def set_freq_scale(self, target: float) -> None:
+        """Re-target the DVFS operating point mid-run (the closed-loop
+        control actuator). Delegates to the backend's actuator, then
+        refreshes the engine-side device/pricing handles so gap pricing
+        and router predictions follow the new clock."""
+        actuate = getattr(self.backend, "set_freq_scale", None)
+        if actuate is None:
+            raise ValueError(
+                f"{type(self.backend).__name__} exposes no DVFS "
+                "actuator (set_freq_scale); closed-loop frequency "
+                "control needs an analytic or replay backend")
+        actuate(target)
+        self.device = getattr(self.backend, "device", None) or self.device
+        self.energy = getattr(self.backend, "energy", None) or self.energy
+        self.freq_scale = float(target)
+
+    # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
             scheduler: Optional[Scheduler] = None,
             trace: Optional[PowerTrace] = None,
-            source: Optional["object"] = None) -> ServeReport:
+            source: Optional["object"] = None,
+            controller: Optional["object"] = None,
+            control_interval_s: float = 1.0) -> ServeReport:
         """Serve a request list, optionally shaped/admitted by a
         :class:`~repro.serving.scheduler.Scheduler` and recorded onto a
         :class:`~repro.serving.trace.PowerTrace` timeline.
 
         ``source`` is a :class:`~repro.workflows.WorkflowSource`: each
         completion is reported back to it and any dependent requests it
-        releases join the arrival stream at their release times."""
+        releases join the arrival stream at their release times.
+
+        ``controller`` is a :class:`~repro.control.Controller`: it
+        observes/plans/acts every ``control_interval_s`` of simulated
+        time, actuating DVFS (``set_freq_scale``) and admission (a live
+        token bucket gating releases into the batcher). With no
+        controller the legacy event loop runs — no ``control`` stops
+        are ever constructed, so results stay bit-identical."""
+        if controller is not None:
+            if self.mode != "continuous":
+                raise ValueError("controller= requires "
+                                 "mode='continuous'")
+            if source is not None:
+                raise ValueError("controller= cannot be combined with "
+                                 "a workflow source (control the "
+                                 "workflow run's engine instead)")
         reqs, shed = apply_schedule(requests, scheduler)
         if source is not None:
             source.bind(sequential=(self.mode == "sequential"),
@@ -412,7 +454,12 @@ class ServeEngine:
         self._trace_replica = 0     # standalone run (cluster sets >0)
         plans_gaps = scheduler is not None and scheduler.plans_gaps
         try:
-            if self.mode == "sequential":
+            if controller is not None:
+                from repro.control.hook import ControlHook
+                hook = ControlHook(controller, control_interval_s)
+                rep = self._run_controlled(reqs, hook,
+                                           plans_gaps=plans_gaps)
+            elif self.mode == "sequential":
                 rep = self._run_sequential(reqs, source=source)
             else:
                 rep = self._run_continuous(reqs, plans_gaps=plans_gaps,
@@ -428,7 +475,8 @@ class ServeEngine:
                 batch: float = 0.0) -> None:
         if self._trace is not None and t1 > t0:
             self._trace.record(self._trace_replica, state, t0, t1,
-                               energy_j, batch)
+                               energy_j, batch,
+                               freq_scale=self.freq_scale)
 
     # ------------------------------------------------------------------
     def _run_sequential(self, reqs: List[Request],
@@ -536,6 +584,65 @@ class ServeEngine:
                                        "be scheduled (KV pool too small)")
                 break
         return self.stream_report()
+
+    # ------------------------------------------------------------------
+    def _run_controlled(self, reqs: List[Request], hook,
+                        plans_gaps: bool = False) -> ServeReport:
+        """Continuous event loop with a closed-loop controller.
+
+        Identical to :meth:`_run_continuous` except that (a) each
+        request's release is additionally gated by the hook's live
+        admission bucket, (b) decode horizons stop at the next control
+        boundary (``HorizonStop(mode="control")``), and (c) the hook
+        fires at the end of the first phase crossing each boundary.
+        All three are deterministic functions of the simulation clock,
+        so macro-stepped and single-stepped controlled runs stay
+        bit-identical."""
+        self.stream_start()
+        s = self._stream
+        pending = list(reqs)
+        hook.attach([(0, self)], pending)
+        arrivals = [r.effective_arrival for r in pending]
+        head = 0
+        n = len(pending)
+        while len(s.done) < n:
+            while head < n:
+                t_rel = hook.release_time(
+                    pending[head].effective_arrival)
+                if t_rel > s.now + 1e-12:
+                    break
+                hook.take(s.now)
+                self.stream_submit(pending[head])
+                head += 1
+            t_c = hook.next_boundary
+            if self.stream_can_step():
+                stop = HorizonStop(t_c, mode="control")
+                if head < n:
+                    t_rel = hook.release_time(
+                        pending[head].effective_arrival)
+                    if t_rel <= t_c:
+                        stop = HorizonStop(t_rel, mode="admit")
+                self.stream_step(stop=stop)
+            elif head < n:
+                t_rel = hook.release_time(
+                    pending[head].effective_arrival)
+                t_to = min(t_rel, t_c)
+                wake = self.device.wake_latency_s
+                if (plans_gaps and t_rel <= t_c
+                        and t_rel - s.now > wake):
+                    self.stream_idle(t_rel - wake, gated=True)
+                self.stream_idle(t_to)
+            else:
+                if self.batcher.n_waiting:
+                    raise RuntimeError("deadlock: waiting requests "
+                                       "cannot be scheduled (KV pool "
+                                       "too small)")
+                break
+            n_arr = _bisect_right(arrivals, s.now + 1e-12)
+            hook.maybe_fire(s.now, n_arr, held=n_arr - head)
+        rep = self.stream_report()
+        rep.control = hook.summary(rep.wall_time_s)
+        return rep
 
     # -- stream primitives (single-engine run + cluster co-simulation) --
     def stream_start(self, t0: float = 0.0) -> None:
@@ -750,7 +857,8 @@ class ServeEngine:
             # one coalesced decode segment per macro-step
             self._trace.record_run(self._trace_replica, "decode", s.now,
                                    run.latencies_s, run.energies_j,
-                                   float(n))
+                                   float(n),
+                                   freq_scale=self.freq_scale)
         t0 = s.now
         self._last_phase_start = run.t_penult
         s.now = run.t_end

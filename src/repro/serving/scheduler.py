@@ -83,7 +83,13 @@ class HorizonStop:
       whose end time satisfies that;
     * ``clock`` — :class:`~repro.serving.cluster.ClusterEngine`'s
       co-simulation rule: a replica keeps stepping while
-      ``now < t_stop - eps``.
+      ``now < t_stop - eps``;
+    * ``control`` — a closed-loop controller's observe/plan/act
+      boundary (:mod:`repro.control`): decoding stops after the first
+      step whose end time crosses ``t_stop`` so the controller fires
+      with the same clock the single-step loop would see. With no
+      controller attached no ``control`` stop is ever constructed, so
+      macro-stepping stays bit-identical to HEAD.
 
     Either way the in-flight step always completes (the single-step
     loops only re-checked arrivals between steps).
@@ -94,7 +100,7 @@ class HorizonStop:
     eps: float = 1e-12
 
     def __post_init__(self):
-        if self.mode not in ("admit", "clock"):
+        if self.mode not in ("admit", "clock", "control"):
             raise ValueError(f"unknown horizon-stop mode {self.mode!r}")
 
     def hit(self, now: float) -> bool:
@@ -113,6 +119,21 @@ class HorizonStop:
             hits = t >= self.t_stop - self.eps
         idx = np.flatnonzero(hits)
         return int(idx[0]) + 1 if len(idx) else len(t)
+
+    def merged(self, other: "Optional[HorizonStop]") -> "HorizonStop":
+        """The earlier-stopping of two boundaries (``other`` may be
+        None). Used to compose an admission horizon with a control
+        boundary: decode stops at whichever rule trips first."""
+        if other is None or self.n_first_leq(other):
+            return self
+        return other
+
+    def n_first_leq(self, other: "HorizonStop") -> bool:
+        """Whether this boundary stops no later than ``other`` for any
+        step sequence: compares the effective cut times (an ``admit``
+        stop at t trips once ``now >= t - eps``; ``clock``/``control``
+        likewise) — with shared eps this reduces to ``t_stop``."""
+        return self.t_stop <= other.t_stop
 
 
 @dataclasses.dataclass

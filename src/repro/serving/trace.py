@@ -29,6 +29,12 @@ STATES = ("prefill", "decode", "idle", "gated")
 #: by energy_by_state()/time_by_state() only when actually present, so
 #: non-fleet traces (and their golden serializations) are unchanged
 TRANSITION_STATES = ("spinup", "drain")
+#: closed-loop controller action markers (:mod:`repro.control`) —
+#: zero-duration, zero-energy segments stamping each observe/plan/act
+#: firing onto the timeline. Like the transition states they surface in
+#: the by-state summaries only when present, so controller-off traces
+#: serialize byte-identically and 100%-energy accounting is unaffected.
+CONTROL_STATES = ("control",)
 
 
 @dataclasses.dataclass
@@ -40,6 +46,9 @@ class Segment:
     energy_j: float
     batch: float = 0.0          # time-weighted mean live batch (busy states)
     n_events: int = 1           # accruals merged into this segment
+    #: DVFS operating point the segment executed at; serialized only
+    #: when != 1.0 so pre-DVFS trace JSON is unchanged
+    freq_scale: float = 1.0
 
     @property
     def duration_s(self) -> float:
@@ -52,11 +61,14 @@ class Segment:
         return self.energy_j / d if d > 0 else 0.0
 
     def as_dict(self) -> Dict:
-        return {"replica": self.replica, "state": self.state,
-                "t0": self.t0, "t1": self.t1,
-                "duration_s": self.duration_s,
-                "energy_j": self.energy_j, "power_w": self.power_w,
-                "batch": self.batch, "n_events": self.n_events}
+        out = {"replica": self.replica, "state": self.state,
+               "t0": self.t0, "t1": self.t1,
+               "duration_s": self.duration_s,
+               "energy_j": self.energy_j, "power_w": self.power_w,
+               "batch": self.batch, "n_events": self.n_events}
+        if self.freq_scale != 1.0:
+            out["freq_scale"] = self.freq_scale
+        return out
 
 
 class PowerTrace:
@@ -69,13 +81,16 @@ class PowerTrace:
 
     # ------------------------------------------------------------------
     def record(self, replica: int, state: str, t0: float, t1: float,
-               energy_j: float, batch: float = 0.0) -> None:
-        if state not in STATES and state not in TRANSITION_STATES:
+               energy_j: float, batch: float = 0.0,
+               freq_scale: float = 1.0) -> None:
+        if (state not in STATES and state not in TRANSITION_STATES
+                and state not in CONTROL_STATES):
             raise ValueError(f"unknown power state {state!r}")
         if t1 < t0:
             raise ValueError(f"segment ends before it starts: {t0}..{t1}")
         tail = self._last.get(replica)
         if (tail is not None and tail.state == state
+                and tail.freq_scale == freq_scale
                 and abs(t0 - tail.t1) <= self.merge_tol_s):
             # merge contiguous same-state accruals; batch is
             # duration-weighted so decode batch decay stays visible
@@ -90,12 +105,27 @@ class PowerTrace:
             tail.n_events += 1
             return
         seg = Segment(replica=replica, state=state, t0=t0, t1=t1,
-                      energy_j=energy_j, batch=batch)
+                      energy_j=energy_j, batch=batch,
+                      freq_scale=freq_scale)
         self.segments.append(seg)
         self._last[replica] = seg
 
+    def record_action(self, replica: int, t: float,
+                      freq_scale: float = 1.0) -> None:
+        """Stamp a controller action onto the timeline: a zero-duration
+        zero-energy ``control`` marker segment carrying the operating
+        point the controller just set. Markers never merge (each firing
+        stays a distinct segment) and add no energy, so 100%-energy
+        accounting and coverage() are unchanged."""
+        seg = Segment(replica=replica, state="control", t0=t, t1=t,
+                      energy_j=0.0, batch=0.0, freq_scale=freq_scale)
+        self.segments.append(seg)
+        # deliberately NOT installed as the replica tail: the marker
+        # must not break merging of the real power segments around it
+
     def record_run(self, replica: int, state: str, t0: float,
-                   latencies, energies, batch: float = 0.0) -> None:
+                   latencies, energies, batch: float = 0.0,
+                   freq_scale: float = 1.0) -> None:
         """Record one engine macro-step (a fused run of same-state
         accruals, e.g. all decode steps inside one event horizon).
 
@@ -110,7 +140,8 @@ class PowerTrace:
         for lat, e in zip(latencies, energies):
             t1 = now + lat
             if t1 > now:
-                self.record(replica, state, now, t1, e, batch)
+                self.record(replica, state, now, t1, e, batch,
+                            freq_scale=freq_scale)
             now = t1
 
     # ------------------------------------------------------------------

@@ -308,14 +308,34 @@ class TestDVFS:
 
     def test_identity_and_errors(self):
         assert H100_SXM.with_freq_scale(1.0) is H100_SXM
-        with pytest.raises(ValueError, match="already a scaled"):
-            H100_SXM.with_freq_scale(0.8).with_freq_scale(0.5)
-        with pytest.raises(ValueError, match="already a scaled"):
-            # no silent "back to nominal": 1.0 on a scaled spec would
-            # otherwise return the scaled numbers
-            H100_SXM.with_freq_scale(0.5).with_freq_scale(1.0)
+        scaled = H100_SXM.with_freq_scale(0.5)
+        assert scaled.with_freq_scale(1.0) is scaled
+        with pytest.raises(ValueError, match="positive"):
+            H100_SXM.with_freq_scale(0.0)
         with pytest.raises(ValueError, match="outside"):
             TPU_V5E.with_freq_scale(0.01)
+        with pytest.raises(ValueError, match="outside"):
+            # the *combined* scale is bounds-checked, not the step
+            H100_SXM.with_freq_scale(0.5).with_freq_scale(0.15)
+
+    def test_composition_is_multiplicative_and_exact(self):
+        """Repeated application composes: scaling by a then b lands on
+        the same operating point as scaling once by a*b — so a DVFS
+        controller re-targeting a live device never accumulates
+        drift."""
+        once = H100_SXM.with_freq_scale(0.4)
+        twice = H100_SXM.with_freq_scale(0.8).with_freq_scale(0.5)
+        assert twice.freq_scale == pytest.approx(0.4)
+        assert twice.name == once.name == "h100-sxm@f0.4"
+        for f in ("peak_flops_16", "power_memory", "power_mxu",
+                  "power_scalar", "hbm_bw", "idle_power", "gated_power"):
+            assert getattr(twice, f) == pytest.approx(
+                getattr(once, f), rel=1e-12), f
+        # and it round-trips back up: 0.4 -> 1.0 via a 2.5x step
+        back = twice.with_freq_scale(2.5)
+        assert back.freq_scale == pytest.approx(1.0)
+        assert back.power_memory == pytest.approx(
+            H100_SXM.power_memory, rel=1e-12)
 
     def test_power_states_table(self):
         states = H100_SXM.power_states()

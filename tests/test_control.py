@@ -1,0 +1,613 @@
+"""Closed-loop control subsystem: admission-bucket semantics, view
+actuator staging, controller policies, macro<->single bit-parity with a
+controller attached, mid-run token-bucket conservation, transition
+billing through controller-triggered autoscaling, replay-plant model
+mismatch, and spec/result serialization stability."""
+import copy
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, RunResult
+from repro.batching.policy import SlotCountPolicy
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.control import (AdmissionBucket, CONTROLLERS, ControlHook,
+                           Controller, ControlView, MPCController,
+                           ReactiveController, ReplicaObs,
+                           StaticController, make_controller)
+from repro.core.hardware import H100_SXM
+from repro.serving.arrival import paper_requests, poisson_arrivals
+from repro.serving.backend import (AnalyticBackend, RecordingBackend,
+                                   ReplayBackend, REPLAY_SCHEMA)
+from repro.serving.cluster import ClusterEngine
+from repro.serving.engine import ServeEngine
+from repro.serving.requests import RequestStatus
+from repro.serving.router import make_router
+from repro.serving.trace import PowerTrace
+from repro.batching.policy import SlotCountPolicy
+
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+
+
+def _mix(seed, n=40, rate=6.0, **shape):
+    shape.setdefault("prompt_range", (150, 3000))
+    shape.setdefault("output_range", (5, 200))
+    return paper_requests(n, poisson_arrivals(n, rate, seed=seed),
+                          seed=seed, **shape)
+
+
+def _engine(macro=True, max_batch=16, **kw):
+    return ServeEngine(LLAMA8B, macro_step=macro,
+                       batch_policy=SlotCountPolicy(max_batch=max_batch),
+                       **kw)
+
+
+def _fields(rep):
+    """Every deterministic scalar plus the full request lifecycle (the
+    host-time ``controller_overhead_s`` is excluded by design)."""
+    ctl = None
+    if rep.control is not None:
+        ctl = (rep.control["n_control_actions"],
+               rep.control["mean_freq_scale"],
+               tuple(tuple(sorted(a.items()))
+                     for a in rep.control["control_actions"]))
+    return (rep.total_energy_j, rep.busy_energy_j, rep.idle_energy_j,
+            rep.gated_energy_j, rep.wall_time_s, rep.mean_batch,
+            rep.n_prefill_batches, rep.n_decode_steps, ctl,
+            tuple((r.req_id, r.status, r.t_prefill_start,
+                   r.t_first_token, r.t_done, r.tokens_generated,
+                   r.energy_j) for r in rep.requests))
+
+
+# ---------------------------------------------------------------------------
+# admission bucket
+# ---------------------------------------------------------------------------
+class TestAdmissionBucket:
+    def test_unlimited_is_transparent(self):
+        b = AdmissionBucket()
+        assert b.release_time(3.7) == 3.7
+        b.take(3.7)
+        assert b.release_time(3.8) == 3.8
+
+    def test_rate_limited_releases(self):
+        b = AdmissionBucket(rate_per_s=2.0, burst=1)
+        assert b.release_time(0.0) == 0.0       # burst token ready
+        b.take(0.0)
+        # next token earns at 2/s: ready at 0.5
+        assert b.release_time(0.0) == pytest.approx(0.5)
+        b.take(0.5)
+        assert b.release_time(0.9) == pytest.approx(1.0)
+
+    def test_release_time_is_non_mutating(self):
+        b = AdmissionBucket(rate_per_s=4.0, burst=1)
+        b.take(0.0)
+        r1 = b.release_time(0.0)
+        # polling at arbitrary intermediate instants must not change
+        # the admission instant (engines poll while macro-stepping)
+        for t in (0.01, 0.1, 0.2):
+            b.release_time(t)
+        assert b.release_time(0.0) == r1
+
+    def test_discretization_independence(self):
+        """Closed-form accrual: admission instants are identical no
+        matter how often the clock is sampled in between."""
+        coarse = AdmissionBucket(rate_per_s=3.0, burst=2)
+        fine = AdmissionBucket(rate_per_s=3.0, burst=2)
+        arrivals = [0.0, 0.1, 0.2, 0.3, 1.5, 1.6]
+        out_c, out_f = [], []
+        for a in arrivals:
+            t = coarse.release_time(a)
+            coarse.take(t)
+            out_c.append(t)
+        for a in arrivals:
+            t = fine.release_time(a)
+            # sample the clock densely before committing
+            for k in range(20):
+                fine.release_time(a + k * 1e-3)
+            fine.take(t)
+            out_f.append(t)
+        assert out_c == out_f
+
+    def test_set_rate_conserves_earned_tokens(self):
+        """Tokens earned before a rate change accrued at the OLD rate
+        are kept; only time after the change earns at the new rate."""
+        b = AdmissionBucket(rate_per_s=2.0, burst=4)
+        b.take(0.0)
+        for _ in range(3):
+            b.take(0.0)                     # drain the burst
+        assert b.tokens == 0.0
+        b.set_rate(10.0, now=0.25)          # earned 0.5 at the old rate
+        assert b.tokens == pytest.approx(0.5)
+        # the remaining 0.5 tokens arrive at 10/s: ready at 0.30
+        assert b.release_time(0.25) == pytest.approx(0.30)
+
+    def test_set_rate_to_unlimited_and_burst_clamp(self):
+        b = AdmissionBucket(rate_per_s=1.0, burst=8)
+        b.set_rate(None, now=1.0)
+        assert b.release_time(5.0) == 5.0
+        b.set_rate(2.0, now=5.0, burst=2)
+        assert b.burst == 2.0 and b.tokens <= 2.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="burst"):
+            AdmissionBucket(burst=0)
+        with pytest.raises(ValueError, match="positive"):
+            AdmissionBucket(rate_per_s=0.0)
+        b = AdmissionBucket()
+        with pytest.raises(ValueError, match="positive"):
+            b.set_rate(-1.0, now=0.0)
+
+
+# ---------------------------------------------------------------------------
+# view actuator staging
+# ---------------------------------------------------------------------------
+def _view(n=2, live=4, queue=0, **kw):
+    obs = [ReplicaObs(replica=i, freq_scale=1.0, queue_depth=queue,
+                      tokens_in_flight=100.0, live=live, max_batch=8,
+                      energy_wh_per_request=0.05, slo_attainment=1.0)
+           for i in range(n)]
+    kw.setdefault("interval_s", 1.0)
+    kw.setdefault("arrival_rate_per_s", 2.0)
+    kw.setdefault("admission_rate", None)
+    kw.setdefault("n_active", n)
+    return ControlView(0.0, obs, **kw)
+
+
+class TestControlView:
+    def test_aggregates(self):
+        v = _view(n=2, live=4, queue=3)
+        assert v.queue_depth == 6 and v.live == 8
+        assert v.mean_occupancy == pytest.approx(0.5)
+        assert v.freq_scale == 1.0
+        assert v.energy_wh_per_request == pytest.approx(0.05)
+        assert v.slo_attainment == 1.0
+
+    def test_nan_observations_are_skipped(self):
+        obs = [ReplicaObs(replica=0, freq_scale=1.0, queue_depth=0,
+                          tokens_in_flight=0.0, live=0, max_batch=8,
+                          energy_wh_per_request=float("nan"),
+                          slo_attainment=float("nan"))]
+        v = ControlView(0.0, obs, interval_s=1.0,
+                        arrival_rate_per_s=0.0, admission_rate=None)
+        assert math.isnan(v.energy_wh_per_request)
+        assert math.isnan(v.slo_attainment)
+
+    def test_staging_and_missing_capabilities(self):
+        v = _view(can_freq=False)
+        with pytest.raises(RuntimeError, match="no DVFS"):
+            v.set_freq_scale(0.5)
+        v = _view(can_admit=False)
+        with pytest.raises(RuntimeError, match="admission"):
+            v.set_admission_rate(4.0)
+        v = _view(can_scale=False)
+        with pytest.raises(RuntimeError, match="fleet"):
+            v.set_replica_target(2)
+
+    def test_bounds_and_clamps(self):
+        v = _view(can_scale=True, min_replicas=1, max_replicas=3)
+        with pytest.raises(ValueError, match="outside"):
+            v.set_freq_scale(0.05)
+        with pytest.raises(ValueError, match="unknown replica"):
+            v.set_freq_scale(0.5, replica=9)
+        v.set_replica_target(99)
+        assert v.replica_target == 3
+        v.set_replica_target(0)
+        assert v.replica_target == 1
+
+    def test_per_replica_freq_targets(self):
+        v = _view(n=2)
+        v.set_freq_scale(0.5)
+        v.set_freq_scale(0.8, replica=1)
+        freq, adm, rep = v.staged()
+        assert freq == {None: 0.5, 1: 0.8}
+        assert rep is None
+
+
+# ---------------------------------------------------------------------------
+# controller policies
+# ---------------------------------------------------------------------------
+class TestControllers:
+    def test_registry(self):
+        assert set(CONTROLLERS) == {"static", "reactive", "mpc"}
+        assert isinstance(make_controller("mpc", slo_p99_s=5.0),
+                          MPCController)
+        with pytest.raises(ValueError, match="unknown controller"):
+            make_controller("pid")
+
+    def test_static_identity_stages_nothing(self):
+        v = _view()
+        StaticController().act(v)
+        freq, adm, rep = v.staged()
+        assert not freq and rep is None
+        assert adm is v.admission_target
+
+    def test_reactive_steps_down_when_idle(self):
+        c = ReactiveController(freq_levels=(0.5, 1.0))
+        v = _view(live=0, queue=0)
+        c.act(v)
+        assert v.staged()[0] == {None: 0.5}
+
+    def test_reactive_jumps_to_max_under_pressure(self):
+        c = ReactiveController(freq_levels=(0.5, 0.7, 1.2),
+                               queue_high=2)
+        c._level = 0
+        v = _view(live=8, queue=5)       # replicas currently at 1.0
+        c.act(v)
+        assert v.staged()[0] == {None: 1.2}
+
+    def test_reactive_skips_noop_staging(self):
+        c = ReactiveController(freq_levels=(0.5, 1.0), queue_high=2)
+        v = _view(live=8, queue=5)       # already at the max level
+        c.act(v)
+        assert v.staged()[0] == {}
+
+    def test_mpc_requires_prepare(self):
+        with pytest.raises(RuntimeError, match="prepare"):
+            MPCController().act(_view())
+
+    def test_param_validation(self):
+        with pytest.raises(ValueError, match="outside"):
+            StaticController(freq_scale=2.0)
+        with pytest.raises(ValueError, match="outside"):
+            ReactiveController(freq_levels=(0.01,))
+        with pytest.raises(ValueError, match="positive"):
+            MPCController(slo_p99_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# engine wiring: validation + macro/single parity (satellite 3)
+# ---------------------------------------------------------------------------
+class TestEngineValidation:
+    def test_sequential_mode_rejected(self):
+        eng = ServeEngine(LLAMA8B, mode="sequential",
+                          batch_policy=SlotCountPolicy(max_batch=8))
+        with pytest.raises(ValueError, match="continuous"):
+            eng.run(_mix(0, n=4), controller=StaticController())
+
+    def test_disaggregated_cluster_rejected(self):
+        cluster = ClusterEngine(
+            [ServeEngine(LLAMA8B, pool="prefill",
+                         batch_policy=SlotCountPolicy(max_batch=8)),
+             ServeEngine(LLAMA8B, pool="decode",
+                         batch_policy=SlotCountPolicy(max_batch=8))],
+            make_router("round_robin"))
+        with pytest.raises(ValueError, match="disaggregated"):
+            cluster.run(_mix(0, n=4), controller=StaticController())
+
+    def test_hook_type_and_interval_validation(self):
+        with pytest.raises(TypeError, match="Controller"):
+            ControlHook(object())
+        with pytest.raises(ValueError, match="positive"):
+            ControlHook(StaticController(), 0.0)
+
+
+class _RateSwitch(Controller):
+    """Opens admission from ``early`` to ``late`` req/s at t_switch."""
+
+    name = "rate-switch"
+
+    def __init__(self, t_switch, early, late):
+        self.t_switch, self.early, self.late = t_switch, early, late
+
+    def act(self, view):
+        want = self.early if view.t < self.t_switch else self.late
+        if view.can_admit and view.admission_rate != want:
+            view.set_admission_rate(want, burst=1)
+
+
+CONTROLLER_FACTORIES = {
+    "static_downclock": lambda: StaticController(freq_scale=0.6),
+    "reactive": lambda: ReactiveController(),
+    "mpc": lambda: MPCController(slo_p99_s=10.0),
+    "rate_switch": lambda: _RateSwitch(4.0, 3.0, 50.0),
+}
+
+
+class TestMacroSingleParity:
+    @pytest.mark.parametrize("name", sorted(CONTROLLER_FACTORIES))
+    def test_controlled_runs_bit_identical(self, name):
+        out = []
+        for macro in (False, True):
+            eng = _engine(macro=macro)
+            out.append(eng.run(_mix(1, n=32),
+                               controller=CONTROLLER_FACTORIES[name](),
+                               control_interval_s=2.0))
+        assert _fields(out[0]) == _fields(out[1])
+        assert len(out[0].requests) == 32
+        assert all(r.status is RequestStatus.DONE for r in out[0].requests)
+
+    def test_noop_static_matches_uncontrolled_bit_for_bit(self):
+        """A default StaticController changes nothing: the controlled
+        event loop (extra control horizon stops included) reproduces
+        the uncontrolled run exactly, with zero recorded actions."""
+        base = _engine().run(_mix(2, n=32))
+        ctl = _engine().run(_mix(2, n=32),
+                            controller=StaticController(),
+                            control_interval_s=1.0)
+        assert ctl.control["n_control_actions"] == 0
+        assert ctl.control["mean_freq_scale"] == 1.0
+        fb, fc = _fields(base), _fields(ctl)
+        assert fb[:8] == fc[:8]        # every energy/time/count scalar
+        assert fb[-1] == fc[-1]        # full request lifecycles
+
+    def test_cluster_controlled_run_is_deterministic(self):
+        """Cross-replica phase overlap makes macro<->single parity a
+        single-engine contract; on clusters the contract is seeded
+        determinism plus completion under control."""
+        out = []
+        for _ in range(2):
+            cluster = ClusterEngine(
+                [_engine(), _engine()], make_router("least_loaded"))
+            out.append(cluster.run(_mix(3, n=48, rate=10.0),
+                                   controller=MPCController(
+                                       slo_p99_s=10.0),
+                                   control_interval_s=2.0))
+        a, b = out
+        assert a.total_energy_j == b.total_energy_j
+        assert a.wall_time_s == b.wall_time_s
+        assert ({k: v for k, v in a.control.items()
+                 if k != "controller_overhead_s"}
+                == {k: v for k, v in b.control.items()
+                    if k != "controller_overhead_s"})
+        assert ([r.t_done for r in a.requests]
+                == [r.t_done for r in b.requests])
+        assert all(r.status is RequestStatus.DONE for r in a.requests)
+
+
+class TestAdmissionConservation:
+    """Mid-run token-bucket refill changes conserve admitted tokens."""
+
+    def test_rate_change_bounds_early_admissions(self):
+        n, t_switch, early = 48, 4.0, 3.0
+        rep = _engine().run(_mix(4, n=n, rate=30.0),
+                            controller=_RateSwitch(t_switch, early, 80.0),
+                            control_interval_s=1.0)
+        assert all(r.status is RequestStatus.DONE for r in rep.requests)
+        # no over-admission before the switch: at most early*t + burst
+        # requests can have entered service by t_switch
+        n_early = sum(r.t_prefill_start < t_switch
+                      for r in rep.requests)
+        assert n_early <= early * t_switch + 1
+        # and the bucket actually opened after: everything completes
+        assert len(rep.requests) == n
+        acts = rep.control["control_actions"]
+        assert {a["admission_rate"] for a in acts} == {early, 80.0}
+
+    def test_throttled_run_completes_and_is_deterministic(self):
+        runs = [_engine().run(
+            _mix(5, n=24, rate=20.0),
+            controller=_RateSwitch(3.0, 2.0, 40.0),
+            control_interval_s=0.5) for _ in range(2)]
+        assert _fields(runs[0]) == _fields(runs[1])
+
+
+# ---------------------------------------------------------------------------
+# controller-triggered autoscaling bills 100% of transition joules
+# ---------------------------------------------------------------------------
+class TestControlledAutoscaleBilling:
+    def test_spinup_joules_fully_billed(self):
+        spec = ExperimentSpec(
+            model="llama-3.1-8b", n_requests=300, arrival="poisson",
+            arrival_params={"rate_per_s": 12.0}, max_batch=8,
+            replicas=3, fleet="vector", controller="reactive",
+            controller_params={"queue_high": 12},
+            control_interval_s=5.0, trace=True)
+        res = spec.run()
+        assert res.n_requests == 300 and res.n_shed == 0
+        assert res.n_transitions >= 1
+        states = res.energy_by_state_j
+        # every transition joule shows up in the power-state ledger
+        assert res.transition_energy_j == pytest.approx(
+            states.get("spinup", 0.0) + states.get("drain", 0.0))
+        assert res.transition_energy_j >= H100_SXM.spinup_energy_j
+        # and the ledger still closes to 100% of total energy
+        assert res.trace_coverage == pytest.approx(1.0, abs=1e-9)
+        # the control markers are in the trace but carry no energy
+        assert states.get("control", 0.0) == 0.0
+
+    def test_static_controller_sizes_fleet_at_start(self):
+        spec = ExperimentSpec(
+            model="llama-3.1-8b", n_requests=60, arrival="poisson",
+            arrival_params={"rate_per_s": 8.0}, max_batch=8,
+            replicas=3, fleet="vector", controller="static",
+            controller_params={"n_replicas": 3})
+        res = spec.run()
+        # staged at t=0: all three replicas start active, no billed
+        # mid-run transitions
+        assert res.n_transitions == 0
+        assert min(res.requests_per_replica) > 0
+
+
+# ---------------------------------------------------------------------------
+# replay plants and deliberate model mismatch
+# ---------------------------------------------------------------------------
+def _record_trace(seed=6, n=48, rate=4.0):
+    rec = RecordingBackend(AnalyticBackend(LLAMA8B))
+    ServeEngine(LLAMA8B, backend=rec,
+                batch_policy=SlotCountPolicy(max_batch=16)).run(
+        _mix(seed, n=n, rate=rate))
+    return rec.to_trace(model=LLAMA8B.name, device="h100-sxm")
+
+
+class TestReplayControl:
+    def _run(self, trace, controller):
+        eng = ServeEngine(LLAMA8B, backend=ReplayBackend(trace),
+                          batch_policy=SlotCountPolicy(max_batch=16))
+        return eng.run(_mix(7, n=48, rate=4.0), controller=controller,
+                       control_interval_s=2.0)
+
+    def test_mpc_on_replay_completes_and_beats_static(self):
+        trace = _record_trace()
+        base = self._run(trace, StaticController())
+        mpc = self._run(trace, MPCController(slo_p99_s=15.0))
+        assert all(r.status is RequestStatus.DONE for r in mpc.requests)
+        assert len(mpc.requests) == 48
+        assert mpc.control["mean_freq_scale"] < 1.0
+        assert mpc.total_energy_j < base.total_energy_j
+
+    def test_model_mismatch_degrades_gracefully(self):
+        """The replay plant costs 2x what the MPC's analytic planner
+        believes — the controller must still complete every request
+        and still beat static-nominal on energy."""
+        trace = _record_trace()
+        warped = copy.deepcopy(trace)
+        for s in warped["prefill"] + warped["decode"]:
+            s["power_w"] *= 2.0
+        base = self._run(warped, StaticController())
+        mpc = self._run(warped, MPCController(slo_p99_s=15.0))
+        assert all(r.status is RequestStatus.DONE for r in mpc.requests)
+        assert len(mpc.requests) == 48
+        assert mpc.total_energy_j < base.total_energy_j
+
+    def test_replay_freq_extrapolation_laws(self):
+        """Downclocking a replayed trace: prefill slows as 1/f, decode
+        latency is pinned (memory-bound measurements), dynamic power
+        scales as f^3 above the recorded idle floor."""
+        be = ReplayBackend(_record_trace())
+        be.start()
+        from repro.serving.backend import DecodeBatch, PrefillBatch
+        from repro.serving.requests import Request
+        r = Request(req_id=0, prompt=None, prompt_len=512,
+                    max_new_tokens=8, arrival_time=0.0)
+        pre1 = be.prefill(PrefillBatch(picks=[(None, r)], pad_len=512,
+                                       stack="fused"))
+        d1 = be.decode_step(DecodeBatch(slots=[0], requests=[r],
+                                        cache_lens=[513]))
+        be.set_freq_scale(0.5)
+        be.release_slot(0)
+        pre2 = be.prefill(PrefillBatch(picks=[(None, r)], pad_len=512,
+                                       stack="fused"))
+        d2 = be.decode_step(DecodeBatch(slots=[0], requests=[r],
+                                        cache_lens=[513]))
+        assert pre2.latency_s == pytest.approx(pre1.latency_s / 0.5)
+        assert d2.latency_s == pytest.approx(d1.latency_s)
+        assert d2.energy_j < d1.energy_j
+        assert REPLAY_SCHEMA == "repro-replay/v1"
+
+
+# ---------------------------------------------------------------------------
+# trace telemetry (satellite 2)
+# ---------------------------------------------------------------------------
+class TestTraceTelemetry:
+    def test_segments_carry_freq_scale_only_off_nominal(self):
+        tr = PowerTrace()
+        tr.record(0, "decode", 0.0, 1.0, 100.0)
+        tr.record(0, "decode", 1.0, 2.0, 100.0, freq_scale=0.5)
+        d0, d1 = [s.as_dict() for s in tr.segments]
+        assert "freq_scale" not in d0        # nominal: key omitted, so
+        assert d1["freq_scale"] == 0.5       # legacy dumps are stable
+
+    def test_control_marker_segments(self):
+        tr = PowerTrace()
+        tr.record(0, "decode", 0.0, 1.0, 100.0)
+        tr.record_action(0, 0.5, freq_scale=0.7)
+        tr.record(0, "decode", 1.0, 2.0, 50.0)
+        acts = [s for s in tr.segments if s.state == "control"]
+        assert len(acts) == 1
+        a = acts[0]
+        assert a.t0 == a.t1 == 0.5 and a.energy_j == 0.0
+        assert a.freq_scale == 0.7
+        # zero-duration markers do not disturb the energy ledger
+        assert tr.coverage(150.0) == pytest.approx(1.0)
+        assert tr.energy_by_state().get("control", 0.0) == 0.0
+
+    def test_controlled_run_trace_accounts_every_joule(self):
+        tr = PowerTrace()
+        rep = _engine().run(_mix(8, n=24), trace=tr,
+                            controller=ReactiveController(),
+                            control_interval_s=2.0)
+        assert tr.coverage(rep.total_energy_j) == pytest.approx(
+            1.0, abs=1e-9)
+        states = tr.time_by_state()
+        if rep.control["n_control_actions"]:
+            assert states.get("control", 0.0) == 0.0
+        # serving segments carry the operating point they ran at
+        freqs = {s.freq_scale for s in tr.segments
+                 if s.state in ("prefill", "decode")}
+        assert len(freqs) >= 2               # reactive actually moved
+
+
+# ---------------------------------------------------------------------------
+# spec / result serialization
+# ---------------------------------------------------------------------------
+class TestSpecAndResult:
+    def test_default_spec_omits_controller_axes(self):
+        d = ExperimentSpec().to_dict()
+        for key in ("controller", "controller_params",
+                    "control_interval_s"):
+            assert key not in d
+
+    def test_spec_roundtrip_and_hash_sensitivity(self):
+        spec = ExperimentSpec(controller="mpc",
+                              controller_params={"slo_p99_s": 8.0},
+                              control_interval_s=5.0)
+        clone = ExperimentSpec.from_json(spec.to_json())
+        assert clone == spec
+        assert clone.spec_hash() == spec.spec_hash()
+        assert spec.spec_hash() != ExperimentSpec().spec_hash()
+        assert (spec.spec_hash()
+                != spec.derive(control_interval_s=10.0).spec_hash())
+
+    @pytest.mark.parametrize("bad", [
+        dict(controller_params={"slo_p99_s": 5.0}),
+        dict(control_interval_s=5.0),
+        dict(controller="pid"),
+        dict(controller="mpc", mode="sequential"),
+        dict(controller="mpc", pipeline="profile"),
+        dict(controller="mpc", workflow="rag_chain"),
+        dict(controller="mpc", disaggregate=1, replicas=2),
+        dict(controller="mpc", autoscaler="queue_depth",
+             fleet="vector"),
+        dict(controller="mpc", control_interval_s=0.0),
+    ])
+    def test_validation_rejects(self, bad):
+        with pytest.raises(ValueError):
+            ExperimentSpec(**bad)
+
+    def test_result_control_fields_roundtrip(self):
+        spec = ExperimentSpec(n_requests=24, arrival="poisson",
+                              arrival_params={"rate_per_s": 4.0},
+                              max_batch=16, controller="mpc",
+                              controller_params={"slo_p99_s": 8.0},
+                              control_interval_s=2.0)
+        res = spec.run()
+        assert res.n_control_actions >= 1
+        assert 0.1 <= res.mean_freq_scale <= 1.0
+        assert res.controller_overhead_s >= 0.0
+        assert res.control_actions
+        blob = res.to_json()
+        assert RunResult.from_json(blob).to_json() == blob
+
+    def test_uncontrolled_result_omits_control_fields(self):
+        res = ExperimentSpec(n_requests=8).run()
+        d = res.to_dict()
+        for key in ("n_control_actions", "mean_freq_scale",
+                    "controller_overhead_s", "control_actions"):
+            assert key not in d
+
+    def test_controlled_replay_gets_per_replica_backends(self, tmp_path):
+        path = str(tmp_path / "trace.json")
+        with open(path, "w") as f:
+            json.dump(_record_trace(), f)
+        spec = ExperimentSpec(model="llama-3.1-8b", backend="replay",
+                              replay_path=path, n_requests=16,
+                              max_batch=8, replicas=2,
+                              controller="static",
+                              controller_params={"freq_scale": 0.7})
+        engine = spec.build_engine()
+        backends = [eng.backend for eng in engine.replicas]
+        assert backends[0] is not backends[1]
+        res = spec.run()
+        assert res.n_requests == 16
+        assert res.mean_freq_scale == pytest.approx(0.7, abs=0.05)
+
+    def test_identical_specs_identical_results_modulo_overhead(self):
+        spec = ExperimentSpec(n_requests=24, arrival="poisson",
+                              arrival_params={"rate_per_s": 6.0},
+                              max_batch=16, controller="reactive",
+                              control_interval_s=1.0)
+        a, b = spec.run().to_dict(), spec.run().to_dict()
+        a.pop("controller_overhead_s"), b.pop("controller_overhead_s")
+        assert a == b
