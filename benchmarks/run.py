@@ -67,8 +67,8 @@ def _row_record(suite: str, row) -> dict:
 def _benches():
     from benchmarks import (backend, batching, cluster, control, fleet,
                             formation, macro, microbench, precision,
-                            roofline_report, scheduler, serving, simperf,
-                            workflows)
+                            resilience, roofline_report, scheduler,
+                            serving, simperf, workflows)
     return [("precision", precision),
             ("batching", batching),
             ("serving", serving),
@@ -77,6 +77,7 @@ def _benches():
             ("cluster", cluster),
             ("fleet", fleet),
             ("control", control),
+            ("resilience", resilience),
             ("scheduler", scheduler),
             ("backend", backend),
             ("macro", macro),
@@ -126,6 +127,7 @@ def main(argv=None) -> None:
         os.environ.setdefault("REPRO_MACRO_FLEET_NREQ", "20000")
         os.environ.setdefault("REPRO_FLEET_NREQ", "262144")
         os.environ.setdefault("REPRO_CONTROL_NREQ", "1400")
+        os.environ.setdefault("REPRO_RESILIENCE_NREQ", "400")
 
     if args.list:
         _list_suites()

@@ -27,6 +27,11 @@ from repro.configs.paper_zoo import PAPER_MODELS  # noqa: F401
 from repro.control import (Controller, ControlView,  # noqa: F401
                            StaticController, ReactiveController,
                            MPCController, CONTROLLERS, make_controller)
+from repro.faults import (FaultEvent, FaultSchedule,  # noqa: F401
+                          FAULT_KINDS, RetryPolicy, RETRY_POLICIES,
+                          make_faults, make_retry,
+                          random_fault_schedule, check_run_invariants,
+                          InvariantViolation)
 from repro.serving.backend import (InferenceBackend, PhaseResult,  # noqa: F401
                                    DecodeRun, AnalyticBackend,
                                    ExecutedBackend, ReplayBackend,
@@ -39,7 +44,7 @@ from repro.workflows import (Workflow, WorkflowStep,  # noqa: F401
                              TaskReport, WorkflowSource,
                              WORKFLOW_TEMPLATES, make_workflow)
 
-__version__ = "0.9.0"
+__version__ = "0.10.0"
 
 __all__ = [
     "__version__",
@@ -58,4 +63,8 @@ __all__ = [
     "WORKERS_ENV",
     "Workflow", "WorkflowStep", "TaskReport", "WorkflowSource",
     "WORKFLOW_TEMPLATES", "make_workflow",
+    "FaultEvent", "FaultSchedule", "FAULT_KINDS",
+    "RetryPolicy", "RETRY_POLICIES", "make_faults", "make_retry",
+    "random_fault_schedule", "check_run_invariants",
+    "InvariantViolation",
 ]

@@ -87,7 +87,9 @@ _LATE_FIELD_DEFAULTS = {"backend": "analytic", "freq_scale": 1.0,
                         "fleet": None, "autoscaler": None,
                         "autoscaler_params": {}, "regions": [],
                         "controller": None, "controller_params": {},
-                        "control_interval_s": 1.0}
+                        "control_interval_s": 1.0,
+                        "faults": None, "retry": None,
+                        "retry_params": {}}
 
 #: spec fields a per-replica override mapping may set (heterogeneous fleets)
 REPLICA_OVERRIDE_FIELDS = ("fmt", "device", "max_batch", "n_chips")
@@ -171,6 +173,14 @@ class ExperimentSpec:
     controller_params: Mapping[str, Any] = dataclasses.field(
         default_factory=dict)
     control_interval_s: float = 1.0
+    # -- fault injection & resilience (repro.faults): a deterministic
+    #    schedule of crash/preempt/slowdown/power_cap/link_degrade
+    #    events (tuple of FaultEvent.to_spec() dicts), plus the retry
+    #    policy that re-queues failed work ------------------------------
+    faults: Optional[Tuple] = None
+    retry: Optional[str] = None        # RETRY_POLICIES registry name
+    retry_params: Mapping[str, Any] = dataclasses.field(
+        default_factory=dict)
     # -- scheduling -----------------------------------------------------
     scheduler: Optional[str] = None
     scheduler_params: Mapping[str, Any] = dataclasses.field(
@@ -218,6 +228,14 @@ class ExperimentSpec:
              _freeze(dict(self.autoscaler_params)))
         set_(self, "controller_params",
              _freeze(dict(self.controller_params)))
+        set_(self, "retry_params", _freeze(dict(self.retry_params)))
+        if self.faults is not None:
+            # canonicalize through the schedule (sorted, non-default
+            # fields only) so equal schedules hash equally
+            from repro.faults import make_faults
+            set_(self, "faults",
+                 _freeze(make_faults(
+                     _thaw(list(self.faults))).to_spec()))
         set_(self, "regions", _freeze(tuple(self.regions)))
         set_(self, "replica_overrides",
              _freeze(tuple(dict(o) for o in self.replica_overrides)))
@@ -397,6 +415,60 @@ class ExperimentSpec:
                     "count authorities; pick one (MPCController and "
                     "StaticController(n_replicas=) scale the fleet "
                     "themselves)")
+        if self.retry_params and self.retry is None:
+            raise ValueError(
+                "retry_params= is set but retry is None; name a "
+                "policy via retry=")
+        if self.retry is not None:
+            from repro.faults import make_retry
+            # surfaces unknown names / bad params at construction
+            make_retry(self.retry, **dict(self.retry_params))
+            if self.faults is None:
+                raise ValueError(
+                    "retry= without faults= has no effect; attach a "
+                    "fault schedule via faults=")
+        if self.faults is not None:
+            from repro.faults import make_faults
+            sched = make_faults(_thaw(list(self.faults)))
+            if not len(sched):
+                raise ValueError("faults= is an empty schedule; use "
+                                 "faults=None")
+            if self.pipeline != "serve" or self.mode != "continuous":
+                raise ValueError(
+                    "faults= requires pipeline='serve' and "
+                    "mode='continuous'")
+            if self.controller is not None:
+                raise ValueError(
+                    "faults= cannot be combined with controller= "
+                    "(controlling a faulty fleet is future work)")
+            if self.autoscaler is not None or self.regions:
+                raise ValueError(
+                    "faults= does not compose with autoscaler= or "
+                    "regions= (failure-aware autoscaling is future "
+                    "work)")
+            if sched.max_replica >= self.replicas:
+                raise ValueError(
+                    f"fault schedule names replica "
+                    f"{sched.max_replica} but replicas="
+                    f"{self.replicas}")
+            if self.disaggregate:
+                if not sched.only_kinds("link_degrade"):
+                    raise ValueError(
+                        "disaggregated fleets only support "
+                        "link_degrade faults")
+                if self.retry is not None:
+                    raise ValueError(
+                        "retry= has no effect on a link_degrade-only "
+                        "schedule")
+            elif sched.has_kind("link_degrade"):
+                raise ValueError(
+                    "link_degrade faults require a disaggregated "
+                    "fleet (set disaggregate=)")
+            if self.workflow is not None and self.replicas > 1:
+                raise ValueError(
+                    "faults= with workflow= requires replicas=1 (the "
+                    "cluster loop does not co-simulate workflow "
+                    "sources under faults)")
         from repro.serving.router import _SignalAwareRouter
         if (isinstance(make_router(self.router), _SignalAwareRouter)
                 and not self.regions):
@@ -648,6 +720,20 @@ class ExperimentSpec:
         return make_controller(self.controller,
                                **dict(self.controller_params))
 
+    def build_faults(self):
+        """Resolve the fault-schedule axis (``None`` when unset)."""
+        if self.faults is None:
+            return None
+        from repro.faults import make_faults
+        return make_faults(_thaw(list(self.faults)))
+
+    def build_retry(self):
+        """Resolve the retry-policy axis (``None`` when unset)."""
+        if self.retry is None:
+            return None
+        from repro.faults import make_retry
+        return make_retry(self.retry, **dict(self.retry_params))
+
     def build_batch_policy(self,
                            max_batch: Optional[int] = None
                            ) -> BatchPolicy:
@@ -758,6 +844,12 @@ _FLEET_RESULT_FIELDS = ("transition_energy_j", "n_transitions",
 _CONTROL_RESULT_FIELDS = ("n_control_actions", "mean_freq_scale",
                           "controller_overhead_s", "control_actions")
 
+#: result fields added with the fault-injection axes; same
+#: omit-when-None rule, so fault-free records stay byte-identical
+_RESILIENCE_RESULT_FIELDS = ("n_failures", "n_retries", "n_failed",
+                             "n_completed", "wasted_energy_j",
+                             "goodput_wh_per_request", "availability")
+
 
 @dataclasses.dataclass
 class RunResult:
@@ -865,6 +957,16 @@ class RunResult:
     mean_freq_scale: Optional[float] = None
     controller_overhead_s: Optional[float] = None
     control_actions: Optional[Tuple] = None   # (t, freq, adm, replicas)
+    # -- fault injection & resilience (set when the spec carries a
+    #    fault schedule; omitted from to_dict when None, same
+    #    byte-stability rule) -------------------------------------------
+    n_failures: Optional[int] = None
+    n_retries: Optional[int] = None
+    n_failed: Optional[int] = None            # terminally failed requests
+    n_completed: Optional[int] = None
+    wasted_energy_j: Optional[float] = None
+    goodput_wh_per_request: Optional[float] = None
+    availability: Optional[float] = None
     # -- non-serialized engine report (fresh runs only) -----------------
     report: Optional[Any] = dataclasses.field(
         default=None, compare=False, repr=False)
@@ -898,7 +1000,8 @@ class RunResult:
         d = dataclasses.asdict(self)
         d.pop("report")
         for key in (_FORMATION_RESULT_FIELDS + _WORKFLOW_RESULT_FIELDS
-                    + _FLEET_RESULT_FIELDS + _CONTROL_RESULT_FIELDS):
+                    + _FLEET_RESULT_FIELDS + _CONTROL_RESULT_FIELDS
+                    + _RESILIENCE_RESULT_FIELDS):
             if d[key] is None:
                 del d[key]
         return _thaw(d)
@@ -940,11 +1043,17 @@ def _run_serve(spec: ExperimentSpec) -> RunResult:
         dict(controller=spec.build_controller(),
              control_interval_s=spec.control_interval_s)
         if spec.controller is not None else {})
+    # the fault kwargs are only passed when set, so fault-free runs
+    # execute the byte-identical legacy call path
+    if spec.faults is not None:
+        ctl_kw["faults"] = spec.build_faults()
+        if spec.retry is not None:
+            ctl_kw["retry"] = spec.build_retry()
     if spec.workflow is not None:
         source = spec.build_workflow_source()
         report = engine.run(source.initial(),
                             scheduler=spec.build_scheduler(),
-                            trace=trace, source=source)
+                            trace=trace, source=source, **ctl_kw)
     else:
         report = engine.run(spec.requests(),
                             scheduler=spec.build_scheduler(), trace=trace,
@@ -1028,6 +1137,15 @@ def result_from_report(spec: ExperimentSpec, report,
             mean_freq_scale=ctl["mean_freq_scale"],
             controller_overhead_s=ctl["controller_overhead_s"],
             control_actions=_freeze(tuple(ctl["control_actions"])))
+    if spec.faults is not None:
+        kw.update(
+            n_failures=report.n_failures,
+            n_retries=report.n_retries,
+            n_failed=report.n_failed,
+            n_completed=report.n_completed,
+            wasted_energy_j=report.wasted_energy_j,
+            goodput_wh_per_request=report.goodput_wh_per_request,
+            availability=report.availability)
     if spec.workflow is not None:
         tasks = report.tasks
         done = [t for t in tasks if t.completed]

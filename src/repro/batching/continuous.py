@@ -172,10 +172,20 @@ class ContinuousBatcher:
         slot = self._free.pop(0)
         if (req.kv_parent is not None
                 and 0 < req.prefilled_tokens < req.prompt_len):
-            # workflow child: co-own the parent's prefix pages and only
-            # allocate fresh pages for the unprefilled remainder
-            self.kv.fork_prefix(req.kv_parent, req.req_id,
-                                req.prefilled_tokens, req.prompt_len)
+            if self.kv.has_seq(req.kv_parent):
+                # workflow child: co-own the parent's prefix pages and
+                # only allocate fresh pages for the unprefilled
+                # remainder
+                self.kv.fork_prefix(req.kv_parent, req.req_id,
+                                    req.prefilled_tokens,
+                                    req.prompt_len)
+            else:
+                # parent KV no longer resident (destroyed by a crash,
+                # or the request failed over to a different replica):
+                # fall back to recomputing the full prompt
+                req.kv_parent = None
+                req.prefilled_tokens = 0
+                self.kv.allocate(req.req_id, req.prompt_len)
         else:
             self.kv.allocate(req.req_id, req.prompt_len)
         if req.kv_pin:
@@ -254,6 +264,39 @@ class ContinuousBatcher:
             out += ((r.prompt_len - r.prefilled_tokens)
                     + (r.max_new_tokens - r.tokens_generated))
         return out
+
+    # -- fault injection (repro.faults) --------------------------------
+    def evict_waiting(self) -> List["Request"]:
+        """Drain the waiting queue (graceful drain on a preemption
+        notice, or a crash failing queued work): returns the queued
+        requests in FIFO order and leaves the queue empty. Live slots
+        are untouched."""
+        out = [r for r in self._waiting[self._whead:] if r is not None]
+        self._waiting = []
+        self._whead = 0
+        self._n_waiting = 0
+        self._waiting_tokens = 0
+        return out
+
+    def remove_waiting(self, req: "Request") -> bool:
+        """Tombstone one specific queued request (hedged-duplicate
+        cancellation). Returns False if it is not queued here."""
+        w = self._waiting
+        for i in range(self._whead, len(w)):
+            if w[i] is req:
+                w[i] = None
+                self._n_waiting -= 1
+                self._waiting_tokens -= (req.prompt_len
+                                         + req.max_new_tokens)
+                return True
+        return False
+
+    def find_slot(self, req: "Request") -> Optional[int]:
+        """Slot index currently holding ``req``, if any."""
+        for i in self._live:
+            if self.slots[i].request is req:
+                return i
+        return None
 
     def finish(self, slot: int) -> "Request":
         req = self.slots[slot].request

@@ -132,6 +132,14 @@ class PagedKVAllocator:
         else:
             self._pins[seq_id] = c - 1
 
+    def unpin_all(self, seq_id: int) -> None:
+        """Drop every outstanding pin on ``seq_id`` (a fault aborted
+        the forks it was reserved for); a lingering table is freed."""
+        if self._pins.pop(seq_id, None) is not None:
+            t = self.lingering.pop(seq_id, None)
+            if t is not None:
+                self._free_pages(t.pages)
+
     def has_seq(self, seq_id: int) -> bool:
         return seq_id in self.tables or seq_id in self.lingering
 

@@ -178,11 +178,34 @@ class FleetEngine:
             trace: Optional[PowerTrace] = None,
             source: Optional[object] = None,
             controller: Optional[object] = None,
-            control_interval_s: float = 1.0) -> FleetReport:
+            control_interval_s: float = 1.0,
+            faults: Optional[object] = None,
+            retry: Optional[object] = None) -> FleetReport:
         if source is not None:
             raise ValueError(
                 "the vectorized fleet path does not support workflow "
                 "sources; use ClusterEngine")
+        if faults is not None:
+            # fault semantics live in the serial co-simulation loop
+            # (field-for-field identical on non-disaggregated fleets by
+            # the parity contract above); the vectorized over-advance
+            # machinery is incompatible with mid-run replica death
+            if self.autoscaler is not None or self.regions:
+                raise ValueError(
+                    "faults= does not compose with autoscaler= or "
+                    "regions= (failure-aware autoscaling is future "
+                    "work)")
+            if controller is not None:
+                raise ValueError("faults= cannot be combined with "
+                                 "controller=")
+            from repro.serving.cluster import ClusterEngine
+            crep = ClusterEngine(self.replicas, self.router).run(
+                requests, scheduler=scheduler, trace=trace,
+                faults=faults, retry=retry)
+            return FleetReport(
+                replica_reports=crep.replica_reports,
+                policy=crep.policy, wall_time_s=crep.wall_time_s,
+                shed=crep.shed, failed=crep.failed)
         hook = None
         if controller is not None:
             if self.autoscaler is not None:

@@ -26,13 +26,14 @@ scores marginal energy per replica accordingly.
 from __future__ import annotations
 
 import dataclasses
+import math
 from bisect import bisect_right as _bisect_right
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.serving.engine import (ServeEngine, ServeReport,
-                                  _insert_pending)
+                                  _insert_pending, _remove_identity)
 from repro.serving.requests import Request, RequestStatus
 from repro.serving.router import Router, make_router
 from repro.serving.scheduler import (HorizonStop, Scheduler,
@@ -60,6 +61,10 @@ class ClusterReport:
     # workflow serving: per-task aggregation (repro.workflows.TaskReport)
     # when a WorkflowSource drove the run
     tasks: List = dataclasses.field(default_factory=list)
+    # fault injection (repro.faults): terminal failures no replica owns
+    # (delivery timeouts, requests stranded with every replica dead) —
+    # empty without a fault schedule
+    failed: List[Request] = dataclasses.field(default_factory=list)
 
     # -- fleet energy ---------------------------------------------------
     @property
@@ -86,10 +91,60 @@ class ClusterReport:
         return (self.replica_reports[0].control
                 if self.replica_reports else None)
 
+    # -- fault injection ------------------------------------------------
+    @property
+    def n_failures(self) -> int:
+        """Failure events fleet-wide (every crash-kill of an attempt,
+        timeout, or stranding — one request can contribute several)."""
+        return (sum(r.n_failures for r in self.replica_reports)
+                + len(self.failed))
+
+    @property
+    def n_retries(self) -> int:
+        return sum(r.n_retries for r in self.replica_reports)
+
+    @property
+    def wasted_energy_j(self) -> float:
+        return sum(r.wasted_energy_j for r in self.replica_reports)
+
+    @property
+    def down_time_s(self) -> float:
+        return sum(r.down_time_s for r in self.replica_reports)
+
+    @property
+    def n_failed(self) -> int:
+        """Requests that ended terminally FAILED."""
+        return sum(1 for r in self.requests
+                   if r.status is RequestStatus.FAILED)
+
+    @property
+    def n_completed(self) -> int:
+        return len(self.completed)
+
+    @property
+    def availability(self) -> float:
+        """Fraction of fleet replica-time not spent dead."""
+        denom = len(self.replica_reports) * self.wall_time_s
+        if denom <= 0:
+            return 1.0
+        return 1.0 - self.down_time_s / denom
+
+    @property
+    def goodput_wh_per_request(self) -> float:
+        """Fleet energy (waste included) per *completed* request."""
+        n_done = len(self.completed)
+        if n_done == 0:
+            return math.inf if self.total_energy_j > 0 else 0.0
+        return self.total_energy_j / n_done / 3600.0
+
     # -- requests -------------------------------------------------------
     @property
     def requests(self) -> List[Request]:
-        return [r for rep in self.replica_reports for r in rep.requests]
+        """Every request the fleet owned: replica-served plus terminal
+        failures no replica owns (so failure runs conserve counts)."""
+        out = [r for rep in self.replica_reports for r in rep.requests]
+        out.extend(self.failed)
+        return out
 
     @property
     def n(self) -> int:
@@ -210,6 +265,17 @@ class ClusterReport:
             out[f"latency_{k}_s"] = v
         for k, v in self.ttft_percentiles().items():
             out[f"ttft_{k}_s"] = v
+        if (self.n_failures or self.n_retries or self.wasted_energy_j
+                or self.down_time_s):
+            out.update({
+                "n_failures": self.n_failures,
+                "n_retries": self.n_retries,
+                "n_failed": self.n_failed,
+                "n_completed": self.n_completed,
+                "wasted_energy_wh": self.wasted_energy_j / 3600.0,
+                "availability": self.availability,
+                "goodput_wh_per_request": self.goodput_wh_per_request,
+            })
         return out
 
 
@@ -251,7 +317,9 @@ class ClusterEngine:
             trace: Optional[PowerTrace] = None,
             source: Optional[object] = None,
             controller: Optional[object] = None,
-            control_interval_s: float = 1.0) -> ClusterReport:
+            control_interval_s: float = 1.0,
+            faults: Optional[object] = None,
+            retry: Optional[object] = None) -> ClusterReport:
         """Serve a request stream across the fleet. A scheduler shapes
         and admits the *shared* stream before the router sees it, so
         shaping composes with routing; a planning scheduler also lets
@@ -266,7 +334,45 @@ class ClusterEngine:
         ``controller`` is a :class:`~repro.control.Controller` firing
         every ``control_interval_s`` of shared simulated time, with the
         fleet-wide actuators: per-replica DVFS and a cluster-level
-        admission bucket gating releases before the router sees them."""
+        admission bucket gating releases before the router sees them.
+
+        ``faults`` (a :class:`~repro.faults.FaultSchedule`) injects
+        per-replica crashes, preemptions and slowdowns; routing then
+        always skips dead/draining replicas (health-aware failover).
+        ``retry`` (a :class:`~repro.faults.RetryPolicy`) re-queues
+        failed work with backoff, optionally draining on preemption
+        notices and hedging retried requests across two replicas."""
+        if faults is not None:
+            if controller is not None:
+                raise ValueError("faults= cannot be combined with "
+                                 "controller= (controlling a faulty "
+                                 "fleet is future work)")
+            if faults.max_replica >= len(self.replicas):
+                raise ValueError(
+                    f"fault schedule names replica "
+                    f"{faults.max_replica} but the fleet has "
+                    f"{len(self.replicas)} replicas")
+            if self.disaggregated:
+                if not faults.only_kinds("link_degrade"):
+                    raise ValueError(
+                        "disaggregated fleets only support "
+                        "link_degrade faults (crash/preempt/slowdown "
+                        "semantics for split pools is future work)")
+                if retry is not None:
+                    raise ValueError("retry= has no effect on a "
+                                     "link_degrade-only schedule")
+            else:
+                if faults.has_kind("link_degrade"):
+                    raise ValueError("link_degrade faults require a "
+                                     "disaggregated fleet")
+                if source is not None:
+                    raise ValueError(
+                        "faults= cannot be combined with a workflow "
+                        "source on a cluster (run the workflow on a "
+                        "single faulty ServeEngine instead)")
+        if retry is not None and faults is None:
+            raise ValueError("retry= without faults= has no effect; "
+                             "attach a FaultSchedule")
         if controller is not None:
             if self.disaggregated:
                 raise ValueError("controller= does not compose with "
@@ -289,7 +395,10 @@ class ClusterEngine:
         try:
             if self.disaggregated:
                 rep = self._run_disaggregated(reqs, shed, gate,
-                                              source=source)
+                                              source=source,
+                                              faults=faults)
+            elif faults is not None:
+                rep = self._run_faulty(reqs, shed, gate, faults, retry)
             else:
                 hook = None
                 if controller is not None:
@@ -438,10 +547,308 @@ class ClusterEngine:
                              policy=self.router.name,
                              wall_time_s=t_end, shed=shed)
 
+    # -- fault-injected fleets ------------------------------------------
+    def _run_faulty(self, reqs: List[Request], shed: List[Request],
+                    gate: bool, faults, retry) -> ClusterReport:
+        """Co-simulate the fleet under a fault schedule.
+
+        Identical to :meth:`_run` between fault boundaries. Every
+        replica's macro-steps are additionally bounded by the next
+        unfired boundary of *any* replica, because a kill elsewhere can
+        inject retried arrivals (and a preemption notice can re-route
+        drained work) at boundary-derived instants — so macro-stepped
+        and single-stepped faulty fleets stay bit-identical.
+
+        Failover is routing-level: delivery only considers replicas
+        that are neither dead (inside a downtime window) nor draining
+        (inside a preemption-notice window under ``drain_on_notice``).
+        With every replica unroutable the arrival is deferred to the
+        earliest restart; if no restart is coming it fails terminally
+        with ``fail_reason='no_capacity'``.
+
+        Hedging (``retry.hedge``, fleets only): a *retried* request is
+        submitted to two healthy replicas at once — the clone carries a
+        fresh ``req_id`` and ``hedge_of`` — and the first completion
+        wins; the loser is cancelled (its joules move to waste) and
+        dropped from the reports, so each logical request is counted
+        exactly once."""
+        eps = 1e-12
+        R = len(self.replicas)
+        for eng in self.replicas:
+            eng.stream_start()
+        pending = list(reqs)
+        head = 0
+        seen = [0] * R                  # done cursors (hedge winners)
+        self._gated = [False] * R
+        tl = [faults.boundaries(i) for i in range(R)]
+        fi = [0] * R
+        base_freq = [eng.freq_scale for eng in self.replicas]
+        down_until = [0.0] * R          # dead until (restart instant)
+        routable_at = [0.0] * R         # earliest router-visible instant
+        draining = [False] * R          # inside a preemption notice
+        hedge_pairs: Dict[int, tuple] = {}  # req_id -> (partner, replica)
+        next_id = max((r.req_id for r in reqs), default=-1) + 1
+        failed_terminal: List[Request] = []
+        drain_on = retry is not None and retry.drain_on_notice
+        hedge_on = retry is not None and retry.hedge and R > 1
+        timeout = retry.timeout_s if retry is not None else math.inf
+
+        def requeue(i: int, failed: List[Request], t: float) -> None:
+            """Crash aftermath: hedge copies with a live partner are
+            dropped (the partner carries the attempt), retryable work
+            re-enters the shared queue after backoff — free to route
+            to any healthy replica — and exhausted work stays FAILED
+            on the dead replica's report."""
+            eng = self.replicas[i]
+            for r in failed:
+                pair = hedge_pairs.pop(r.req_id, None)
+                if pair is not None:
+                    hedge_pairs.pop(pair[0].req_id, None)
+                    _remove_identity(eng._stream.submitted, r)
+                    continue
+                if (retry is not None
+                        and r.n_attempts < retry.max_retries):
+                    _remove_identity(eng._stream.submitted, r)
+                    delay = retry.backoff(r.n_attempts)
+                    r.n_attempts += 1
+                    eng._stream.n_retries += 1
+                    r.status = RequestStatus.QUEUED
+                    r.fail_reason = None
+                    r.release_time = t + delay
+                    _insert_pending(pending, head, r)
+
+        def apply_boundary(i: int) -> None:
+            eng = self.replicas[i]
+            b = tl[i][fi[i]]
+            fi[i] += 1
+            if b.action == "notice":
+                if drain_on:
+                    # graceful drain: router skips this replica until
+                    # it restarts; queued-not-yet-running work re-
+                    # routes to healthy replicas right now
+                    draining[i] = True
+                    routable_at[i] = b.event.t_restart
+                    for r in eng.batcher.evict_waiting():
+                        _remove_identity(eng._stream.submitted, r)
+                        r.release_time = b.t
+                        _insert_pending(pending, head, r)
+            elif b.action == "kill":
+                draining[i] = False
+                down_until[i] = routable_at[i] = b.event.t_restart
+                failed = eng.stream_crash(
+                    "preempt" if b.event.kind == "preempt"
+                    else "crash")
+                requeue(i, failed, eng.stream_now)
+            elif b.action == "slow_start":
+                eng.set_freq_scale(b.event.freq_scale)
+            else:                                   # slow_end
+                eng.set_freq_scale(base_freq[i])
+
+        def advance_to(j: int, t: float) -> None:
+            """Advance a work-less replica's clock: dead time first
+            (zero draw), idle/gated power for the rest."""
+            eng = self.replicas[j]
+            if eng.stream_now < down_until[j]:
+                eng.stream_down(min(t, down_until[j]))
+            if eng.stream_now < t:
+                eng.stream_idle(t, gated=gate)
+                if gate:
+                    self._gated[j] = True
+
+        def drain(i: int) -> None:
+            """Hedge settlement: the first copy to finish wins, the
+            partner is cancelled wherever it is."""
+            done = self.replicas[i]._stream.done
+            while seen[i] < len(done):
+                r = done[seen[i]]
+                seen[i] += 1
+                if r.status is not RequestStatus.DONE:
+                    continue
+                pair = hedge_pairs.pop(r.req_id, None)
+                if pair is None:
+                    continue
+                partner, pj = pair
+                hedge_pairs.pop(partner.req_id, None)
+                if partner.status is RequestStatus.DONE:
+                    continue
+                if not self.replicas[pj].stream_cancel(partner):
+                    # evicted back to the shared queue by a drain
+                    # notice: pull it before it is re-delivered
+                    for idx in range(len(pending) - 1, head - 1, -1):
+                        if pending[idx] is partner:
+                            del pending[idx]
+                            break
+
+        while True:
+            # fault boundaries reached by a replica's own clock fire
+            # before anything else (the kill instant is exact: the
+            # replica's macro-steps were bounded by it)
+            fired = False
+            for i in range(R):
+                while (fi[i] < len(tl[i]) and self.replicas[i].stream_now
+                        >= tl[i][fi[i]].t - eps):
+                    apply_boundary(i)
+                    fired = True
+            if fired:
+                continue
+            t_arr = (pending[head].effective_arrival
+                     if head < len(pending) else None)
+            # next exogenous event: the shared arrival, or a boundary
+            # on a replica that cannot reach it by stepping
+            t_evt = t_arr
+            for i in range(R):
+                if (fi[i] < len(tl[i])
+                        and not self.replicas[i].stream_can_step()):
+                    t_b = tl[i][fi[i]].t
+                    t_evt = t_b if t_evt is None else min(t_evt, t_b)
+            ready = [eng for eng in self.replicas
+                     if eng.stream_can_step()]
+            nxt = min(ready, key=lambda e: e.stream_now) if ready \
+                else None
+            if nxt is not None and (t_evt is None
+                                    or nxt.stream_now < t_evt - eps):
+                bound = t_evt
+                # any replica's next boundary may inject retried /
+                # drained arrivals into the shared queue: never
+                # macro-step past one (the in-flight step still
+                # completes, exactly like the single-step loop)
+                for j in range(R):
+                    if fi[j] < len(tl[j]):
+                        t_b = tl[j][fi[j]].t
+                        bound = t_b if bound is None \
+                            else min(bound, t_b)
+                if hedge_on:
+                    # a completion elsewhere may cancel this replica's
+                    # hedge copy no earlier than that replica's clock
+                    others = [e.stream_now for e in ready
+                              if e is not nxt]
+                    if others:
+                        o = min(others)
+                        bound = o if bound is None else min(bound, o)
+                nxt.stream_step(
+                    stop=None if bound is None
+                    else HorizonStop(bound, mode="clock"))
+                drain(self.replicas.index(nxt))
+                continue
+            if t_arr is None and nxt is None:
+                # no work and no arrivals left: fire boundaries inside
+                # the run window (they shape energy/availability), but
+                # never extend the run for faults past the last clock
+                t_max = max(e.stream_now for e in self.replicas)
+                fired = False
+                for j in range(R):
+                    if (fi[j] < len(tl[j])
+                            and tl[j][fi[j]].t <= t_max + eps):
+                        advance_to(j, tl[j][fi[j]].t)
+                        fired = True
+                if fired:
+                    continue
+                break
+            if t_arr is None or (t_evt is not None
+                                 and t_evt < t_arr - eps):
+                # a work-less replica's boundary precedes the arrival:
+                # advance it there; the top-of-loop dispatcher fires it
+                for j in range(R):
+                    if (fi[j] < len(tl[j])
+                            and not self.replicas[j].stream_can_step()
+                            and tl[j][fi[j]].t <= t_evt + eps):
+                        advance_to(j, tl[j][fi[j]].t)
+                continue
+            # deliver the arrival: bring work-less replicas up to the
+            # instant, then route among healthy replicas only
+            for j in range(R):
+                if (self.replicas[j].stream_now < t_arr
+                        and not self.replicas[j].stream_can_step()):
+                    advance_to(j, t_arr)
+            req = pending[head]
+            head += 1
+            if (retry is not None
+                    and t_arr - req.arrival_time > timeout + eps):
+                pair = hedge_pairs.pop(req.req_id, None)
+                if pair is not None:
+                    # a live partner carries the attempt: drop silently
+                    hedge_pairs.pop(pair[0].req_id, None)
+                    continue
+                req.status = RequestStatus.FAILED
+                req.fail_reason = "timeout"
+                failed_terminal.append(req)
+                continue
+            rr = [j for j in range(R)
+                  if t_arr >= down_until[j] - eps and not draining[j]]
+            if not rr:
+                t_ok = min(routable_at)
+                if math.isinf(t_ok):
+                    req.status = RequestStatus.FAILED
+                    req.fail_reason = "no_capacity"
+                    failed_terminal.append(req)
+                    continue
+                req.release_time = t_ok     # retry when one restarts
+                _insert_pending(pending, head, req)
+                continue
+            k = self.router.select(
+                req, [self.replicas[j] for j in rr], t_arr)
+            i = rr[k]
+            pair = hedge_pairs.get(req.req_id)
+            if pair is not None:
+                # re-delivery of a drained hedge member: keep the
+                # partner's back-reference pointing at the new home
+                hedge_pairs[pair[0].req_id] = (req, i)
+            if self._gated[i]:
+                self.replicas[i].stream_idle(
+                    self.replicas[i].stream_now
+                    + self.replicas[i].device.wake_latency_s)
+                self._gated[i] = False
+            self.replicas[i].stream_submit(req)
+            if (hedge_on and req.n_attempts > 0
+                    and req.hedge_of is None
+                    and req.req_id not in hedge_pairs
+                    and len(rr) >= 2):
+                # a request that already failed once races on a second
+                # healthy replica; first completion wins
+                clone = Request(
+                    req_id=next_id, prompt=req.prompt,
+                    prompt_len=req.prompt_len,
+                    max_new_tokens=req.max_new_tokens,
+                    arrival_time=req.arrival_time,
+                    priority=req.priority,
+                    deadline_s=req.deadline_s,
+                    slo_tier=req.slo_tier,
+                    release_time=t_arr,
+                    n_attempts=req.n_attempts,
+                    hedge_of=req.req_id)
+                next_id += 1
+                rr2 = [j for j in rr if j != i]
+                k2 = self.router.select(
+                    clone, [self.replicas[j] for j in rr2], t_arr)
+                i2 = rr2[k2]
+                if self._gated[i2]:
+                    self.replicas[i2].stream_idle(
+                        self.replicas[i2].stream_now
+                        + self.replicas[i2].device.wake_latency_s)
+                    self._gated[i2] = False
+                self.replicas[i2].stream_submit(clone)
+                hedge_pairs[req.req_id] = (clone, i2)
+                hedge_pairs[clone.req_id] = (req, i)
+        stuck = [i for i, eng in enumerate(self.replicas)
+                 if eng.stream_stuck()]
+        if stuck:
+            raise RuntimeError(
+                f"deadlock: replicas {stuck} hold waiting requests that "
+                "can never be scheduled (KV pool too small)")
+        t_end = max(eng.stream_now for eng in self.replicas)
+        for j in range(R):
+            advance_to(j, t_end)
+        reports = [eng.stream_report() for eng in self.replicas]
+        return ClusterReport(replica_reports=reports,
+                             policy=self.router.name,
+                             wall_time_s=t_end, shed=shed,
+                             failed=failed_terminal)
+
     # -- disaggregated prefill/decode fleets ---------------------------
     def _run_disaggregated(self, reqs: List[Request],
                            shed: List[Request], gate: bool,
-                           source: Optional[object] = None
+                           source: Optional[object] = None,
+                           faults: Optional[object] = None
                            ) -> ClusterReport:
         """Co-simulate a prefill pool and a decode pool.
 
@@ -502,12 +909,18 @@ class ClusterEngine:
             for r in eng.stream_take_handoffs():
                 nbytes = kv_cache_bytes(
                     eng.cfg, r.prompt_len + r.tokens_generated)
-                e = nbytes * eng.device.link_pj_per_byte * 1e-12
+                # a degraded interconnect stretches the transfer and
+                # burns proportionally more link energy (retransmits /
+                # longer active-link time)
+                lf = (faults.link_factor(eng.stream_now)
+                      if faults is not None else 1.0)
+                e = nbytes * eng.device.link_pj_per_byte * 1e-12 * lf
                 r.energy_j += e
                 hand_e += e
                 n_hand += 1
                 heapq.heappush(events, (
-                    eng.stream_now + nbytes / eng.device.link_bw,
+                    eng.stream_now
+                    + nbytes * lf / eng.device.link_bw,
                     seq, r))
                 seq += 1
 

@@ -29,6 +29,7 @@ Energy accounting (paper §5 methodology):
 from __future__ import annotations
 
 import dataclasses
+import math
 from bisect import bisect_right as _bisect_right
 from typing import Dict, List, Optional, Sequence
 
@@ -96,6 +97,16 @@ def _insert_pending(pending: List[Request], head: int,
     pending.insert(lo, req)
 
 
+def _remove_identity(lst: List[Request], req: Request) -> bool:
+    """Remove ``req`` from ``lst`` by object identity (Request's
+    dataclass ``==`` would compare ndarray prompts)."""
+    for i in range(len(lst) - 1, -1, -1):
+        if lst[i] is req:
+            del lst[i]
+            return True
+    return False
+
+
 @dataclasses.dataclass
 class ServeReport:
     requests: List[Request]
@@ -140,6 +151,15 @@ class ServeReport:
     # None unless a controller drove the run, so legacy reports are
     # unchanged
     control: Optional[Dict] = None
+    # fault injection (repro.faults): failure events this replica
+    # suffered, retries it re-queued, joules billed to attempts that
+    # later failed (a subset of busy energy, not additive), and
+    # wall-clock spent dead drawing nothing. All zero without a fault
+    # schedule, keeping legacy reports unchanged.
+    n_failures: int = 0
+    n_retries: int = 0
+    wasted_energy_j: float = 0.0
+    down_time_s: float = 0.0
 
     @property
     def prefill_padding_fraction(self) -> float:
@@ -156,6 +176,34 @@ class ServeReport:
     @property
     def n_shed(self) -> int:
         return len(self.shed)
+
+    @property
+    def n_failed(self) -> int:
+        """Requests that ended terminally FAILED (retry budget
+        exhausted, timed out, or stranded with no retry policy)."""
+        return sum(1 for r in self.requests
+                   if r.status is RequestStatus.FAILED)
+
+    @property
+    def n_completed(self) -> int:
+        return len(self.completed)
+
+    @property
+    def availability(self) -> float:
+        """Fraction of the run this replica was not dead."""
+        if self.wall_time_s <= 0:
+            return 1.0
+        return 1.0 - self.down_time_s / self.wall_time_s
+
+    @property
+    def goodput_wh_per_request(self) -> float:
+        """Total energy (waste included — it is part of busy energy)
+        per *completed* request: the resilience cost metric. ``inf``
+        when energy was burned but nothing completed."""
+        n_done = len(self.completed)
+        if n_done == 0:
+            return math.inf if self.total_energy_j > 0 else 0.0
+        return self.total_energy_j / n_done / 3600.0
 
     @property
     def completed(self) -> List[Request]:
@@ -224,7 +272,7 @@ class ServeReport:
         return slo.attainment(self.requests, self.shed)
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "n_requests": self.n,
             "n_shed": self.n_shed,
             "mean_energy_wh": self.mean_energy_per_request_wh,
@@ -243,6 +291,17 @@ class ServeReport:
             "gated_fraction": (self.gated_energy_j
                                / max(self.total_energy_j, 1e-12)),
         }
+        if (self.n_failures or self.n_retries or self.wasted_energy_j
+                or self.down_time_s):
+            out.update({
+                "n_failures": self.n_failures,
+                "n_retries": self.n_retries,
+                "n_failed": self.n_failed,
+                "wasted_energy_wh": self.wasted_energy_j / 3600.0,
+                "availability": self.availability,
+                "goodput_wh_per_request": self.goodput_wh_per_request,
+            })
+        return out
 
 
 @dataclasses.dataclass
@@ -276,6 +335,11 @@ class _StreamState:
     prefill_chunks: int = 0
     n_relayed: int = 0
     prefix_reused: int = 0         # prompt tokens served from forked KV
+    # fault injection (repro.faults)
+    wasted_e: float = 0.0          # joules billed to failed attempts
+    down_t: float = 0.0            # wall-clock dead (zero power draw)
+    n_failures: int = 0
+    n_retries: int = 0
     # disaggregated serving: prefill-complete requests awaiting pickup
     # by the cluster loop (stream_take_handoffs drains this)
     handoffs: List[Request] = dataclasses.field(default_factory=list)
@@ -420,7 +484,9 @@ class ServeEngine:
             trace: Optional[PowerTrace] = None,
             source: Optional["object"] = None,
             controller: Optional["object"] = None,
-            control_interval_s: float = 1.0) -> ServeReport:
+            control_interval_s: float = 1.0,
+            faults: Optional["object"] = None,
+            retry: Optional["object"] = None) -> ServeReport:
         """Serve a request list, optionally shaped/admitted by a
         :class:`~repro.serving.scheduler.Scheduler` and recorded onto a
         :class:`~repro.serving.trace.PowerTrace` timeline.
@@ -434,7 +500,44 @@ class ServeEngine:
         time, actuating DVFS (``set_freq_scale``) and admission (a live
         token bucket gating releases into the batcher). With no
         controller the legacy event loop runs — no ``control`` stops
-        are ever constructed, so results stay bit-identical."""
+        are ever constructed, so results stay bit-identical.
+
+        ``faults`` is a :class:`~repro.faults.FaultSchedule` whose
+        boundaries become horizon stops: crashes/preemptions fail
+        in-flight work into ``RequestStatus.FAILED`` (joules move to
+        ``wasted_energy_j``), slowdowns/power caps re-target DVFS for
+        a window. ``retry`` (a :class:`~repro.faults.RetryPolicy`)
+        re-queues failures with exponential backoff until the budget
+        is exhausted. With no schedule the fault path is never
+        constructed and results stay bit-identical."""
+        if faults is not None:
+            if self.mode != "continuous":
+                raise ValueError("faults= requires mode='continuous'")
+            if controller is not None:
+                raise ValueError("faults= cannot be combined with "
+                                 "controller= (controlling a faulty "
+                                 "replica is future work)")
+            if self.pool != "mixed":
+                raise ValueError("single-engine fault injection needs "
+                                 "pool='mixed'; drive disaggregated "
+                                 "faults through ClusterEngine")
+            if faults.has_kind("link_degrade"):
+                raise ValueError("link_degrade faults only apply to "
+                                 "disaggregated cluster runs")
+            if faults.max_replica > 0:
+                raise ValueError(
+                    f"fault schedule names replica "
+                    f"{faults.max_replica} but this is a "
+                    "single-replica run")
+            if any(not math.isfinite(e.downtime_s)
+                   for e in faults.events
+                   if e.kind in ("crash", "preempt")):
+                raise ValueError("single-replica fault injection "
+                                 "needs finite downtime (nothing else "
+                                 "can serve the retries)")
+        if retry is not None and faults is None:
+            raise ValueError("retry= without faults= has no effect; "
+                             "attach a FaultSchedule")
         if controller is not None:
             if self.mode != "continuous":
                 raise ValueError("controller= requires "
@@ -454,7 +557,11 @@ class ServeEngine:
         self._trace_replica = 0     # standalone run (cluster sets >0)
         plans_gaps = scheduler is not None and scheduler.plans_gaps
         try:
-            if controller is not None:
+            if faults is not None:
+                rep = self._run_faulty(reqs, faults, retry,
+                                       plans_gaps=plans_gaps,
+                                       source=source)
+            elif controller is not None:
                 from repro.control.hook import ControlHook
                 hook = ControlHook(controller, control_interval_s)
                 rep = self._run_controlled(reqs, hook,
@@ -559,7 +666,9 @@ class ServeEngine:
                 self.stream_step(stop=stop)
                 if source is not None:
                     # report completions; released successors join the
-                    # arrival stream at their release times
+                    # arrival stream at their release times. A step
+                    # that terminated shed/failed aborts its whole
+                    # task — successors must never be released.
                     done = s.done
                     while seen < len(done):
                         r = done[seen]
@@ -567,6 +676,9 @@ class ServeEngine:
                         if r.status is RequestStatus.DONE:
                             for child in source.on_finish(r, r.t_done):
                                 _insert_pending(pending, head, child)
+                        elif r.status in (RequestStatus.SHED,
+                                          RequestStatus.FAILED):
+                            source.on_shed(r)
                 continue
             if head < n:
                 t_next = pending[head].effective_arrival
@@ -643,6 +755,141 @@ class ServeEngine:
         rep = self.stream_report()
         rep.control = hook.summary(rep.wall_time_s)
         return rep
+
+    # ------------------------------------------------------------------
+    def _run_faulty(self, reqs: List[Request], faults, retry,
+                    plans_gaps: bool = False,
+                    source: Optional[object] = None) -> ServeReport:
+        """Continuous event loop under a fault schedule (single
+        replica). Identical to :meth:`_run_continuous` between fault
+        boundaries — each boundary is a horizon stop, so macro-stepped
+        and single-stepped faulty runs stay bit-identical."""
+        eps = 1e-12
+        self.stream_start()
+        s = self._stream
+        pending = list(reqs)
+        head = 0
+        seen = 0
+        n_total = len(reqs)             # grows only with source children
+        tl = faults.boundaries(0)
+        fi = 0
+        base_freq = self.freq_scale
+        drain = retry is not None and retry.drain_on_notice
+        timeout = retry.timeout_s if retry is not None else math.inf
+        draining_until: Optional[float] = None
+
+        def drain_source() -> None:
+            """Report every new terminal request to the workflow
+            source: completions release successors into the arrival
+            stream, shed/failed steps abort their whole task."""
+            nonlocal seen, n_total
+            if source is None:
+                return
+            done = s.done
+            while seen < len(done):
+                r = done[seen]
+                seen += 1
+                if r.status is RequestStatus.DONE:
+                    for child in source.on_finish(r, r.t_done):
+                        n_total += 1
+                        _insert_pending(pending, head, child)
+                elif r.status in (RequestStatus.SHED,
+                                  RequestStatus.FAILED):
+                    source.on_shed(r)
+
+        while len(s.done) < n_total:
+            # due fault boundaries fire before anything else
+            if fi < len(tl) and s.now >= tl[fi].t - eps:
+                b = tl[fi]
+                fi += 1
+                if b.action == "notice":
+                    if drain:
+                        # graceful drain: stop admitting, re-queue the
+                        # waiting work past the restart
+                        draining_until = b.event.t_restart
+                        for r in self.batcher.evict_waiting():
+                            _remove_identity(s.submitted, r)
+                            r.release_time = b.event.t_restart
+                            _insert_pending(pending, head, r)
+                elif b.action == "kill":
+                    draining_until = None
+                    failed = self.stream_crash(
+                        "preempt" if b.event.kind == "preempt"
+                        else "crash")
+                    t_restart = b.event.t_restart
+                    for r in failed:
+                        if (retry is not None
+                                and r.n_attempts < retry.max_retries):
+                            _remove_identity(s.submitted, r)
+                            delay = retry.backoff(r.n_attempts)
+                            r.n_attempts += 1
+                            s.n_retries += 1
+                            r.status = RequestStatus.QUEUED
+                            r.fail_reason = None
+                            r.release_time = max(s.now + delay,
+                                                 t_restart)
+                            _insert_pending(pending, head, r)
+                        else:
+                            s.done.append(r)
+                    drain_source()
+                    self.stream_down(t_restart)
+                elif b.action == "slow_start":
+                    self.set_freq_scale(b.event.freq_scale)
+                else:                               # slow_end
+                    self.set_freq_scale(base_freq)
+                continue
+            n = len(pending)
+            while (head < n and pending[head].effective_arrival
+                    <= s.now + eps):
+                r = pending[head]
+                head += 1
+                if s.now - r.arrival_time > timeout + eps:
+                    # queueing timeout: backoff delays pushed this
+                    # request past its budget — fail instead of serve
+                    r.status = RequestStatus.FAILED
+                    r.fail_reason = "timeout"
+                    s.n_failures += 1
+                    s.submitted.append(r)
+                    s.done.append(r)
+                    drain_source()
+                    n = len(pending)
+                    continue
+                if draining_until is not None:
+                    # admissions are paused until the replica restarts
+                    r.release_time = draining_until
+                    _insert_pending(pending, head, r)
+                    n = len(pending)
+                    continue
+                self.stream_submit(r)
+            t_arr = (pending[head].effective_arrival
+                     if head < len(pending) else None)
+            t_f = tl[fi].t if fi < len(tl) else None
+            if self.stream_can_step():
+                if t_arr is not None and (t_f is None or t_arr <= t_f):
+                    stop = HorizonStop(t_arr, mode="admit")
+                elif t_f is not None:
+                    stop = HorizonStop(t_f, mode="clock")
+                else:
+                    stop = None
+                self.stream_step(stop=stop)
+                drain_source()
+                continue
+            if t_arr is None and t_f is None:
+                if self.batcher.n_waiting:
+                    raise RuntimeError("deadlock: waiting requests "
+                                       "cannot be scheduled (KV pool "
+                                       "too small)")
+                break
+            next_is_arrival = (t_arr is not None
+                               and (t_f is None or t_arr <= t_f))
+            t_next = t_arr if t_f is None else (
+                t_f if t_arr is None else min(t_arr, t_f))
+            gap = t_next - s.now
+            wake = self.device.wake_latency_s
+            if plans_gaps and next_is_arrival and gap > wake:
+                self.stream_idle(t_next - wake, gated=True)
+            self.stream_idle(t_next)
+        return self.stream_report()
 
     # -- stream primitives (single-engine run + cluster co-simulation) --
     def stream_start(self, t0: float = 0.0) -> None:
@@ -898,6 +1145,72 @@ class ServeEngine:
         self._record(state, s.now, until, res.energy_j)
         s.now = until
 
+    # -- fault primitives (repro.faults) -------------------------------
+    def stream_down(self, until: float) -> None:
+        """Advance the stream clock through a dead period: the replica
+        draws nothing (fault downtime is the one power state with zero
+        draw — the machine is off, not idling)."""
+        s = self._stream
+        if until <= s.now:
+            return
+        self._record("down", s.now, until, 0.0)
+        s.down_t += until - s.now
+        s.now = until
+
+    def stream_crash(self, reason: str = "crash") -> List[Request]:
+        """Kill this replica at the current stream clock: every live
+        and queued request fails (status ``FAILED``, attributed joules
+        move to waste) and the device's entire KV/slot state is
+        destroyed — the batcher is rebuilt empty, so no page can leak
+        across a crash. Returns the failed requests; the caller
+        decides retry vs terminal."""
+        s, b = self._stream, self.batcher
+        failed: List[Request] = []
+        for i in b.live_slots():
+            failed.append(b.slots[i].request)
+            self.backend.release_slot(i)
+        failed.extend(b.evict_waiting())
+        for r in failed:
+            r.status = RequestStatus.FAILED
+            r.fail_reason = reason
+            r.wasted_energy_j += r.energy_j
+            s.wasted_e += r.energy_j
+            r.energy_j = 0.0
+            r.tokens_generated = 0
+            r.prefilled_tokens = 0
+            r.t_prefill_start = -1.0
+            r.t_first_token = -1.0
+            r.generated = []
+            # any forked-prefix KV died with the pool: a retry must
+            # recompute the full prompt wherever it lands
+            r.kv_parent = None
+            s.n_failures += 1
+        self.batch_policy.reset()
+        self.batcher = ContinuousBatcher(policy=self.batch_policy,
+                                         **self._batcher_kw)
+        return failed
+
+    def stream_cancel(self, req: Request,
+                      reason: str = "hedge_loser") -> bool:
+        """Evict one in-flight/queued request (hedged-duplicate
+        loser): its slot and KV free immediately, its attributed
+        joules move to waste, and it is removed from this replica's
+        report. Returns False if ``req`` is not on this replica."""
+        s, b = self._stream, self.batcher
+        slot = b.find_slot(req)
+        if slot is not None:
+            b.finish(slot)
+            self.backend.release_slot(slot)
+        elif not b.remove_waiting(req):
+            return False
+        _remove_identity(s.submitted, req)
+        req.status = RequestStatus.FAILED
+        req.fail_reason = reason
+        req.wasted_energy_j += req.energy_j
+        s.wasted_e += req.energy_j
+        req.energy_j = 0.0
+        return True
+
     def stream_report(self) -> ServeReport:
         s = self._stream
         mean_batch = (s.batch_time / s.decode_time
@@ -914,7 +1227,9 @@ class ServeEngine:
             prefill_computed_tokens=s.prefill_computed,
             prefill_effective_tokens=s.prefill_effective,
             prefill_chunks=s.prefill_chunks, n_relayed=s.n_relayed,
-            prefix_reused_tokens=s.prefix_reused)
+            prefix_reused_tokens=s.prefix_reused,
+            n_failures=s.n_failures, n_retries=s.n_retries,
+            wasted_energy_j=s.wasted_e, down_time_s=s.down_t)
 
     def _finish_ready(self, b: ContinuousBatcher, done: List[Request],
                       now: float) -> None:

@@ -14,6 +14,7 @@ class RequestStatus(enum.Enum):
     RUNNING = "running"
     DONE = "done"
     SHED = "shed"           # rejected by an admission-control scheduler
+    FAILED = "failed"       # lost to a fault (crash/preempt/timeout)
 
 
 @dataclasses.dataclass
@@ -46,6 +47,11 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     # accounting
     energy_j: float = 0.0
+    # resilience (set by repro.faults fault-injection runs)
+    n_attempts: int = 0                 # failed attempts before this one
+    wasted_energy_j: float = 0.0        # joules billed to failed attempts
+    fail_reason: Optional[str] = None   # "crash"/"preempt"/"timeout"/...
+    hedge_of: Optional[int] = None      # req_id this request duplicates
 
     @property
     def effective_arrival(self) -> float:
@@ -60,10 +66,17 @@ class Request:
 
     @property
     def latency(self) -> float:
+        """Arrival-to-completion; NaN while unfinished (t_done is the
+        -1.0 sentinel until the engine completes the request)."""
+        if self.t_done < 0:
+            return math.nan
         return self.t_done - self.arrival_time
 
     @property
     def ttft(self) -> float:
+        """Arrival-to-first-token; NaN before the first token exists."""
+        if self.t_first_token < 0:
+            return math.nan
         return self.t_first_token - self.arrival_time
 
     @property

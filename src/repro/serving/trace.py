@@ -35,6 +35,11 @@ TRANSITION_STATES = ("spinup", "drain")
 #: the by-state summaries only when present, so controller-off traces
 #: serialize byte-identically and 100%-energy accounting is unaffected.
 CONTROL_STATES = ("control",)
+#: fault-injection states (:mod:`repro.faults`) — ``down`` spans are a
+#: dead replica's zero-energy wall-clock (the machine is off, not
+#: idling). Present in by-state summaries only when recorded, so
+#: fault-free traces serialize byte-identically.
+FAULT_STATES = ("down",)
 
 
 @dataclasses.dataclass
@@ -84,7 +89,8 @@ class PowerTrace:
                energy_j: float, batch: float = 0.0,
                freq_scale: float = 1.0) -> None:
         if (state not in STATES and state not in TRANSITION_STATES
-                and state not in CONTROL_STATES):
+                and state not in CONTROL_STATES
+                and state not in FAULT_STATES):
             raise ValueError(f"unknown power state {state!r}")
         if t1 < t0:
             raise ValueError(f"segment ends before it starts: {t0}..{t1}")

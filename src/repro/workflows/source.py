@@ -126,10 +126,12 @@ class WorkflowSource:
         return roots
 
     def on_shed(self, req: Request) -> None:
-        """A scheduler rejected a root step: the task can never
-        complete — abort it (descendants are never released) and drop
-        surviving siblings' pins so no KV lingers for forks that will
-        never come."""
+        """A step terminally left the run — shed by an admission
+        scheduler, or failed by a fault with retries exhausted. Root
+        or mid-DAG, the task can never complete: abort it (descendants
+        are never released), drop surviving siblings' pins, and free
+        any KV pages completed parents kept pinned for forks that will
+        now never come."""
         if req.task_id is None:
             return
         task = self._tasks[req.task_id]
@@ -137,6 +139,9 @@ class WorkflowSource:
             task.aborted = True
             for name, r in task.reqs.items():
                 if name in task.done_t:
+                    # a completed parent may hold lingering pinned KV
+                    # for prefix forks; no child will consume it now
+                    self._unpin_all(r)
                     continue
                 r.kv_pin = 0
                 if task.indeg[name] > 0:
@@ -154,6 +159,11 @@ class WorkflowSource:
             task.service[req.step] = float(t_done - req.t_prefill_start)
         task.n_done += 1
         self._replica_of[req.req_id] = replica
+        if task.aborted:
+            # a sibling still in flight when the task aborted: its
+            # pinned KV will never be forked
+            self._unpin_all(req)
+            return []
         released: List[Request] = []
         for child_name in task.succ[req.step]:
             task.indeg[child_name] -= 1
@@ -194,6 +204,15 @@ class WorkflowSource:
             return
         kv = self._kv_get(self._replica_of.get(parent.req_id, 0))
         kv.unpin(parent.req_id)
+
+    def _unpin_all(self, parent: Request) -> None:
+        """Drop every outstanding fork reservation a (completed)
+        parent still holds — its task aborted, so the forks will
+        never happen."""
+        if self._kv_get is None:
+            return
+        kv = self._kv_get(self._replica_of.get(parent.req_id, 0))
+        kv.unpin_all(parent.req_id)
 
     def _materialize_prompt(self, req: Request,
                             parent: Optional[Request]) -> None:

@@ -1,0 +1,576 @@
+"""Fault injection & resilience tests: schedule/policy construction
+and validation, failure semantics on the single engine and the
+cluster (crash, preempt±drain, slowdown/power-cap, link degradation),
+retry/timeout/failover/hedging behavior, energy-of-failure
+accounting, chaos invariants under seeded random schedules, the
+NaN-latency regression guard, and the spec-axis wiring (hash
+stability, validation, RunResult telemetry)."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+import repro
+from repro import ExperimentSpec
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.batching.policy import SlotCountPolicy
+from repro.faults import (FAULT_KINDS, FaultEvent, FaultSchedule,
+                          InvariantViolation, RetryPolicy,
+                          check_run_invariants, make_faults, make_retry,
+                          random_fault_schedule)
+from repro.serving import (ClusterEngine, Request, ServeEngine,
+                           make_cluster)
+from repro.serving.backend import AnalyticBackend, RecordingBackend, \
+    ReplayBackend
+from repro.serving.requests import RequestStatus
+from repro.serving.slo import completed, percentiles
+from repro.serving.trace import PowerTrace
+
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+
+
+def _reqs(n, rate=4.0, seed=0, plen=256, out=128):
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / rate, n))
+    return [Request(req_id=i, prompt=None, prompt_len=plen,
+                    max_new_tokens=out, arrival_time=float(t[i]))
+            for i in range(n)]
+
+
+def _engine(**kw):
+    kw.setdefault("batch_policy",
+                  SlotCountPolicy(max_batch=8, max_prefill_batch=4))
+    return ServeEngine(LLAMA8B, mode="continuous", **kw)
+
+
+def _cluster(R=2, **kw):
+    return make_cluster(LLAMA8B, R, max_batch=8, **kw)
+
+
+# ---------------------------------------------------------------------------
+# schedules & policies
+# ---------------------------------------------------------------------------
+class TestFaultSchedule:
+    def test_event_validation(self):
+        with pytest.raises(ValueError, match="kind"):
+            FaultEvent(t=1.0, kind="meteor")
+        with pytest.raises(ValueError):
+            FaultEvent(t=-1.0, kind="crash")
+        with pytest.raises(ValueError, match="freq_scale"):
+            FaultEvent(t=1.0, kind="slowdown", freq_scale=0.0,
+                       duration_s=1.0)
+        with pytest.raises(ValueError, match="duration"):
+            FaultEvent(t=1.0, kind="slowdown", freq_scale=0.5)
+        with pytest.raises(ValueError, match="link_factor"):
+            FaultEvent(t=1.0, kind="link_degrade", link_factor=0.5,
+                       duration_s=1.0)
+
+    def test_overlap_rejected_per_replica(self):
+        with pytest.raises(ValueError, match="overlap"):
+            FaultSchedule([
+                FaultEvent(t=1.0, kind="crash", downtime_s=5.0),
+                FaultEvent(t=3.0, kind="crash", downtime_s=2.0)])
+        # different replicas may overlap freely
+        FaultSchedule([
+            FaultEvent(t=1.0, kind="crash", replica=0, downtime_s=5.0),
+            FaultEvent(t=3.0, kind="crash", replica=1, downtime_s=2.0)])
+
+    def test_boundaries_lowering(self):
+        fs = FaultSchedule([
+            FaultEvent(t=2.0, kind="preempt", notice_s=3.0,
+                       downtime_s=6.0),
+            FaultEvent(t=20.0, kind="slowdown", freq_scale=0.5,
+                       duration_s=4.0)])
+        bs = fs.boundaries(0)
+        assert [(b.t, b.action) for b in bs] == [
+            (2.0, "notice"), (5.0, "kill"),
+            (20.0, "slow_start"), (24.0, "slow_end")]
+        ev = bs[1].event
+        assert ev.t_kill == 5.0 and ev.t_restart == 11.0
+        # crash has no notice boundary
+        bc = FaultSchedule([FaultEvent(t=1.0, kind="crash",
+                                       downtime_s=2.0)]).boundaries(0)
+        assert [(b.t, b.action) for b in bc] == [(1.0, "kill")]
+
+    def test_link_factor(self):
+        fs = FaultSchedule([FaultEvent(t=5.0, kind="link_degrade",
+                                       link_factor=4.0, duration_s=10.0)])
+        assert fs.link_factor(0.0) == 1.0
+        assert fs.link_factor(6.0) == 4.0
+        assert fs.link_factor(15.5) == 1.0
+
+    def test_spec_roundtrip(self):
+        fs = FaultSchedule([
+            FaultEvent(t=1.0, kind="crash", replica=1, downtime_s=5.0),
+            FaultEvent(t=9.0, kind="power_cap", freq_scale=0.7,
+                       duration_s=2.0)])
+        spec = fs.to_spec()
+        # non-default fields only — specs stay minimal and hashable
+        assert all("notice_s" not in d for d in spec)
+        back = FaultSchedule.from_spec(spec)
+        assert back == fs and hash(back) == hash(fs)
+        assert json.dumps(spec) == json.dumps(back.to_spec())
+
+    def test_random_schedule_deterministic(self):
+        a = random_fault_schedule(60.0, n_replicas=3, seed=7,
+                                  rate_per_replica_hour=600.0)
+        b = random_fault_schedule(60.0, n_replicas=3, seed=7,
+                                  rate_per_replica_hour=600.0)
+        c = random_fault_schedule(60.0, n_replicas=3, seed=8,
+                                  rate_per_replica_hour=600.0)
+        assert a == b
+        assert a != c
+        assert all(e.kind in FAULT_KINDS for e in a)
+        assert a.max_replica <= 2
+
+    def test_make_faults_coercion(self):
+        assert make_faults(None) is None
+        fs = make_faults(({"t": 1.0, "kind": "crash",
+                           "downtime_s": 2.0},))
+        assert isinstance(fs, FaultSchedule) and len(fs) == 1
+        assert make_faults(fs) is fs
+
+
+class TestRetryPolicy:
+    def test_backoff_curve(self):
+        rp = RetryPolicy(backoff_s=0.5, backoff_mult=2.0,
+                         backoff_cap_s=3.0)
+        assert [rp.backoff(k) for k in range(4)] == [0.5, 1.0, 2.0, 3.0]
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="unknown retry"):
+            RetryPolicy(name="prayer")
+        with pytest.raises(ValueError):
+            RetryPolicy(max_retries=-1)
+        with pytest.raises(ValueError):
+            RetryPolicy(backoff_mult=0.5)
+
+    def test_make_retry(self):
+        assert make_retry("backoff").hedge is False
+        assert make_retry("hedged").hedge is True
+        assert make_retry("backoff", max_retries=5).max_retries == 5
+
+
+# ---------------------------------------------------------------------------
+# single-engine failure semantics
+# ---------------------------------------------------------------------------
+class TestEngineFaults:
+    CRASH = FaultSchedule([FaultEvent(t=1.0, kind="crash",
+                                      downtime_s=2.0)])
+
+    def test_crash_without_retry_fails_inflight(self):
+        eng = _engine()
+        rep = eng.run([Request(req_id=0, prompt=None, prompt_len=512,
+                               max_new_tokens=2000, arrival_time=0.0)],
+                      faults=self.CRASH)
+        (r,) = rep.requests
+        assert r.status is RequestStatus.FAILED
+        assert r.fail_reason == "crash"
+        assert r.tokens_generated == 0 and r.energy_j == 0.0
+        assert r.wasted_energy_j > 0
+        assert rep.n_failures == 1 and rep.n_retries == 0
+        assert rep.wasted_energy_j == pytest.approx(r.wasted_energy_j)
+        # the crossing macro-step completes before the kill applies,
+        # so the down span starts a hair after the scheduled instant
+        assert rep.down_time_s == pytest.approx(2.0, abs=0.01)
+        check_run_invariants(rep, engines=[eng])
+
+    def test_crash_with_retry_completes(self):
+        eng = _engine()
+        rep = eng.run(_reqs(12, rate=6.0), faults=self.CRASH,
+                      retry=RetryPolicy())
+        assert rep.n_failures > 0 and rep.n_retries == rep.n_failures
+        assert all(r.status is RequestStatus.DONE
+                   for r in rep.requests)
+        retried = [r for r in rep.requests if r.n_attempts > 0]
+        assert retried and all(r.wasted_energy_j > 0 for r in retried)
+        assert rep.wasted_energy_j == pytest.approx(
+            sum(r.wasted_energy_j for r in rep.requests))
+        check_run_invariants(rep, engines=[eng], retry=RetryPolicy())
+
+    def test_energy_of_failure_accounting(self):
+        """Billed joules of killed attempts move to waste; busy energy
+        is exactly attributed + wasted."""
+        eng = _engine()
+        rep = eng.run(_reqs(12, rate=6.0), faults=self.CRASH,
+                      retry=RetryPolicy())
+        attributed = sum(r.energy_j for r in rep.requests)
+        assert attributed + rep.wasted_energy_j == pytest.approx(
+            rep.busy_energy_j, rel=1e-9)
+        # fault-free twin does the same work with zero waste
+        rep0 = _engine().run(_reqs(12, rate=6.0))
+        assert rep0.wasted_energy_j == 0.0
+        assert rep.wasted_energy_j > 0
+
+    def test_retry_budget_exhaustion(self):
+        """Back-to-back crashes burn the retry budget; the request
+        ends FAILED with max_retries attempts."""
+        fs = FaultSchedule([FaultEvent(t=0.5 + 40.0 * k, kind="crash",
+                                       downtime_s=39.0)
+                            for k in range(4)])
+        eng = _engine()
+        rep = eng.run([Request(req_id=0, prompt=None, prompt_len=512,
+                               max_new_tokens=4000, arrival_time=0.0)],
+                      faults=fs,
+                      retry=RetryPolicy(max_retries=2, backoff_s=0.1))
+        (r,) = rep.requests
+        assert r.status is RequestStatus.FAILED
+        assert r.n_attempts == 2
+        assert rep.n_retries == 2 and rep.n_failures == 3
+        check_run_invariants(rep, engines=[eng],
+                             retry=RetryPolicy(max_retries=2))
+
+    def test_preempt_drain_vs_hard_kill(self):
+        """With a notice window longer than the residual work,
+        graceful drain finishes in-flight requests that a hard kill
+        wastes."""
+        fs = FaultSchedule([FaultEvent(t=0.2, kind="preempt",
+                                       notice_s=2.0, downtime_s=2.0)])
+        reqs = lambda: _reqs(16, rate=40.0, out=256)  # noqa: E731
+        ed = _engine()
+        drain = ed.run(reqs(), faults=fs,
+                       retry=RetryPolicy(drain_on_notice=True))
+        eh = _engine()
+        hard = eh.run(reqs(), faults=fs,
+                      retry=RetryPolicy(drain_on_notice=False))
+        check_run_invariants(drain, engines=[ed], retry=RetryPolicy())
+        check_run_invariants(hard, engines=[eh],
+                             retry=RetryPolicy(drain_on_notice=False))
+        assert drain.n_failures < hard.n_failures
+        assert drain.wasted_energy_j < hard.wasted_energy_j
+        assert hard.wasted_energy_j > 0
+
+    def test_slowdown_stretches_work(self):
+        fs = FaultSchedule([FaultEvent(t=0.2, kind="slowdown",
+                                       freq_scale=0.4,
+                                       duration_s=30.0)])
+        base = _engine().run(_reqs(6, rate=8.0))
+        slow = _engine().run(_reqs(6, rate=8.0), faults=fs)
+        assert slow.wall_time_s > base.wall_time_s
+        assert slow.n_failures == 0
+        # transient: freq restored after the window
+        eng = _engine()
+        fs2 = FaultSchedule([FaultEvent(t=0.2, kind="power_cap",
+                                        freq_scale=0.5,
+                                        duration_s=0.5)])
+        eng.run(_reqs(6, rate=8.0), faults=fs2)
+        assert eng.freq_scale == 1.0
+
+    def test_timeout_fails_queued_work(self):
+        fs = FaultSchedule([FaultEvent(t=0.2, kind="crash",
+                                       downtime_s=50.0)])
+        eng = _engine()
+        rep = eng.run(_reqs(8, rate=20.0, out=64), faults=fs,
+                      retry=RetryPolicy(timeout_s=5.0, backoff_s=0.1))
+        timed_out = [r for r in rep.requests
+                     if r.fail_reason == "timeout"]
+        assert timed_out
+        assert all(r.status is RequestStatus.FAILED for r in timed_out)
+        check_run_invariants(rep, engines=[eng])
+
+    def test_down_time_draws_nothing(self):
+        """A dead replica bills zero joules: the trace covers the full
+        energy ledger and the down span carries no power."""
+        tr = PowerTrace()
+        eng = _engine()
+        rep = eng.run(_reqs(8, rate=6.0), faults=self.CRASH,
+                      retry=RetryPolicy(), trace=tr)
+        down = [s for s in tr.segments if s.state == "down"]
+        assert down and all(s.energy_j == 0.0 for s in down)
+        assert sum(s.duration_s for s in down) == pytest.approx(
+            rep.down_time_s)
+        check_run_invariants(rep, engines=[eng], retry=RetryPolicy(),
+                             trace=tr)
+
+    def test_no_schedule_identical_to_baseline(self):
+        """faults=None is the existing engine bit-for-bit."""
+        a = _engine().run(_reqs(10, rate=5.0))
+        b = _engine().run(_reqs(10, rate=5.0))
+        assert a.total_energy_j == b.total_energy_j
+        assert a.wall_time_s == b.wall_time_s
+        assert a.n_failures == 0 and a.wasted_energy_j == 0.0
+
+
+# ---------------------------------------------------------------------------
+# cluster failure semantics
+# ---------------------------------------------------------------------------
+class TestClusterFaults:
+    CRASH0 = FaultSchedule([FaultEvent(t=1.0, kind="crash", replica=0,
+                                       downtime_s=6.0)])
+
+    def test_failover_completes_everything(self):
+        cl = _cluster()
+        rep = cl.run(_reqs(16, out=256), faults=self.CRASH0,
+                     retry=RetryPolicy())
+        assert rep.n_failures > 0 and rep.n_failed == 0
+        assert rep.n_completed == 16
+        assert rep.availability < 1.0
+        check_run_invariants(rep, engines=cl.replicas,
+                             retry=RetryPolicy())
+
+    def test_no_retry_strands_killed_work(self):
+        cl = _cluster()
+        rep = cl.run(_reqs(16, out=256), faults=self.CRASH0)
+        assert rep.n_failed > 0
+        assert rep.n_failed + rep.n_completed == 16
+        assert all(r.fail_reason == "crash"
+                   for r in rep.requests
+                   if r.status is RequestStatus.FAILED)
+        check_run_invariants(rep, engines=cl.replicas)
+
+    def test_router_skips_dead_replica(self):
+        """While replica 0 is down, every delivery lands elsewhere."""
+        cl = _cluster()
+        rep = cl.run(_reqs(16, out=64), faults=self.CRASH0,
+                     retry=RetryPolicy())
+        r0 = cl.replicas[0]
+        ev = self.CRASH0.events[0]
+        for r in r0._stream.submitted:
+            if r.status is RequestStatus.DONE:
+                start = r.t_prefill_start
+                assert not (ev.t - 1e-9 < start < ev.t_restart - 1e-9)
+        assert rep.n_failed == 0
+
+    def test_all_replicas_down_defers_delivery(self):
+        fs = FaultSchedule([
+            FaultEvent(t=0.5, kind="crash", replica=0, downtime_s=4.0),
+            FaultEvent(t=0.5, kind="crash", replica=1, downtime_s=6.0)])
+        cl = _cluster()
+        rep = cl.run(_reqs(10, rate=8.0, out=64), faults=fs,
+                     retry=RetryPolicy(backoff_s=0.1))
+        assert rep.n_failed == 0 and rep.n_completed == 10
+        # nothing started inside the fleet-wide blackout
+        for r in rep.requests:
+            assert not (0.5 - 1e-9 < r.t_prefill_start < 4.5 - 1e-9)
+        check_run_invariants(rep, engines=cl.replicas,
+                             retry=RetryPolicy())
+
+    def test_hedged_retries_complete_once(self):
+        cl = _cluster(R=3)
+        rep = cl.run(_reqs(16, out=256),
+                     faults=FaultSchedule([FaultEvent(
+                         t=1.0, kind="crash", replica=0,
+                         downtime_s=8.0)]),
+                     retry=RetryPolicy(hedge=True))
+        assert rep.n_failed == 0 and rep.n_completed == 16
+        # each logical request is reported exactly once — a winning
+        # hedge clone stands in for its original via hedge_of
+        ids = [r.req_id for r in rep.requests]
+        assert len(ids) == len(set(ids)) == 16
+        logical = {r.hedge_of if r.hedge_of is not None else r.req_id
+                   for r in rep.requests}
+        assert logical == set(range(16))
+        check_run_invariants(rep, engines=cl.replicas,
+                             retry=RetryPolicy(hedge=True))
+
+    def test_link_degrade_scales_handoff(self):
+        def disagg():
+            return ClusterEngine([
+                ServeEngine(LLAMA8B, pool="prefill", mode="continuous",
+                            batch_policy=SlotCountPolicy(
+                                max_batch=8, max_prefill_batch=4)),
+                ServeEngine(LLAMA8B, pool="decode", mode="continuous",
+                            batch_policy=SlotCountPolicy(
+                                max_batch=8, max_prefill_batch=4))])
+        fs = FaultSchedule([FaultEvent(t=0.0, kind="link_degrade",
+                                       link_factor=4.0,
+                                       duration_s=1e4)])
+        cl = disagg()
+        deg = cl.run(_reqs(12, out=64), faults=fs)
+        base = disagg().run(_reqs(12, out=64))
+        assert deg.handoff_energy_j == pytest.approx(
+            4.0 * base.handoff_energy_j, rel=1e-6)
+        check_run_invariants(deg, engines=cl.replicas)
+
+    def test_availability_and_goodput(self):
+        cl = _cluster()
+        rep = cl.run(_reqs(16, out=256), faults=self.CRASH0,
+                     retry=RetryPolicy())
+        assert 0.0 < rep.availability < 1.0
+        assert rep.availability == pytest.approx(
+            1.0 - rep.down_time_s / (2 * rep.wall_time_s))
+        assert rep.goodput_wh_per_request == pytest.approx(
+            rep.total_energy_j / 3600.0 / rep.n_completed)
+
+    def test_fleet_delegates_fault_runs(self):
+        from repro.fleet import FleetEngine
+        reps = [_engine() for _ in range(2)]
+        frep = FleetEngine(reps).run(_reqs(16, out=256),
+                                     faults=self.CRASH0,
+                                     retry=RetryPolicy())
+        assert frep.n_failed == 0 and frep.n_failures > 0
+        check_run_invariants(frep, engines=reps, retry=RetryPolicy())
+
+    def test_faults_reject_bad_combinations(self):
+        cl = _cluster()
+        with pytest.raises(ValueError, match="replica"):
+            cl.run(_reqs(4), faults=FaultSchedule([FaultEvent(
+                t=1.0, kind="crash", replica=5, downtime_s=1.0)]))
+        with pytest.raises(ValueError, match="retry"):
+            cl.run(_reqs(4), retry=RetryPolicy())
+        with pytest.raises(ValueError, match="link_degrade"):
+            cl.run(_reqs(4), faults=FaultSchedule([FaultEvent(
+                t=1.0, kind="link_degrade", link_factor=2.0,
+                duration_s=1.0)]))
+
+
+# ---------------------------------------------------------------------------
+# chaos: seeded random schedules must never break the invariants
+# ---------------------------------------------------------------------------
+class TestChaosInvariants:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_engine_chaos(self, seed):
+        fs = random_fault_schedule(30.0, seed=seed,
+                                   rate_per_replica_hour=900.0,
+                                   mean_downtime_s=5.0,
+                                   notice_s=2.0, mean_slow_s=5.0)
+        eng = _engine()
+        tr = PowerTrace()
+        rep = eng.run(_reqs(20, rate=2.0, seed=seed), faults=fs,
+                      retry=RetryPolicy(backoff_s=0.2), trace=tr)
+        check_run_invariants(rep, engines=[eng],
+                             retry=RetryPolicy(), trace=tr)
+        assert rep.n_failed + rep.n_completed == 20
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_cluster_chaos(self, seed):
+        fs = random_fault_schedule(25.0, n_replicas=2, seed=seed,
+                                   rate_per_replica_hour=1200.0,
+                                   mean_downtime_s=5.0,
+                                   notice_s=2.0, mean_slow_s=5.0)
+        cl = _cluster()
+        rep = cl.run(_reqs(24, rate=3.0, seed=seed), faults=fs,
+                     retry=RetryPolicy(backoff_s=0.2))
+        check_run_invariants(rep, engines=cl.replicas,
+                             retry=RetryPolicy())
+
+    def test_replay_backend_chaos(self):
+        """Faults compose with the replay substrate: record an
+        analytic run, then crash a replayed engine mid-flight."""
+        rec = RecordingBackend(AnalyticBackend(LLAMA8B))
+        ServeEngine(LLAMA8B, backend=rec,
+                    batch_policy=SlotCountPolicy(
+                        max_batch=8, max_prefill_batch=4)
+                    ).run(_reqs(12, rate=6.0))
+        replay = ReplayBackend(rec.to_trace(model=LLAMA8B.name))
+        eng = ServeEngine(LLAMA8B, backend=replay,
+                          batch_policy=SlotCountPolicy(
+                              max_batch=8, max_prefill_batch=4))
+        rep = eng.run(_reqs(12, rate=6.0),
+                      faults=FaultSchedule([FaultEvent(
+                          t=0.8, kind="crash", downtime_s=1.0)]),
+                      retry=RetryPolicy(backoff_s=0.1))
+        assert rep.n_failures > 0
+        check_run_invariants(rep, engines=[eng], retry=RetryPolicy())
+
+    def test_checker_catches_violations(self):
+        rep = _engine().run(_reqs(6, rate=6.0))
+        rep.requests[0].status = RequestStatus.RUNNING
+        with pytest.raises(InvariantViolation, match="non-terminal"):
+            check_run_invariants(rep)
+
+
+# ---------------------------------------------------------------------------
+# NaN guard: failed requests never poison latency aggregates
+# ---------------------------------------------------------------------------
+class TestNaNLatencyGuard:
+    def test_failed_latency_is_nan(self):
+        r = Request(req_id=0, prompt=None, prompt_len=8,
+                    max_new_tokens=8, arrival_time=0.0)
+        assert math.isnan(r.latency) and math.isnan(r.ttft)
+
+    def test_percentiles_exclude_failed(self):
+        cl = _cluster()
+        rep = cl.run(_reqs(16, out=256),
+                     faults=TestClusterFaults.CRASH0)
+        assert rep.n_failed > 0
+        assert not completed([r for r in rep.requests
+                              if r.status is RequestStatus.FAILED])
+        for field in ("latency", "ttft"):
+            ps = percentiles(rep.requests, field=field)
+            assert all(math.isfinite(v) for v in ps.values())
+        assert all(math.isfinite(v)
+                   for v in rep.latency_percentiles().values())
+
+    def test_run_result_percentiles_finite_under_faults(self):
+        res = ExperimentSpec(
+            n_requests=12, arrival="poisson",
+            arrival_params={"rate_per_s": 6.0},
+            output_range=(96, 160),
+            faults=({"t": 0.8, "kind": "crash", "downtime_s": 50.0},),
+        ).run()
+        assert res.n_failed > 0
+        assert math.isfinite(res.latency_p99_s)
+        assert math.isfinite(res.mean_latency_s)
+
+
+# ---------------------------------------------------------------------------
+# spec axes
+# ---------------------------------------------------------------------------
+class TestFaultSpecAxes:
+    FAULTS = ({"t": 1.0, "kind": "crash", "replica": 0,
+               "downtime_s": 5.0},)
+
+    def test_default_spec_unchanged(self):
+        d = ExperimentSpec().to_dict()
+        assert "faults" not in d and "retry" not in d \
+            and "retry_params" not in d
+
+    def test_canonical_hashing(self):
+        a = ExperimentSpec(faults=self.FAULTS, retry="backoff")
+        b = ExperimentSpec(faults=({"kind": "crash", "downtime_s": 5.0,
+                                    "replica": 0, "t": 1.0},),
+                           retry="backoff")
+        assert a.spec_hash() == b.spec_hash()
+        c = ExperimentSpec.from_dict(a.to_dict())
+        assert c.spec_hash() == a.spec_hash()
+
+    def test_end_to_end_run(self):
+        res = ExperimentSpec(
+            n_requests=16, arrival="poisson",
+            arrival_params={"rate_per_s": 4.0}, replicas=2,
+            output_range=(200, 300),
+            faults=self.FAULTS, retry="backoff").run()
+        assert res.n_failures > 0 and res.n_failed == 0
+        assert res.n_completed == 16
+        assert res.wasted_energy_j > 0
+        assert 0.0 < res.availability < 1.0
+        d = res.to_dict()
+        for k in ("n_failures", "n_retries", "wasted_energy_j",
+                  "availability"):
+            assert k in d
+
+    def test_faultfree_result_omits_telemetry(self):
+        d = ExperimentSpec(n_requests=4).run().to_dict()
+        for k in ("n_failures", "n_retries", "n_failed", "n_completed",
+                  "wasted_energy_j", "goodput_wh_per_request",
+                  "availability"):
+            assert k not in d
+
+    def test_retry_params_forwarded(self):
+        spec = ExperimentSpec(faults=self.FAULTS, retry="backoff",
+                              retry_params={"max_retries": 5,
+                                            "timeout_s": 9.0})
+        rp = spec.build_retry()
+        assert rp.max_retries == 5 and rp.timeout_s == 9.0
+        assert spec.build_faults() == FaultSchedule(
+            [FaultEvent(t=1.0, kind="crash", replica=0,
+                        downtime_s=5.0)])
+
+    def test_validation_errors(self):
+        with pytest.raises(ValueError, match="without faults"):
+            ExperimentSpec(retry="backoff").validate()
+        with pytest.raises(ValueError, match="empty"):
+            ExperimentSpec(faults=()).validate()
+        with pytest.raises(ValueError, match="controller"):
+            ExperimentSpec(faults=self.FAULTS,
+                           controller="reactive").validate()
+        with pytest.raises(ValueError, match="replica"):
+            ExperimentSpec(faults=({"t": 1.0, "kind": "crash",
+                                    "replica": 3},)).validate()
+        with pytest.raises(ValueError, match="retry_params"):
+            ExperimentSpec(retry_params={"max_retries": 2}).validate()
+        with pytest.raises(ValueError, match="link_degrade"):
+            ExperimentSpec(replicas=2, disaggregate=1,
+                           faults=self.FAULTS).validate()

@@ -1,0 +1,143 @@
+"""Macro-step ↔ single-step parity under fault injection.
+
+The repo's core efficiency claim — macro-stepping (gap-jumping whole
+decode runs) never changes results — must survive fault boundaries:
+kills, preemption notices, and DVFS transients all land at schedule
+times, not step times, so a macro-stepped engine and a single-stepped
+engine must report bit-identical energy, clocks, failures, retries,
+and per-request outcomes under any schedule. These tests pin that
+contract for every fault kind on the single engine and the cluster
+(including hedged retries and disaggregated link degradation)."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_zoo import PAPER_MODELS
+from repro.batching.policy import SlotCountPolicy
+from repro.faults import (FaultEvent, FaultSchedule, RetryPolicy,
+                          random_fault_schedule)
+from repro.serving import ClusterEngine, Request, ServeEngine
+
+LLAMA8B = PAPER_MODELS["llama-3.1-8b"]
+
+SCHEDULES = {
+    "crash": [FaultEvent(t=1.0, kind="crash", downtime_s=3.0)],
+    "preempt": [FaultEvent(t=0.5, kind="preempt", notice_s=1.0,
+                           downtime_s=3.0)],
+    "slowdown": [FaultEvent(t=0.5, kind="slowdown", freq_scale=0.5,
+                            duration_s=2.0)],
+    "power_cap": [FaultEvent(t=0.8, kind="power_cap", freq_scale=0.7,
+                             duration_s=1.5)],
+}
+RETRIES = {
+    "none": None,
+    "backoff": RetryPolicy(),
+    "hard_kill": RetryPolicy(drain_on_notice=False),
+}
+
+
+def _reqs(n, rate=4.0, seed=0, out=128):
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / rate, n))
+    return [Request(req_id=i, prompt=None, prompt_len=256,
+                    max_new_tokens=out, arrival_time=float(t[i]))
+            for i in range(n)]
+
+
+def _engine(macro, pool="mixed"):
+    return ServeEngine(LLAMA8B, mode="continuous", macro_step=macro,
+                       pool=pool,
+                       batch_policy=SlotCountPolicy(
+                           max_batch=8, max_prefill_batch=4))
+
+
+def _fields(rep):
+    return {
+        "total": rep.total_energy_j, "busy": rep.busy_energy_j,
+        "idle": rep.idle_energy_j, "wall": rep.wall_time_s,
+        "wasted": rep.wasted_energy_j, "down": rep.down_time_s,
+        "n_failures": rep.n_failures, "n_retries": rep.n_retries,
+        "requests": tuple(
+            (r.req_id, r.status.name, r.n_attempts,
+             round(r.t_done, 12), round(r.energy_j, 9),
+             round(r.wasted_energy_j, 9), r.tokens_generated)
+            for r in sorted(rep.requests, key=lambda r: r.req_id)),
+    }
+
+
+def _assert_identical(a, b):
+    fa, fb = _fields(a), _fields(b)
+    for k in fa:
+        if isinstance(fa[k], float):
+            assert fa[k] == pytest.approx(fb[k], rel=1e-9, abs=1e-12), k
+        else:
+            assert fa[k] == fb[k], k
+
+
+class TestEngineParity:
+    @pytest.mark.parametrize("kind", sorted(SCHEDULES))
+    @pytest.mark.parametrize("retry", sorted(RETRIES))
+    def test_single_engine(self, kind, retry):
+        fs = FaultSchedule(SCHEDULES[kind])
+        rp = RETRIES[retry]
+        a = _engine(True).run(_reqs(12), faults=fs, retry=rp)
+        b = _engine(False).run(_reqs(12), faults=fs, retry=rp)
+        _assert_identical(a, b)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_single_engine_chaos(self, seed):
+        fs = random_fault_schedule(20.0, seed=seed,
+                                   rate_per_replica_hour=1200.0,
+                                   mean_downtime_s=4.0, notice_s=1.5,
+                                   mean_slow_s=4.0)
+        a = _engine(True).run(_reqs(16, seed=seed), faults=fs,
+                              retry=RetryPolicy(backoff_s=0.2))
+        b = _engine(False).run(_reqs(16, seed=seed), faults=fs,
+                               retry=RetryPolicy(backoff_s=0.2))
+        _assert_identical(a, b)
+
+
+class TestClusterParity:
+    def _cluster(self, macro, R=2):
+        return ClusterEngine([_engine(macro) for _ in range(R)])
+
+    @pytest.mark.parametrize("kind", sorted(SCHEDULES))
+    @pytest.mark.parametrize("retry", ["none", "backoff", "hedged"])
+    def test_cluster(self, kind, retry):
+        events = [FaultEvent(t=e.t, kind=e.kind, replica=0,
+                             downtime_s=e.downtime_s,
+                             notice_s=e.notice_s,
+                             freq_scale=e.freq_scale,
+                             duration_s=e.duration_s)
+                  for e in SCHEDULES[kind]]
+        fs = FaultSchedule(events)
+        rp = {"none": None, "backoff": RetryPolicy(),
+              "hedged": RetryPolicy(hedge=True)}[retry]
+        a = self._cluster(True).run(_reqs(14), faults=fs, retry=rp)
+        b = self._cluster(False).run(_reqs(14), faults=fs, retry=rp)
+        _assert_identical(a, b)
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_cluster_chaos(self, seed):
+        fs = random_fault_schedule(18.0, n_replicas=2, seed=seed,
+                                   rate_per_replica_hour=1600.0,
+                                   mean_downtime_s=4.0, notice_s=1.5,
+                                   mean_slow_s=4.0)
+        a = self._cluster(True).run(_reqs(16, rate=3.0, seed=seed),
+                                    faults=fs, retry=RetryPolicy())
+        b = self._cluster(False).run(_reqs(16, rate=3.0, seed=seed),
+                                     faults=fs, retry=RetryPolicy())
+        _assert_identical(a, b)
+
+    def test_disaggregated_link_degrade(self):
+        fs = FaultSchedule([FaultEvent(t=0.5, kind="link_degrade",
+                                       link_factor=4.0,
+                                       duration_s=5.0)])
+
+        def cluster(macro):
+            return ClusterEngine([_engine(macro, pool="prefill"),
+                                  _engine(macro, pool="decode")])
+        a = cluster(True).run(_reqs(12, out=64), faults=fs)
+        b = cluster(False).run(_reqs(12, out=64), faults=fs)
+        _assert_identical(a, b)
+        assert a.handoff_energy_j == pytest.approx(
+            b.handoff_energy_j, rel=1e-12)

@@ -752,3 +752,88 @@ class TestSpecAxes:
         assert on.prefix_reused_tokens > 0
         assert off.prefix_reused_tokens == 0
         assert on.mean_energy_per_task_wh < off.mean_energy_per_task_wh
+
+
+# ---------------------------------------------------------------------------
+# failure semantics (repro.faults)
+# ---------------------------------------------------------------------------
+class TestFaultedWorkflows:
+    """A fault that terminally fails *any* step — root or mid-DAG —
+    must abort the whole task through ``on_shed`` and free every KV
+    page completed parents kept pinned for forks that will now never
+    come."""
+
+    def test_mid_dag_shed_aborts_and_unpins(self):
+        wf = Workflow(name="w", steps=(
+            _step("p", plen=400, out=128),
+            _step("c1", deps=("p",), prefix_of="p", plen=640),
+            _step("c2", deps=("c1",), prefix_of="c1", plen=896)))
+        src = WorkflowSource([wf], [0.0])
+        unpinned = []
+
+        class _KV:
+            used_pages = 0
+
+            def unpin_all(self, seq_id):
+                unpinned.append(seq_id)
+
+        src.bind(kv_get=lambda replica: _KV())
+        (p,) = src.initial()
+        assert p.kv_pin == 1
+        p.tokens_generated = 113
+        (c1,) = src.on_finish(p, 1.0)
+        src.on_shed(c1)                 # mid-DAG failure, not a root
+        # the completed parent's outstanding fork pin is dropped
+        assert unpinned == [p.req_id]
+        assert src.n_unreleased() == 0
+        (t,) = src.task_reports()
+        assert not t.completed
+
+    def test_sibling_finishing_after_abort_unpins(self):
+        wf = Workflow(name="w", steps=(
+            _step("a", plen=400, out=128), _step("b"),
+            _step("j", deps=("a", "b"), prefix_of="a", plen=640)))
+        src = WorkflowSource([wf], [0.0])
+        unpinned = []
+
+        class _KV:
+            def unpin_all(self, seq_id):
+                unpinned.append(seq_id)
+
+        src.bind(kv_get=lambda replica: _KV())
+        a, b = src.initial()
+        src.on_shed(b)                  # task dies while a is in flight
+        a.tokens_generated = 128
+        assert src.on_finish(a, 1.0) == []
+        assert unpinned == [a.req_id]   # a's pin can never be forked
+
+    def test_faulted_run_aborts_tasks_and_leaks_nothing(self):
+        from repro.faults import (FaultEvent, FaultSchedule,
+                                  check_run_invariants)
+        src = _source("agent_loop", n=6, rate=8.0, rounds=4)
+        eng = ServeEngine(LLAMA8B,
+                          batch_policy=SlotCountPolicy(max_batch=16))
+        rep = eng.run(src.initial(), source=src,
+                      faults=FaultSchedule([FaultEvent(
+                          t=1.0, kind="crash", downtime_s=2.0)]))
+        assert rep.n_failures > 0
+        aborted = [t for t in rep.tasks if not t.completed]
+        assert aborted                      # the crash killed steps
+        check_run_invariants(rep, engines=[eng])
+        eng.batcher.kv.check_invariants()
+        assert eng.batcher.kv.lingering == {}
+        assert eng.batcher.kv.used_pages == 0
+
+    def test_faulted_run_with_retry_completes_tasks(self):
+        from repro.faults import (FaultEvent, FaultSchedule,
+                                  RetryPolicy, check_run_invariants)
+        src = _source("rag_chain", n=5, rate=8.0)
+        eng = ServeEngine(LLAMA8B,
+                          batch_policy=SlotCountPolicy(max_batch=16))
+        rep = eng.run(src.initial(), source=src,
+                      faults=FaultSchedule([FaultEvent(
+                          t=1.0, kind="crash", downtime_s=2.0)]),
+                      retry=RetryPolicy(backoff_s=0.2))
+        assert all(t.completed for t in rep.tasks)
+        check_run_invariants(rep, engines=[eng], retry=RetryPolicy())
+        assert eng.batcher.kv.used_pages == 0
